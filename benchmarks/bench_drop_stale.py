@@ -1,0 +1,48 @@
+"""Paper App. A.6 (Fig. 8): dropping pseudo-gradients from highly stale
+workers — compares keep vs drop for MLA-family methods and async-Nesterov
+in high-staleness configurations."""
+from __future__ import annotations
+
+import argparse
+from typing import Dict
+
+from benchmarks.common import base_run, run_cached
+
+CONFIGS = [(1, 1, 6, 6, 6), (1, 6, 6, 6, 6)]
+
+
+def run(outer_steps: int = 30, inner_steps: int = 8) -> Dict:
+    out = {}
+    for paces in CONFIGS:
+        tag = "p" + "_".join(str(int(p)) for p in paces)
+        for method in ("async-heloco", "async-mla", "async-nesterov"):
+            for drop in (None, 3):
+                rc = base_run(paces, method=method, non_iid=True,
+                              outer_steps=outer_steps,
+                              inner_steps=inner_steps,
+                              drop_stale_after=drop)
+                key = f"{tag}/{method}/{'drop' if drop else 'keep'}"
+                out[key] = run_cached(
+                    f"fig8_{tag}_{method}_{'drop' if drop else 'keep'}", rc)
+    return out
+
+
+def summarize(results: Dict) -> str:
+    lines = ["paces,method,policy,final_loss,n_dropped"]
+    for key, r in sorted(results.items()):
+        tag, method, policy = key.split("/")
+        lines.append(f"{tag},{method},{policy},{r['final_loss']:.4f},"
+                     f"{r.get('n_dropped', '-')}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outer", type=int, default=30)
+    ap.add_argument("--inner", type=int, default=8)
+    args = ap.parse_args()
+    print(summarize(run(args.outer, args.inner)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper §3 overhead claim: the HeLoCo correction is one O(d) pass per
+arrival. Measures wall-time per correction vs model size (jnp path on CPU)
+and verifies linear scaling; reports bytes touched per arrival."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HeLoCoConfig
+from repro.core.heloco import block_correct
+
+H = HeLoCoConfig()
+
+
+def time_correction(d: int, reps: int = 20) -> float:
+    """us per correction of a d-parameter pseudo-gradient (8 tensor blocks)."""
+    key = jax.random.PRNGKey(0)
+    per = max(d // 8, 1)
+    delta = {f"b{i}": jax.random.normal(jax.random.fold_in(key, i), (per,))
+             for i in range(8)}
+    mom = {f"b{i}": jax.random.normal(jax.random.fold_in(key, 100 + i), (per,))
+           for i in range(8)}
+    fn = jax.jit(lambda a, b: block_correct(a, b, H))
+    out = fn(delta, mom)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(delta, mom)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> List[Dict]:
+    rows = []
+    for d in (1 << 14, 1 << 17, 1 << 20, 1 << 23):
+        us = time_correction(d)
+        rows.append({"name": f"heloco_correct_d{d}", "us_per_call": us,
+                     "derived": f"bytes={3 * 4 * d} us_per_Mparam={us / (d / 1e6):.1f}"})
+    # linearity check: us/d should be ~constant for large d
+    big = [r for r in rows if "d1048576" in r["name"] or "d8388608" in r["name"]]
+    if len(big) == 2:
+        r1 = big[0]["us_per_call"] / (1 << 20)
+        r2 = big[1]["us_per_call"] / (1 << 23)
+        rows.append({"name": "heloco_correct_linearity",
+                     "us_per_call": 0.0,
+                     "derived": f"ratio={r2 / r1:.2f} (1.0 = perfectly O(d))"})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Table 1: validation loss at a fixed token budget (left) and fixed
+time budget (right) across worker-pace configurations, non-IID.
+
+Reports L-HeLoCo / L-AMLA / L-AN / L-SN plus the paper's delta columns:
+  dX  = relative improvement of HeLoCo over X at the full step budget
+  TdX = relative improvement at matched wall-clock time T (T = HeLoCo's
+        finishing time, as in the paper).
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Sequence
+
+from benchmarks.common import base_run, loss_at_time, run_cached
+
+PACE_CONFIGS: List[Sequence[float]] = [
+    (1, 1, 1, 1, 1),
+    (1, 1, 1, 1, 2),
+    (1, 1, 1, 1, 6),
+    (1, 1, 1, 1, 15),
+    (1, 2, 2, 2, 2),
+    (1, 6, 6, 6, 6),
+    (1, 15, 15, 15, 15),
+]
+
+ORDER = ("async-heloco", "async-mla", "async-nesterov", "sync-nesterov")
+
+
+def run(outer_steps: int = 30, inner_steps: int = 8,
+        configs: Sequence[Sequence[float]] = PACE_CONFIGS) -> Dict:
+    out = {}
+    for paces in configs:
+        tag = "p" + "_".join(str(int(p)) for p in paces)
+        for method in ORDER:
+            rc = base_run(paces, method=method, non_iid=True,
+                          outer_steps=outer_steps, inner_steps=inner_steps)
+            out[f"{tag}/{method}"] = run_cached(f"table1_{tag}_{method}", rc)
+    return out
+
+
+def summarize(results: Dict,
+              configs: Sequence[Sequence[float]] = PACE_CONFIGS) -> str:
+    hdr = ("paces,L-HeLoCo,L-AMLA,L-AN,L-SN,dAMLA%,dAN%,dSN%,"
+           "T,TdAMLA%,TdAN%,TdSN%")
+    lines = [hdr]
+    for paces in configs:
+        tag = "p" + "_".join(str(int(p)) for p in paces)
+        rs = {m: results[f"{tag}/{m}"] for m in ORDER}
+        lh = rs["async-heloco"]["final_loss"]
+        losses = [rs[m]["final_loss"] for m in ORDER]
+        deltas = [100.0 * (l - lh) / l for l in losses[1:]]
+        t_budget = rs["async-heloco"]["final_time"]
+        tls = []
+        for m in ORDER[1:]:
+            lm = loss_at_time(rs[m], t_budget)
+            tls.append(100.0 * (lm - lh) / lm if lm else float("nan"))
+        lines.append(
+            f"({'_'.join(str(int(p)) for p in paces)}),"
+            + ",".join(f"{l:.3f}" for l in losses) + ","
+            + ",".join(f"{d:+.2f}" for d in deltas)
+            + f",{t_budget:.0f}," + ",".join(f"{d:+.2f}" for d in tls))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outer", type=int, default=30)
+    ap.add_argument("--inner", type=int, default=8)
+    args = ap.parse_args()
+    results = run(args.outer, args.inner)
+    print(summarize(results))
+
+
+if __name__ == "__main__":
+    main()

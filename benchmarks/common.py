@@ -1,0 +1,103 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Each benchmark builds RunConfigs for the paper's methods, runs the
+event-driven simulator (real training, virtual clock), and caches results
+as JSON under results/experiments/ so EXPERIMENTS.md assembly and reruns
+are cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs import get_config, reduced
+from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
+from repro.async_engine.simulator import AsyncSimulator, make_eval_fn
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/experiments")
+
+# paper Table 3 (Appendix A.5): outer lr / momentum / weight factor
+METHODS = {
+    "async-heloco": dict(method="heloco", outer_lr=0.7, momentum=0.9,
+                         weight_factor="base", lookahead_init=True),
+    "async-mla": dict(method="mla", outer_lr=0.7, momentum=0.9,
+                      weight_factor="base", lookahead_init=True),
+    "async-nesterov": dict(method="nesterov", outer_lr=0.07, momentum=0.9,
+                           weight_factor="base", lookahead_init=False),
+    "sync-nesterov": dict(method="sync_nesterov", outer_lr=0.7, momentum=0.9,
+                          weight_factor="average", lookahead_init=False),
+}
+
+
+def base_run(paces: Sequence[float], *, method: str, non_iid: bool,
+             outer_steps: int, inner_steps: int, dylu: bool = False,
+             seed: int = 0, compression: str = "none",
+             drop_stale_after: Optional[int] = None,
+             shard_assignment: str = "fixed") -> RunConfig:
+    model = reduced(get_config("tinygpt-15m"))
+    outer = OuterOptConfig(compression=compression,
+                           drop_stale_after=drop_stale_after,
+                           **METHODS[method])
+    total = outer_steps * inner_steps
+    return RunConfig(
+        model=model,
+        inner=InnerOptConfig(lr=3e-3, warmup_steps=max(total // 20, 2),
+                             total_steps=total),
+        outer=outer,
+        n_workers=len(paces), inner_steps=inner_steps,
+        outer_steps=outer_steps, batch_size=4, seq_len=64,
+        worker_paces=tuple(float(p) for p in paces),
+        non_iid=non_iid, dylu=dylu, seed=seed,
+        shard_assignment=shard_assignment)
+
+
+def _key(rc: RunConfig, eval_every: int) -> str:
+    blob = json.dumps(dataclasses.asdict(rc), sort_keys=True, default=str)
+    return hashlib.sha1((blob + str(eval_every)).encode()).hexdigest()[:16]
+
+
+def run_cached(name: str, rc: RunConfig, eval_every: int = 0,
+               force: bool = False) -> Dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}__{_key(rc, eval_every)}.json")
+    if os.path.exists(path) and not force:
+        return json.load(open(path))
+    sim = AsyncSimulator(rc)
+    eval_fn = make_eval_fn(sim, batch=8, seq=rc.seq_len)
+    t0 = time.time()
+    hist = sim.run(eval_every=eval_every or max(rc.outer_steps // 8, 1),
+                   eval_fn=eval_fn)
+    out = {
+        "name": name,
+        "config": {"paces": rc.worker_paces, "method": rc.outer.method,
+                   "non_iid": rc.non_iid, "dylu": rc.dylu,
+                   "outer_steps": rc.outer_steps,
+                   "inner_steps": rc.inner_steps,
+                   "compression": rc.outer.compression,
+                   "drop_stale_after": rc.outer.drop_stale_after},
+        "evals": hist.evals,
+        "final_loss": hist.evals[-1]["mean"] if hist.evals else None,
+        "per_lang": hist.evals[-1]["per_lang"] if hist.evals else None,
+        "tokens": hist.tokens,
+        "comm_bytes": hist.comm_bytes,
+        "final_time": hist.final_time,
+        "staleness": [a["staleness"] for a in hist.arrivals],
+        "arrival_workers": [a["worker_id"] for a in hist.arrivals],
+        "n_dropped": sum(1 for a in hist.arrivals if a.get("dropped")),
+        "wall_seconds": time.time() - t0,
+    }
+    json.dump(out, open(path, "w"), indent=1)
+    return out
+
+
+def loss_at_time(result: Dict, t: float) -> Optional[float]:
+    """Loss of the last eval snapshot at sim-time <= t."""
+    best = None
+    for e in result["evals"]:
+        if e["time"] <= t + 1e-9:
+            best = e["mean"]
+    return best

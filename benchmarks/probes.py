@@ -1,0 +1,359 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ before any jax import (same device-count discipline as dryrun).
+
+"""Roofline cost probes.
+
+XLA's cost analysis counts while-loop bodies ONCE, so the production
+(scanned) compile underreports FLOPs/bytes by the trip counts. These
+probes compile the same step functions with every loop UNROLLED at
+pattern-unit depths {1, 2}; differencing gives exact per-unit costs:
+
+    unit  = probe(depth=2) - probe(depth=1)
+    fixed = probe(depth=1) - unit            (embed + loss + optimizer-fixed)
+    total = accum * (grad_fixed + L * grad_unit) + opt_fixed + L * opt_unit
+
+Train cells probe both the full train step and the grad-only step so the
+once-per-step optimizer cost is not multiplied by grad_accum. xLSTM's
+sLSTM blocks contain an S-step recurrent scan that cannot be unrolled at
+full sequence length; they are probed at S=256 and scaled linearly in S
+(every sLSTM cost term is linear in sequence length), documented in
+EXPERIMENTS.md SRoofline.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import InnerOptConfig, ModelConfig, ShapeConfig, shape_applicable
+from repro.dist import sharding as shd
+from repro.dist.steps import init_train_state, make_train_step
+from repro.launch.dryrun import plan_for, _state_shardings
+from repro.launch.inputs import abstract_params, batch_specs_struct, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.utils.hlo import (collective_stats, hbm_traffic_estimate,
+                             total_wire_bytes)
+
+INNER = InnerOptConfig()
+METRICS = ("flops", "bytes", "bytes_fused", "wire")
+
+
+def _probe_cfg(cfg: ModelConfig, units: int) -> ModelConfig:
+    """Shrink the arch to `units` pattern units (full width)."""
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=cfg.shared_attn_every * units)
+    if cfg.family == "ssm":
+        return dataclasses.replace(
+            cfg, n_layers=units,
+            xlstm=dataclasses.replace(cfg.xlstm, slstm_at=()))
+    return dataclasses.replace(cfg, n_layers=units, scan_layers=True)
+
+
+def _units_of(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.shared_attn_every
+    if cfg.family == "ssm":
+        return cfg.n_layers - len(cfg.xlstm.slstm_at)   # mLSTM units
+    return cfg.n_layers
+
+
+def _metrics(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_stats(text)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "bytes_fused": hbm_traffic_estimate(text),
+            "wire": total_wire_bytes(coll)}
+
+
+def _diff(a: Dict[str, float], b: Dict[str, float]) -> Dict[str, float]:
+    return {k: a[k] - b[k] for k in METRICS}
+
+
+def _scale(a: Dict[str, float], s: float) -> Dict[str, float]:
+    return {k: a[k] * s for k in METRICS}
+
+
+def _add(a: Dict[str, float], b: Dict[str, float]) -> Dict[str, float]:
+    return {k: a[k] + b[k] for k in METRICS}
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers (single-pod mesh, unrolled)
+# --------------------------------------------------------------------------
+
+def _lower_train(cfg: ModelConfig, batch: int, seq: int, mesh, *,
+                 q_chunk: int, grad_only: bool,
+                 attn_style: str = "tp") -> Dict[str, float]:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cfg = dataclasses.replace(cfg, act_batch_axes=("data",))
+    params_sds = abstract_params(cfg)
+    pspecs = shd.param_specs(params_sds, axis_sizes=axis_sizes,
+                             attn_style=attn_style)
+    psh = shd.shardings_of(pspecs, mesh)
+    batch_sds = batch_specs_struct(cfg, batch, seq)
+    bspecs = shd.batch_specs(batch_sds)
+    bsh = shd.shardings_of(bspecs, mesh)
+    model = build_model(cfg)
+
+    with jax.set_mesh(mesh):
+        if grad_only:
+            def step(params, b):
+                def lf(p):
+                    return model.loss(p, b, unroll=True, q_chunk=q_chunk)[0]
+                loss, g = jax.value_and_grad(lf)(params)
+                g = jax.tree.map(
+                    lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                    g, pspecs)
+                return loss, g
+            lowered = jax.jit(step, in_shardings=(psh, bsh),
+                              out_shardings=(NamedSharding(mesh, P()), psh)
+                              ).lower(params_sds, batch_sds)
+        else:
+            fn = make_train_step(cfg, INNER, grad_accum=1, unroll=True,
+                                 q_chunk=q_chunk, param_pspecs=pspecs)
+            state_sds = jax.eval_shape(init_train_state, params_sds)
+            state_sh = _state_shardings(pspecs, mesh)
+            lowered = jax.jit(fn, in_shardings=(state_sh, bsh),
+                              out_shardings=(state_sh, NamedSharding(mesh, P())),
+                              donate_argnums=(0,)
+                              ).lower(state_sds, batch_sds)
+        return _metrics(lowered.compile())
+
+
+def _lower_prefill(cfg: ModelConfig, batch: int, seq: int, mesh, *,
+                   q_chunk: int) -> Dict[str, float]:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cfg = dataclasses.replace(cfg, act_batch_axes=("data",))
+    params_sds = abstract_params(cfg)
+    pspecs = shd.param_specs(params_sds, axis_sizes=axis_sizes)
+    psh = shd.shardings_of(pspecs, mesh)
+    batch_sds = batch_specs_struct(cfg, batch, seq, with_labels=False)
+    bsh = shd.shardings_of(shd.batch_specs(batch_sds), mesh)
+    model = build_model(cfg)
+    with jax.set_mesh(mesh):
+        def step(params, b):
+            return model.prefill(params, b, cache_len=seq, unroll=True,
+                                 q_chunk=q_chunk)
+        lowered = jax.jit(step, in_shardings=(psh, bsh)).lower(
+            params_sds, batch_sds)
+        return _metrics(lowered.compile())
+
+
+def _lower_decode(cfg: ModelConfig, batch: int, seq: int, mesh
+                  ) -> Dict[str, float]:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cfg = dataclasses.replace(cfg, act_batch_axes=())
+    params_sds = abstract_params(cfg)
+    pspecs = shd.param_specs(params_sds, axis_sizes=axis_sizes)
+    psh = shd.shardings_of(pspecs, mesh)
+    model = build_model(cfg)
+    caches = jax.eval_shape(lambda: model.init_caches(batch, seq))
+    batch_sharded = batch >= axis_sizes.get("data", 1)
+    cspecs = shd.cache_specs(caches, batch_sharded=batch_sharded,
+                             axis_sizes=axis_sizes)
+    csh = shd.shardings_of(cspecs, mesh)
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    tok_sh = NamedSharding(mesh, P("data") if batch_sharded else P())
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(model.decode,
+                          in_shardings=(psh, tok_sh, csh,
+                                        NamedSharding(mesh, P()))
+                          ).lower(params_sds, tok, caches, pos)
+        return _metrics(lowered.compile())
+
+
+# --------------------------------------------------------------------------
+# Per-cell probe
+# --------------------------------------------------------------------------
+
+SLSTM_PROBE_SEQ = 256
+
+
+def probe_cell(arch: str, shape_name: str,
+               overrides: Optional[Dict] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    plan = plan_for(arch, shape, overrides)
+    mesh = make_production_mesh(multi_pod=False)
+    n_units = _units_of(cfg)
+    t0 = time.time()
+
+    def lower_at(units: int, *, kind: str, batch: int, seq: int,
+                 grad_only: bool = False):
+        pc = _probe_cfg(cfg, units)
+        pc = dataclasses.replace(
+            pc,
+            act_model_axis=("model" if plan.get("head_tp") else ""),
+            seq_parallel=bool(plan.get("seq_parallel")),
+            remat_group=min(int(plan.get("remat_group", 1)), pc.n_layers) or 1)
+        if pc.is_moe and plan.get("moe_vmap"):
+            pc = dataclasses.replace(
+                pc, moe=dataclasses.replace(pc.moe, group_mode="vmap"))
+        if pc.is_moe and (plan.get("moe_group") or plan.get("moe_dispatch")):
+            # moe_group: fewer, larger dispatch groups (keeps the unrolled
+            # probe HLO small; MoE cost is linear in tokens either way).
+            # moe_dispatch: scatter (O(T d), GSPMD-hostile) vs einsum
+            # (O(T E C d), GSPMD-clean) — the right choice is per-arch.
+            pc = dataclasses.replace(
+                pc, moe=dataclasses.replace(
+                    pc.moe,
+                    group_size=int(plan.get("moe_group",
+                                            pc.moe.group_size)),
+                    dispatch=plan.get("moe_dispatch", pc.moe.dispatch)))
+        if kind == "train":
+            return _lower_train(
+                pc, batch, seq, mesh, q_chunk=plan["q_chunk"],
+                grad_only=grad_only,
+                attn_style=("dp" if plan.get("attn_dp") else "tp"))
+        if kind == "prefill":
+            return _lower_prefill(pc, batch, seq, mesh,
+                                  q_chunk=plan["q_chunk"])
+        return _lower_decode(pc, batch, seq, mesh)
+
+    out: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "plan": plan, "n_units": n_units}
+
+    if shape.kind == "train":
+        micro = shape.global_batch // plan["grad_accum"]
+        g1 = lower_at(1, kind="train", batch=micro, seq=shape.seq_len,
+                      grad_only=True)
+        g2 = lower_at(2, kind="train", batch=micro, seq=shape.seq_len,
+                      grad_only=True)
+        t1 = lower_at(1, kind="train", batch=micro, seq=shape.seq_len)
+        grad_unit = _diff(g2, g1)
+        grad_fixed = _diff(g1, grad_unit)
+        opt1 = _diff(t1, g1)                       # optimizer cost at depth 1
+        # optimizer scales with params: unit share from param counts
+        p1 = _count_params(_probe_cfg(cfg, 1))
+        pu = (_count_params(_probe_cfg(cfg, 2)) - p1)
+        opt_unit = _scale(opt1, pu / max(p1, 1))
+        opt_fixed = _diff(opt1, opt_unit) if p1 > pu else _scale(opt1, 0.0)
+        total = _add(
+            _scale(_add(grad_fixed, _scale(grad_unit, n_units)),
+                   plan["grad_accum"]),
+            _add(opt_fixed, _scale(opt_unit, n_units)))
+        out["detail"] = {"grad_unit": grad_unit, "grad_fixed": grad_fixed,
+                         "opt_at_depth1": opt1}
+        if cfg.family == "ssm" and cfg.xlstm.slstm_at:
+            total = _add(total, _slstm_extra(
+                cfg, micro, shape.seq_len, mesh, plan, train=True,
+                accum=plan["grad_accum"]))
+    elif shape.kind == "prefill":
+        p1 = lower_at(1, kind="prefill", batch=shape.global_batch,
+                      seq=shape.seq_len)
+        p2 = lower_at(2, kind="prefill", batch=shape.global_batch,
+                      seq=shape.seq_len)
+        unit = _diff(p2, p1)
+        fixed = _diff(p1, unit)
+        total = _add(fixed, _scale(unit, n_units))
+        if cfg.family == "ssm" and cfg.xlstm.slstm_at:
+            total = _add(total, _slstm_extra(cfg, shape.global_batch,
+                                             shape.seq_len, mesh, plan,
+                                             train=False, accum=1))
+    else:  # decode
+        d1 = lower_at(1, kind="decode", batch=shape.global_batch,
+                      seq=shape.seq_len)
+        d2 = lower_at(2, kind="decode", batch=shape.global_batch,
+                      seq=shape.seq_len)
+        unit = _diff(d2, d1)
+        fixed = _diff(d1, unit)
+        total = _add(fixed, _scale(unit, n_units))
+        if cfg.family == "ssm" and cfg.xlstm.slstm_at:
+            s1 = _lower_decode(_xl_probe(cfg, 1, slstm=False),
+                               shape.global_batch, shape.seq_len, mesh)
+            s2 = _lower_decode(_xl_probe(cfg, 2, slstm=True),
+                               shape.global_batch, shape.seq_len, mesh)
+            total = _add(total, _scale(_diff(s2, s1),
+                                       len(cfg.xlstm.slstm_at)))
+    out["total_per_device"] = total
+    out["probe_seconds"] = time.time() - t0
+    return out
+
+
+def _xl_probe(cfg: ModelConfig, units: int, slstm: bool) -> ModelConfig:
+    sl = (1,) if slstm and units > 1 else ()
+    return dataclasses.replace(
+        cfg, n_layers=units,
+        xlstm=dataclasses.replace(cfg.xlstm, slstm_at=sl))
+
+
+def _slstm_extra(cfg, batch, seq, mesh, plan, *, train: bool, accum: int
+                 ) -> Dict[str, float]:
+    """sLSTM unit cost: probed at S=256 (recurrent scan unrolled), scaled
+    linearly to S; multiplied by the number of sLSTM layers (and accum)."""
+    s = SLSTM_PROBE_SEQ
+    f = (_lower_train if train else _lower_prefill)
+    kw = dict(q_chunk=plan["q_chunk"])
+    if train:
+        kw["grad_only"] = True
+    m_only = f(dataclasses.replace(_xl_probe(cfg, 1, slstm=False)),
+               batch, s, mesh, **kw)
+    with_s = f(dataclasses.replace(_xl_probe(cfg, 2, slstm=True)),
+               batch, s, mesh, **kw)
+    # depth2-with-slstm minus depth1-mlstm = (mlstm unit + slstm unit);
+    # subtract the mlstm unit measured at the same short seq
+    m2 = f(dataclasses.replace(_xl_probe(cfg, 2, slstm=False)),
+           batch, s, mesh, **kw)
+    slstm_unit_short = _diff(with_s, m2)
+    per_layer = _scale(slstm_unit_short, seq / s)
+    mult = len(cfg.xlstm.slstm_at) * (accum if train else 1)
+    return _scale(per_layer, mult)
+
+
+def _count_params(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/probes")
+    ap.add_argument("--plan", default=None, help="JSON plan overrides")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    overrides = json.loads(args.plan) if args.plan else None
+    from repro.configs import ASSIGNED
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            ok, why = shape_applicable(cfg, SHAPES[shape_name])
+            path = os.path.join(
+                args.out, f"{arch}__{shape_name}"
+                + (f"__{args.tag}" if args.tag else "") + ".json")
+            if not ok:
+                json.dump({"arch": arch, "shape": shape_name, "skipped": why},
+                          open(path, "w"), indent=1)
+                print(f"SKIP {arch}/{shape_name}: {why}", flush=True)
+                continue
+            try:
+                rec = probe_cell(arch, shape_name, overrides)
+                json.dump(rec, open(path, "w"), indent=1)
+                t = rec["total_per_device"]
+                print(f"OK   {arch}/{shape_name}: flops={t['flops']:.3e} "
+                      f"bytes={t['bytes']:.3e} wire={t['wire']:.3e} "
+                      f"({rec['probe_seconds']:.0f}s)", flush=True)
+            except Exception as e:
+                import traceback
+                json.dump({"arch": arch, "shape": shape_name,
+                           "error": repr(e)}, open(path, "w"), indent=1)
+                print(f"FAIL {arch}/{shape_name}: {e!r}", flush=True)
+                traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Roofline assembly: per (arch x shape) cell, combine
+  - probes (results/probes/*.json): exact per-device FLOPs / HBM bytes /
+    collective wire bytes, loop-corrected (see probes.py docstring), and
+  - the production dry-run (results/dryrun/*__single.json): per-device
+    memory proof + collective schedule inventory,
+into the three roofline terms on TPU v5e constants:
+
+    compute_s    = flops_per_device / 197e12        (bf16 MXU peak)
+    memory_s     = hbm_bytes_per_device / 819e9     (HBM bandwidth)
+    collective_s = wire_bytes_per_device / 50e9     (per-link ICI)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the useful-compute
+ratio MODEL_FLOPS / (HLO flops * chips).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+CHIPS = 256                  # single-pod roofline
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def _param_counts(arch: str) -> Dict[str, float]:
+    """total / active parameter counts (active: MoE experts scaled by top_k/E)."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+    from repro.configs import get_config
+    from repro.launch.inputs import abstract_params
+    cfg = get_config(arch)
+    tree = abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    total = expert = 0
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        total += leaf.size
+        if "moe/w_" in keys and "shared" not in keys:
+            expert += leaf.size
+    active = total - expert
+    if cfg.is_moe and cfg.moe.n_experts:
+        active += expert * cfg.moe.top_k / cfg.moe.n_experts
+    out = {"total": float(total), "active": float(active)}
+    _PARAM_CACHE[arch] = out
+    return out
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    pc = _param_counts(arch)
+    n = pc["active"] if cfg.is_moe else pc["total"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per row
+
+
+def cell_roofline(arch: str, shape_name: str, probes_dir: str,
+                  dryrun_dir: str) -> Optional[Dict]:
+    ppath = os.path.join(probes_dir, f"{arch}__{shape_name}.json")
+    dpath = os.path.join(dryrun_dir, f"{arch}__{shape_name}__single.json")
+    if not os.path.exists(ppath):
+        return None
+    probe = json.load(open(ppath))
+    if "skipped" in probe:
+        return {"arch": arch, "shape": shape_name, "skipped": probe["skipped"]}
+    if "error" in probe:
+        return {"arch": arch, "shape": shape_name, "error": probe["error"]}
+    t = probe["total_per_device"]
+    compute_s = t["flops"] / PEAK_FLOPS
+    memory_upper_s = t["bytes"] / HBM_BW         # pre-fusion operand bytes
+    memory_s = (t["bytes_fused"] / HBM_BW        # post-fusion HBM estimate
+                if t.get("bytes_fused") else memory_upper_s)
+    coll_s = t["wire"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = model_flops(arch, shape_name)
+    hlo_total = t["flops"] * CHIPS
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_upper_s": memory_upper_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "roofline_fraction": compute_s / step_time if step_time else 0.0,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "mfu_bound": (mf / CHIPS / PEAK_FLOPS) / step_time if step_time else 0.0,
+    }
+    if os.path.exists(dpath):
+        dr = json.load(open(dpath))
+        if "memory" in dr:
+            rec["peak_gib_per_device"] = dr["memory"]["peak_estimate_bytes"] / 2**30
+            rec["fits_16g"] = rec["peak_gib_per_device"] <= 16.0
+    return rec
+
+
+def assemble(probes_dir: str = "results/probes",
+             dryrun_dir: str = "results/dryrun"):
+    from repro.configs import ASSIGNED, SHAPES
+    rows = []
+    for arch in ASSIGNED:
+        for shape_name in SHAPES:
+            r = cell_roofline(arch, shape_name, probes_dir, dryrun_dir)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| roofline frac | MFU bound | useful ratio | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: {r['skipped']} | — | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['dominant']} | {r['roofline_fraction']:.2f} "
+            f"| {r.get('mfu_bound', 0):.3f} | {r['useful_ratio']:.2f} "
+            f"| {r.get('peak_gib_per_device', float('nan')):.2f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--probes", default="results/probes")
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+    rows = assemble(args.probes, args.dryrun)
+    os.makedirs(args.out, exist_ok=True)
+    json.dump(rows, open(os.path.join(args.out, "roofline.json"), "w"),
+              indent=1)
+    md = to_markdown(rows)
+    open(os.path.join(args.out, "roofline.md"), "w").write(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

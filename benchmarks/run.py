@@ -1,0 +1,61 @@
+"""Benchmark driver: one function per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (plus per-benchmark summary blocks).
+
+Fast benches (overhead, kernels) always run; the paper-reproduction
+training benches run with reduced budgets by default (pass --full for the
+paper-scale budgets used in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (slow)")
+    ap.add_argument("--skip-training", action="store_true",
+                    help="only micro-benchmarks")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    from benchmarks import bench_kernels, bench_overhead
+    for r in bench_overhead.run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    for r in bench_kernels.run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    sys.stdout.flush()
+
+    if args.skip_training:
+        return
+
+    outer, inner = (60, 15) if args.full else (24, 6)
+    t0 = time.time()
+    from benchmarks import (bench_convergence, bench_drop_stale,
+                            bench_language, bench_pace_table)
+
+    print(f"\n# Fig.2 convergence (outer={outer} inner={inner})")
+    print(bench_convergence.summarize(bench_convergence.run(outer, inner)))
+    sys.stdout.flush()
+
+    print(f"\n# Table 1 pace sweep")
+    cfgs = bench_pace_table.PACE_CONFIGS if args.full else \
+        bench_pace_table.PACE_CONFIGS[:4]
+    print(bench_pace_table.summarize(
+        bench_pace_table.run(outer, inner, cfgs), cfgs))
+    sys.stdout.flush()
+
+    print(f"\n# Fig.3 per-language")
+    print(bench_language.summarize(bench_language.run(outer, inner)))
+    sys.stdout.flush()
+
+    print(f"\n# Fig.8 drop-stale ablation")
+    print(bench_drop_stale.summarize(bench_drop_stale.run(
+        outer if args.full else 16, inner)))
+    print(f"\n# total bench wall time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

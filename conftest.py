@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Make `repro` (src layout) and `benchmarks` importable regardless of how
+# pytest is invoked. NOTE: no XLA_FLAGS here — tests must see 1 device;
+# only launch/dryrun.py and benchmarks/probes.py force 512 fake devices
+# (in their own processes).
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,117 @@
+"""The synchronizer (outer-optimizer server) for asynchronous
+low-communication training.
+
+Owns the outer state (theta, momentum, step counter), hands out worker
+initializations (look-ahead model for HeLoCo/MLA, Eq. 5), and processes
+arriving pseudo-gradients through the configured method (HeLoCo per-block
+correction / MLA / Nesterov), including staleness bookkeeping, arrival
+weighting, and optional stale-update dropping (App. A.6).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OuterOptConfig
+from repro.core.heloco import (
+    OuterState, apply_arrival, init_outer_state, lookahead_init,
+)
+
+PyTree = Any
+
+
+@dataclass
+class ArrivalRecord:
+    outer_step: int
+    worker_id: int
+    staleness: int
+    rho: float
+    sim_time: float
+    lang: str = ""
+    dropped: bool = False
+
+
+class Synchronizer:
+    def __init__(self, init_params: PyTree, cfg: OuterOptConfig,
+                 n_workers: int, stacked_axes: Optional[PyTree] = None,
+                 use_kernel: bool = False):
+        self.state: OuterState = init_outer_state(init_params)
+        self.cfg = cfg
+        self.n_workers = n_workers
+        self.stacked_axes = stacked_axes
+        self.use_kernel = use_kernel
+        self.records: List[ArrivalRecord] = []
+        self._apply = jax.jit(
+            lambda state, delta, rho, tau: apply_arrival(
+                state, delta, method=cfg.method, outer_lr=cfg.outer_lr,
+                mu=cfg.momentum, h=cfg.heloco, rho=rho, tau=tau,
+                stacked_axes=stacked_axes, use_kernel=use_kernel),
+            donate_argnums=(0,))
+
+    # -- worker initialization ------------------------------------------------
+    @property
+    def t(self) -> int:
+        return int(self.state.step)
+
+    def worker_init(self) -> PyTree:
+        """Model state handed to a newly-available worker (Eq. 5 look-ahead
+        for HeLoCo/MLA; plain theta_t for the Nesterov baselines)."""
+        if self.cfg.lookahead_init and self.cfg.method in ("heloco", "mla"):
+            return lookahead_init(self.state, self.cfg.outer_lr,
+                                  self.cfg.momentum)
+        return self.state.params
+
+    # -- arrival weighting ----------------------------------------------------
+    def _rho(self, tau: int) -> float:
+        k = max(self.n_workers, 1)
+        if self.cfg.weight_factor == "base":
+            rho = math.sqrt(k) / k
+        elif self.cfg.weight_factor == "average":
+            rho = 1.0 / k
+        else:
+            rho = 1.0
+        if self.cfg.delay_weighting:
+            rho = rho / math.sqrt(1.0 + tau)
+        return rho
+
+    # -- arrival processing ---------------------------------------------------
+    def on_arrival(self, delta: PyTree, s_i: int, worker_id: int,
+                   sim_time: float = 0.0, lang: str = "") -> ArrivalRecord:
+        tau = self.t - s_i
+        dropped = (self.cfg.drop_stale_after is not None
+                   and tau > self.cfg.drop_stale_after)
+        if dropped:
+            # App. A.6: suppress the stale update (G_t = 0); the outer step
+            # still advances so momentum decays consistently.
+            delta = jax.tree.map(lambda x: jnp.zeros_like(x), delta)
+        rho = self._rho(tau)
+        self.state = self._apply(self.state, delta, jnp.asarray(rho),
+                                 jnp.asarray(tau, jnp.float32))
+        rec = ArrivalRecord(outer_step=self.t, worker_id=worker_id,
+                            staleness=tau, rho=rho, sim_time=sim_time,
+                            lang=lang, dropped=dropped)
+        self.records.append(rec)
+        return rec
+
+    # -- sync round (barrier) -------------------------------------------------
+    def on_sync_round(self, deltas: List[PyTree], sim_time: float = 0.0
+                      ) -> ArrivalRecord:
+        """Synchronous DiLoCo: average worker pseudo-gradients, one outer step."""
+        k = len(deltas)
+        avg = jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / k,
+                           *deltas)
+        rho = self._rho(0) * k if self.cfg.weight_factor == "average" else 1.0
+        # sync-nesterov in the paper uses average weighting: G = mean(Delta)
+        self.state = self._apply(self.state, avg, jnp.asarray(1.0),
+                                 jnp.asarray(0.0, jnp.float32))
+        rec = ArrivalRecord(outer_step=self.t, worker_id=-1, staleness=0,
+                            rho=1.0, sim_time=sim_time)
+        self.records.append(rec)
+        return rec
+
+    def set_n_workers(self, n: int):
+        self.n_workers = n

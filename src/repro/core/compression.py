@@ -1,0 +1,97 @@
+"""Pseudo-gradient compression with error feedback (beyond-paper,
+DiLoCoX-style). Applied on the worker before shipping Delta to the
+synchronizer; the error-feedback buffer keeps compression unbiased over
+time. Cuts the pod-axis collective bytes by 4x (int8) or ~10x (top-k).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Compressed(NamedTuple):
+    payload: PyTree           # int8 values / (values, indices)
+    scale: PyTree             # per-tensor scales (fp32)
+    kind: str
+
+
+def _int8_one(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_decode(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_one(x: jnp.ndarray, ratio: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def compress(delta: PyTree, kind: str, topk_ratio: float = 0.1) -> Compressed:
+    if kind == "int8":
+        qs = jax.tree.map(_int8_one, delta)
+        payload = jax.tree.map(lambda t: t[0], qs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        scale = jax.tree.map(lambda t: t[1], qs,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return Compressed(payload, scale, "int8")
+    if kind == "topk":
+        qs = jax.tree.map(lambda x: _topk_one(x, topk_ratio), delta)
+        return Compressed(
+            jax.tree.map(lambda t: (t[0], t[1]), qs,
+                         is_leaf=lambda t: isinstance(t, tuple)),
+            jax.tree.map(lambda x: jnp.asarray(x.shape, jnp.int32), delta),
+            "topk")
+    raise ValueError(kind)
+
+
+def decompress(c: Compressed, like: PyTree) -> PyTree:
+    if c.kind == "int8":
+        return jax.tree.map(_int8_decode, c.payload, c.scale)
+    if c.kind == "topk":
+        def dec(pair, ref):
+            vals, idx = pair
+            flat = jnp.zeros(ref.size, jnp.float32).at[idx].set(vals)
+            return flat.reshape(ref.shape)
+        return jax.tree.map(dec, c.payload, like,
+                            is_leaf=lambda t: isinstance(t, tuple))
+    raise ValueError(c.kind)
+
+
+def compressed_bytes(c: Compressed) -> int:
+    if c.kind == "int8":
+        n = sum(x.size for x in jax.tree.leaves(c.payload))
+        return n + 4 * len(jax.tree.leaves(c.scale))
+    vals = jax.tree.leaves(c.payload)
+    return sum(x.size * x.dtype.itemsize for x in vals)
+
+
+def roundtrip_with_error_feedback(delta: PyTree, ef: Optional[PyTree],
+                                  kind: str, topk_ratio: float = 0.1
+                                  ) -> Tuple[PyTree, PyTree, int]:
+    """Worker-side: compress (delta + ef), return (decoded, new_ef, bytes).
+
+    decoded is what the synchronizer receives after decompression; new_ef
+    accumulates what compression lost (error feedback).
+    """
+    if kind == "none":
+        zeros = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), delta)
+        nbytes = sum(x.size * 4 for x in jax.tree.leaves(delta))
+        return delta, zeros, nbytes
+    if ef is None:
+        ef = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), delta)
+    target = jax.tree.map(lambda d, e: d.astype(jnp.float32) + e, delta, ef)
+    comp = compress(target, kind, topk_ratio)
+    decoded = decompress(comp, target)
+    new_ef = jax.tree.map(lambda t, d: t - d, target, decoded)
+    return decoded, new_ef, compressed_bytes(comp)

@@ -1,0 +1,175 @@
+"""HeLoCo: momentum-guided look-ahead initialization + per-tensor-block
+directional correction of stale pseudo-gradients (paper Sections 3, Alg. 1-2).
+
+Everything here is pure JAX and jittable. A "block" is a leaf tensor of the
+parameter pytree — exactly the paper's granularity ("each block is an
+individual model tensor"). For scanned layer stacks (leaves carrying a
+leading layer axis) the correction is vmapped over that axis so granularity
+matches the unstacked model; pass ``stacked_axes`` describing how many
+leading axes of each leaf are layer axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HeLoCoConfig
+
+PyTree = Any
+
+
+class OuterState(NamedTuple):
+    """Synchronizer state: outer params + Nesterov momentum buffer."""
+    params: PyTree
+    momentum: PyTree
+    step: jnp.ndarray          # outer step t (int32)
+
+
+def init_outer_state(params: PyTree) -> OuterState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OuterState(params=params, momentum=zeros,
+                      step=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5: momentum-guided look-ahead worker initialization
+# ---------------------------------------------------------------------------
+
+def lookahead_init(state: OuterState, outer_lr: float, mu: float) -> PyTree:
+    """theta_bar_r = theta_r - eta_r * mu * m_r  (HeLoCo + MLA worker init)."""
+    return jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - outer_lr * mu * m).astype(p.dtype),
+        state.params, state.momentum)
+
+
+# ---------------------------------------------------------------------------
+# Eqs. 7-16 / Alg. 2: per-block directional correction
+# ---------------------------------------------------------------------------
+
+def correct_block(delta: jnp.ndarray, mom: jnp.ndarray,
+                  h: HeLoCoConfig) -> jnp.ndarray:
+    """Correct ONE tensor block against its momentum block.
+
+    Flattens the block, computes the cosine c_b and applies:
+      c_b >= c_ok           : keep
+      c_b <  0              : damp the anti-momentum component   (Eq. 10-11)
+      0 <= c_b < c_ok       : norm-preserving rotation to v_hat  (Eq. 12-14)
+      degenerate norms      : pass through
+    """
+    u = delta.astype(jnp.float32).reshape(-1)
+    v = mom.astype(jnp.float32).reshape(-1)
+    nu = jnp.linalg.norm(u)
+    nv = jnp.linalg.norm(v)
+    safe_nu = jnp.maximum(nu, h.eps)
+    safe_nv = jnp.maximum(nv, h.eps)
+    u_hat = u / safe_nu
+    v_hat = v / safe_nv
+    c = jnp.dot(u_hat, v_hat)                                     # Eq. 8
+    conf = nu / (nu + h.kappa * nv + h.eps)                       # Eq. 15
+
+    # anti-aligned branch (Eq. 10-11)
+    beta = jnp.minimum(h.k_s * (-c) * conf, h.beta_max)
+    anti = u - beta * c * nu * v_hat
+
+    # weakly-aligned branch (Eq. 12-14)
+    lam = jnp.minimum(h.k_d * (1.0 - c) * conf, 1.0)
+    u_tilde = (1.0 - lam) * u_hat + lam * v_hat
+    weak = nu * u_tilde / jnp.maximum(jnp.linalg.norm(u_tilde), h.eps)
+
+    corrected = jnp.where(c >= h.c_ok, u, jnp.where(c < 0.0, anti, weak))
+    degenerate = (nu < h.eps) | (nv < h.eps)
+    out = jnp.where(degenerate, u, corrected)
+    return out.reshape(delta.shape).astype(delta.dtype)
+
+
+def block_correct(delta: PyTree, momentum: PyTree, h: HeLoCoConfig,
+                  stacked_axes: Optional[PyTree] = None,
+                  use_kernel: bool = False) -> PyTree:
+    """Alg. 2 over the whole pseudo-gradient pytree.
+
+    stacked_axes: optional pytree of ints (same structure) giving the number
+    of leading layer axes per leaf (scanned stacks); the correction is
+    vmapped over those axes so each layer's tensor is its own block.
+    use_kernel: route each block through the fused Pallas kernel path.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        base = functools.partial(kops.heloco_correct_block, h=h)
+    else:
+        base = functools.partial(correct_block, h=h)
+
+    if stacked_axes is None:
+        return jax.tree.map(base, delta, momentum)
+
+    def apply_one(d, m, n_axes):
+        fn = base
+        for _ in range(int(n_axes)):
+            fn = jax.vmap(fn)
+        return fn(d, m)
+
+    return jax.tree.map(apply_one, delta, momentum, stacked_axes)
+
+
+# ---------------------------------------------------------------------------
+# Eqs. 17-19: outer update (shared by Nesterov / MLA / HeLoCo)
+# ---------------------------------------------------------------------------
+
+def outer_update(state: OuterState, g: PyTree, outer_lr: float,
+                 mu: float, rho: jnp.ndarray | float = 1.0) -> OuterState:
+    """m_{t+1} = mu m_t + (1-mu) rho G;  theta_{t+1} = theta_t - eta (G' + mu m_{t+1})."""
+    def m_upd(m, gi):
+        return mu * m + (1.0 - mu) * rho * gi.astype(jnp.float32)
+
+    def p_upd(p, m_new, gi):
+        gf = rho * gi.astype(jnp.float32)
+        return (p.astype(jnp.float32) - outer_lr * (gf + mu * m_new)).astype(p.dtype)
+
+    momentum = jax.tree.map(m_upd, state.momentum, g)
+    params = jax.tree.map(p_upd, state.params, momentum, g)
+    return OuterState(params=params, momentum=momentum, step=state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# Method dispatch: what happens when a pseudo-gradient arrives
+# ---------------------------------------------------------------------------
+
+def mla_correct(delta: PyTree, momentum: PyTree, outer_lr: float,
+                mu: float, tau: jnp.ndarray) -> PyTree:
+    """Momentum Look-Ahead (Ajanthan et al. 2025): uniform extrapolation of
+    the whole pseudo-gradient along the negative momentum direction,
+    proportional to staleness: Delta' = Delta + eta * mu * tau_norm * m.
+
+    (The original MLA applies a single uniform momentum-based shift to the
+    entire update; per-block geometry is exactly what it lacks.)
+    """
+    scale = outer_lr * mu * jnp.minimum(tau.astype(jnp.float32), 10.0) / 10.0
+    return jax.tree.map(
+        lambda d, m: (d.astype(jnp.float32) + scale * m).astype(d.dtype),
+        delta, momentum)
+
+
+def apply_arrival(state: OuterState, delta: PyTree, *, method: str,
+                  outer_lr: float, mu: float, h: HeLoCoConfig,
+                  rho: jnp.ndarray | float = 1.0,
+                  tau: jnp.ndarray | float = 0.0,
+                  stacked_axes: Optional[PyTree] = None,
+                  use_kernel: bool = False) -> OuterState:
+    """Process one arriving pseudo-gradient through the chosen method.
+
+    method: "heloco" | "mla" | "nesterov" (async) | "sync_nesterov"
+    (for sync, `delta` is already the worker-averaged pseudo-gradient).
+    """
+    tau = jnp.asarray(tau)
+    if method == "heloco":
+        g = block_correct(delta, state.momentum, h, stacked_axes=stacked_axes,
+                          use_kernel=use_kernel)
+    elif method == "mla":
+        g = mla_correct(delta, state.momentum, outer_lr, mu, tau)
+    elif method in ("nesterov", "sync_nesterov"):
+        g = delta
+    else:
+        raise ValueError(method)
+    return outer_update(state, g, outer_lr, mu, rho=rho)

@@ -1,0 +1,104 @@
+"""Pallas TPU flash-attention FORWARD kernel.
+
+Why it exists (roofline-driven): the XLA lowering of the jnp flash path
+materialises each (q_chunk x S) fp32 score block in HBM (measured in
+EXPERIMENTS.md SPerf — it turns attention memory-bound at 4k+ context).
+This kernel tiles q and kv into VMEM blocks and carries the online-softmax
+state (m, l, acc) in VMEM scratch across the kv grid axis, so per-step HBM
+traffic is O(q + k + v + out) instead of O(S^2) score blocks.
+
+Grid: (BH, n_q, n_kv) — on TPU the minor-most grid axis iterates
+sequentially per core, which is what makes scratch accumulation across kv
+blocks legal. Causal masking is applied per-tile from absolute indices.
+The backward continues to use the jnp custom_vjp path (see
+models/attention.py); fusing the backward is listed as future work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      causal: bool, scale: float, q_chunk: int, kv_chunk: int,
+                      n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (qc, d)
+    k = k_ref[0].astype(jnp.float32)            # (kc, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_idx = qi * q_chunk + jax.lax.broadcasted_iota(jnp.int32,
+                                                        s.shape, 0)
+        kv_idx = ki * kv_chunk + jax.lax.broadcasted_iota(jnp.int32,
+                                                          s.shape, 1)
+        s = jnp.where(kv_idx <= q_idx, s, NEG_INF)
+
+    m_prev = m_scr[...]                          # (qc, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                       # (qc, kc)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, q_chunk: int = 128,
+                        kv_chunk: int = 128,
+                        interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BH, Skv, D) — GQA callers broadcast kv heads
+    and flatten (batch, heads) into BH. Returns (BH, Sq, D)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+    n_q = sq // q_chunk
+    n_kv = skv // kv_chunk
+    grid = (bh, n_q, n_kv)
+    kern = functools.partial(
+        _flash_fwd_kernel, causal=causal, scale=d ** -0.5, q_chunk=q_chunk,
+        kv_chunk=kv_chunk, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_chunk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_chunk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_chunk, 1), jnp.float32),
+            pltpu.VMEM((q_chunk, 1), jnp.float32),
+            pltpu.VMEM((q_chunk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernels for the HeLoCo per-block correction (paper Alg. 2).
+
+The correction is memory-bound: per arriving block it needs one reduction
+pass (dot(u,v), ||u||^2, ||v||^2) and one elementwise pass
+(out = cu*u + cv*v, where cu/cv encode the keep/damp/rotate branch).
+A naive jnp implementation materialises u_hat, v_hat, u_tilde -> 3 extra
+HBM round-trips over d floats. These kernels do exactly two passes:
+
+  block_stats   : tiled VMEM reduction -> per-tile partial (dot, uu, vv)
+  correct_apply : fused out = cu*u + cv*v in one read of (u, v)
+
+Tiling: the flattened block is padded to a multiple of (ROWS x 128) and
+viewed as (R, 128); the grid walks row-blocks so each step's working set
+(2 x ROWS x 128 x 4B = 256 KiB at ROWS=256) sits comfortably in VMEM, and
+the 128-lane minor dimension matches the TPU vector registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+ROWS = 256  # rows per grid step: 2 inputs * 256*128*4B = 256 KiB of VMEM
+
+
+def _stats_kernel(u_ref, v_ref, out_ref):
+    u = u_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(u * v)
+    out_ref[0, 1] = jnp.sum(u * u)
+    out_ref[0, 2] = jnp.sum(v * v)
+
+
+def block_stats(u2d: jnp.ndarray, v2d: jnp.ndarray,
+                interpret: bool = True) -> jnp.ndarray:
+    """u2d, v2d: (R, 128). Returns (n_tiles, 3) partial sums fp32."""
+    r = u2d.shape[0]
+    rows = min(ROWS, r)
+    assert r % rows == 0
+    grid = (r // rows,)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0))] * 2,
+        out_specs=pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 3), jnp.float32),
+        interpret=interpret,
+    )(u2d, v2d)
+
+
+def _apply_kernel(u_ref, v_ref, cu_ref, cv_ref, out_ref):
+    cu = cu_ref[0, 0]
+    cv = cv_ref[0, 0]
+    u = u_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    out_ref[...] = (cu * u + cv * v).astype(out_ref.dtype)
+
+
+def correct_apply(u2d: jnp.ndarray, v2d: jnp.ndarray, cu: jnp.ndarray,
+                  cv: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """out = cu*u + cv*v, fused single pass. cu/cv: scalar arrays."""
+    r = u2d.shape[0]
+    rows = min(ROWS, r)
+    assert r % rows == 0
+    grid = (r // rows,)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(u2d.shape, u2d.dtype),
+        interpret=interpret,
+    )(u2d, v2d, cu.reshape(1, 1), cv.reshape(1, 1))

@@ -1,0 +1,126 @@
+"""jit'd public wrappers around the Pallas kernels: padding/reshaping to the
+(R, 128) tiled view, branch-scalar computation, and pytree-level entry
+points that mirror the pure-jnp references in ``repro.kernels.ref``.
+
+``interpret=None`` auto-selects: interpreter on CPU (validation), compiled
+Mosaic on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HeLoCoConfig
+from repro.kernels import heloco_correct as hk
+from repro.kernels import outer_update as ok
+from repro.kernels import quantize as qk
+
+LANES = hk.LANES
+PyTree = Any
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _to_2d(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    """Flatten + zero-pad to (R, 128) with R a multiple of min(ROWS, R)."""
+    flat = x.reshape(-1)
+    n = flat.size
+    row_unit = LANES * min(hk.ROWS, max(1, -(-n // LANES)))
+    padded = -(-n // row_unit) * row_unit
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, LANES), n
+
+
+def _from_2d(x2d: jnp.ndarray, n: int, shape, dtype) -> jnp.ndarray:
+    return x2d.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# HeLoCo block correction (paper Alg. 2) — kernel path
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("h", "interpret"))
+def heloco_correct_block(delta: jnp.ndarray, mom: jnp.ndarray,
+                         h: HeLoCoConfig, interpret: bool | None = None
+                         ) -> jnp.ndarray:
+    interpret = _auto_interpret(interpret)
+    u2d, n = _to_2d(delta.astype(jnp.float32))
+    v2d, _ = _to_2d(mom.astype(jnp.float32))
+    parts = hk.block_stats(u2d, v2d, interpret=interpret)  # (tiles, 3)
+    dot, uu, vv = parts.sum(0)
+    nu = jnp.sqrt(uu)
+    nv = jnp.sqrt(vv)
+    c = dot / jnp.maximum(nu * nv, h.eps * h.eps)
+    conf = nu / (nu + h.kappa * nv + h.eps)
+
+    # branch scalars: out = cu*u + cv*v
+    # keep: (1, 0)
+    # anti: u - beta*c*nu*v_hat  -> (1, -beta*c*nu/nv)
+    beta = jnp.minimum(h.k_s * (-c) * conf, h.beta_max)
+    anti_cv = -beta * c * nu / jnp.maximum(nv, h.eps)
+    # weak: (nu/max(||u_tilde||, eps)) * ((1-lam)/nu * u + lam/nv * v)
+    lam = jnp.minimum(h.k_d * (1.0 - c) * conf, 1.0)
+    # ||u_tilde||^2 = (1-lam)^2 + lam^2 + 2 lam (1-lam) c
+    nt = jnp.sqrt((1 - lam) ** 2 + lam ** 2 + 2 * lam * (1 - lam) * c)
+    wscale = nu / jnp.maximum(nt, h.eps)
+    weak_cu = wscale * (1 - lam) / jnp.maximum(nu, h.eps)
+    weak_cv = wscale * lam / jnp.maximum(nv, h.eps)
+
+    keep = c >= h.c_ok
+    antib = c < 0.0
+    degen = (nu < h.eps) | (nv < h.eps)
+    cu = jnp.where(degen | keep, 1.0, jnp.where(antib, 1.0, weak_cu))
+    cv = jnp.where(degen | keep, 0.0, jnp.where(antib, anti_cv, weak_cv))
+
+    out2d = hk.correct_apply(u2d, v2d, cu, cv, interpret=interpret)
+    return _from_2d(out2d, n, delta.shape, delta.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused outer Nesterov update (paper Eqs. 17-19) — kernel path
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("eta", "mu", "interpret"))
+def outer_update_block(p: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+                       eta: float, mu: float, rho,
+                       interpret: bool | None = None):
+    interpret = _auto_interpret(interpret)
+    p2d, n = _to_2d(p.astype(jnp.float32))
+    m2d, _ = _to_2d(m.astype(jnp.float32))
+    g2d, _ = _to_2d(g.astype(jnp.float32))
+    p_new, m_new = ok.outer_update_2d(p2d, m2d, g2d, eta, mu,
+                                      jnp.asarray(rho, jnp.float32),
+                                      interpret=interpret)
+    return (_from_2d(p_new, n, p.shape, p.dtype),
+            _from_2d(m_new, n, m.shape, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization — kernel path
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_block(x: jnp.ndarray, interpret: bool | None = None):
+    interpret = _auto_interpret(interpret)
+    x2d, n = _to_2d(x.astype(jnp.float32))
+    q2d, scale = qk.quantize_2d(x2d, interpret=interpret)
+    return q2d, scale, jnp.asarray([n], jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "interpret"))
+def dequantize_block(q2d: jnp.ndarray, scale: jnp.ndarray, shape,
+                     dtype=jnp.float32, interpret: bool | None = None):
+    interpret = _auto_interpret(interpret)
+    x2d = qk.dequantize_2d(q2d, scale, out_dtype=jnp.float32,
+                           interpret=interpret)
+    n = 1
+    for s in shape:
+        n *= s
+    return _from_2d(x2d, n, shape, dtype)

@@ -1,0 +1,78 @@
+"""int8 pseudo-gradient quantization kernels (pod-axis compression).
+
+Two passes: tiled absmax reduction, then fused quantize. Dequantize is one
+fused pass. Used by the compression path to cut outer-exchange bytes 4x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+ROWS = 256
+
+
+def _absmax_kernel(x_ref, out_ref):
+    out_ref[0, 0] = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)))
+
+
+def absmax(x2d: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    r = x2d.shape[0]
+    rows = min(ROWS, r)
+    assert r % rows == 0
+    grid = (r // rows,)
+    parts = pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+        interpret=interpret,
+    )(x2d)
+    return jnp.max(parts)
+
+
+def _quant_kernel(x_ref, s_ref, out_ref):
+    scale = s_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def _dequant_kernel(q_ref, s_ref, out_ref):
+    out_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+                    ).astype(out_ref.dtype)
+
+
+def quantize_2d(x2d: jnp.ndarray, interpret: bool = True):
+    """Returns (q (R,128) int8, scale scalar fp32)."""
+    scale = jnp.maximum(absmax(x2d, interpret), 1e-12) / 127.0
+    r = x2d.shape[0]
+    rows = min(ROWS, r)
+    grid = (r // rows,)
+    q = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.int8),
+        interpret=interpret,
+    )(x2d, scale.reshape(1, 1))
+    return q, scale
+
+
+def dequantize_2d(q2d: jnp.ndarray, scale: jnp.ndarray,
+                  out_dtype=jnp.float32, interpret: bool = True):
+    r = q2d.shape[0]
+    rows = min(ROWS, r)
+    grid = (r // rows,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q2d.shape, out_dtype),
+        interpret=interpret,
+    )(q2d, scale.reshape(1, 1))

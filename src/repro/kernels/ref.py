@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are validated against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HeLoCoConfig
+from repro.core.heloco import correct_block as _correct_block
+
+
+def ref_heloco_correct(delta: jnp.ndarray, mom: jnp.ndarray,
+                       h: HeLoCoConfig) -> jnp.ndarray:
+    """The paper-equation implementation from repro.core (Alg. 2)."""
+    return _correct_block(delta, mom, h)
+
+
+def ref_outer_update(p: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+                     eta: float, mu: float, rho: float):
+    gf = rho * g.astype(jnp.float32)
+    m_new = mu * m.astype(jnp.float32) + (1.0 - mu) * gf
+    p_new = p.astype(jnp.float32) - eta * (gf + mu * m_new)
+    return p_new.astype(p.dtype), m_new
+
+
+def ref_quantize(x: jnp.ndarray):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ref_dequantize(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell, record memory analysis, cost analysis, and the collective
+schedule. This proves the distribution config is coherent without real
+hardware; EXPERIMENTS.md reads the JSON artifacts written here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out results/dryrun] [--probes]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES, get_config
+from repro.configs.base import (
+    HeLoCoConfig, InnerOptConfig, ModelConfig, ShapeConfig, shape_applicable,
+)
+from repro.optim.adamw import AdamState
+from repro.dist import sharding as shd
+from repro.dist.steps import (
+    init_train_state, make_decode_step, make_multipod_train_step,
+    make_outer_exchange, make_prefill_step, make_train_step,
+)
+from repro.launch.inputs import abstract_params, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.utils.hlo import (collective_stats, group_size_histogram,
+                             total_wire_bytes)
+
+INNER = InnerOptConfig()
+
+
+# --------------------------------------------------------------------------
+# Per-cell execution plan (baseline; Perf iterations override via --plan)
+# --------------------------------------------------------------------------
+
+GRAD_ACCUM = {
+    "zamba2-2.7b": 8, "qwen2-7b": 4, "granite-3-8b": 8, "command-r-35b": 8,
+    "starcoder2-15b": 8, "granite-moe-1b-a400m": 4, "llama4-scout-17b-a16e": 8,
+    "hubert-xlarge": 2, "xlstm-125m": 4, "paligemma-3b": 2,
+}
+Q_CHUNK = {"train": 512, "prefill": 256, "decode": 0}
+
+
+def plan_for(arch: str, shape: ShapeConfig, overrides: Optional[Dict] = None
+             ) -> Dict[str, Any]:
+    plan = {
+        "grad_accum": GRAD_ACCUM.get(arch, 4) if shape.kind == "train" else 1,
+        "q_chunk": Q_CHUNK[shape.kind] or 128,
+    }
+    if overrides:
+        plan.update(overrides)
+    return plan
+
+
+# --------------------------------------------------------------------------
+# Cell lowering
+# --------------------------------------------------------------------------
+
+def _state_shardings(pspecs, mesh, *, pod_prefix: bool = False):
+    """Sharding tree for TrainState given param PartitionSpecs."""
+    rep = NamedSharding(mesh, P(*(("pod",) if pod_prefix else ())))
+
+    def sh(spec):
+        entries = ("pod",) + tuple(spec) if pod_prefix else tuple(spec)
+        return NamedSharding(mesh, P(*entries))
+
+    psh = jax.tree.map(sh, pspecs, is_leaf=lambda x: isinstance(x, P))
+    from repro.dist.steps import TrainState
+    return TrainState(params=psh,
+                      opt=AdamState(mu=psh, nu=psh, count=rep),
+                      step=rep)
+
+
+def _analyze(lowered, compiled, seconds: float) -> Dict[str, Any]:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    text = compiled.as_text()
+    coll = collective_stats(text)
+    return {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "collective_group_sizes": group_size_histogram(text),
+        "wire_bytes_per_device": total_wire_bytes(coll),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": (ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "compile_seconds": seconds,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+               overrides: Optional[Dict] = None, unroll: bool = False,
+               cfg: Optional[ModelConfig] = None) -> Dict[str, Any]:
+    """Lower + compile one cell on `mesh`. Returns the analysis record."""
+    import dataclasses
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    plan = plan_for(arch, shape, overrides)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    # activation sharding hints: batch dim over data within the pod;
+    # plan knobs: remat_group (k-th-layer checkpointing), head_tp
+    # (pin attention-head TP on activations).
+    cfg = dataclasses.replace(
+        cfg, act_batch_axes=("data",),
+        act_model_axis=("model" if plan.get("head_tp") else ""),
+        seq_parallel=bool(plan.get("seq_parallel")),
+        remat_group=int(plan.get("remat_group", 1)))
+    if cfg.is_moe and (plan.get("moe_group") or plan.get("moe_dispatch")
+                       or plan.get("moe_vmap")):
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe,
+                group_size=int(plan.get("moe_group", cfg.moe.group_size)),
+                group_mode=("vmap" if plan.get("moe_vmap")
+                            else cfg.moe.group_mode),
+                dispatch=plan.get("moe_dispatch", cfg.moe.dispatch)))
+
+    params_sds = abstract_params(cfg)
+    pspecs = shd.param_specs(
+        params_sds, axis_sizes=axis_sizes,
+        attn_style=("dp" if plan.get("attn_dp") else "tp"))
+    psh = shd.shardings_of(pspecs, mesh)
+    ins = input_specs(cfg, shape)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state_sds = jax.eval_shape(init_train_state, params_sds)
+            if multi_pod:
+                # per-pod replica: leading pod axis on every leaf
+                step = make_multipod_train_step(
+                    cfg, INNER, mesh, grad_accum=plan["grad_accum"],
+                    q_chunk=plan["q_chunk"], unroll=unroll,
+                    param_pspecs=pspecs)
+                add_pod = lambda t: jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct((2,) + x.shape, x.dtype), t)
+                state_sds = add_pod(state_sds)
+                batch_sds = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct((2,) + x.shape, x.dtype),
+                    ins["batch"])
+                state_sh = _state_shardings(pspecs, mesh, pod_prefix=True)
+                bspecs = shd.batch_specs(ins["batch"], batch_axes=("data",))
+                bsh = jax.tree.map(
+                    lambda s: NamedSharding(mesh, P("pod", *tuple(s))),
+                    bspecs, is_leaf=lambda x: isinstance(x, P))
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(state_sh, bsh),
+                    out_shardings=(state_sh,
+                                   NamedSharding(mesh, P("pod"))),
+                    donate_argnums=(0,),
+                ).lower(state_sds, batch_sds)
+            else:
+                state_sh = _state_shardings(pspecs, mesh)
+                step = make_train_step(cfg, INNER,
+                                       grad_accum=plan["grad_accum"],
+                                       q_chunk=plan["q_chunk"], unroll=unroll,
+                                       param_pspecs=pspecs)
+                bspecs = shd.batch_specs(ins["batch"], batch_axes=data_axes)
+                bsh = shd.shardings_of(bspecs, mesh)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(state_sh, bsh),
+                    out_shardings=(state_sh, NamedSharding(mesh, P())),
+                    donate_argnums=(0,),
+                ).lower(state_sds, ins["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, cache_len=shape.seq_len,
+                                     q_chunk=plan["q_chunk"], unroll=unroll)
+            bspecs = shd.batch_specs(ins["batch"], batch_axes=data_axes)
+            bsh = shd.shardings_of(bspecs, mesh)
+            lowered = jax.jit(step, in_shardings=(psh, bsh)).lower(
+                params_sds, ins["batch"])
+        else:  # decode
+            step = make_decode_step(cfg)
+            caches = ins["caches"]
+            batch_sharded = shape.global_batch >= axis_sizes.get("data", 1)
+            data_axis = data_axes if multi_pod else "data"
+            cspecs = shd.cache_specs(
+                caches, batch_sharded=batch_sharded, axis_sizes=axis_sizes,
+                data_axis=data_axis)
+            csh = shd.shardings_of(cspecs, mesh)
+            tok_spec = (P(data_axes) if batch_sharded else P())
+            lowered = jax.jit(
+                step,
+                in_shardings=(psh, NamedSharding(mesh, tok_spec), csh,
+                              NamedSharding(mesh, P())),
+            ).lower(params_sds, ins["token"], caches, ins["pos"])
+        compiled = lowered.compile()
+    rec = _analyze(lowered, compiled, time.time() - t0)
+    rec.update(arch=arch, shape=shape_name, kind=shape.kind,
+               mesh="multi" if multi_pod else "single", plan=plan,
+               n_devices=mesh.devices.size)
+    return rec
+
+
+def lower_outer_exchange(arch: str, mesh, *, compress_int8: bool = False,
+                         method: str = "heloco") -> Dict[str, Any]:
+    """Lower the HeLoCo outer round (the paper's step) on the multi-pod mesh."""
+    cfg = get_config(arch)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    params_sds = abstract_params(cfg)
+    stacked = shd.stacked_axes_tree(params_sds)
+    pspecs = shd.param_specs(params_sds, axis_sizes=axis_sizes)
+    psh = shd.shardings_of(pspecs, mesh)
+    pod_sh = jax.tree.map(lambda s: NamedSharding(mesh, P("pod", *tuple(s))),
+                          pspecs, is_leaf=lambda x: isinstance(x, P))
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        fn = make_outer_exchange(
+            cfg, mesh, h=HeLoCoConfig(),
+            outer_lr=0.7, mu=0.9, method=method, arriving_pod=0,
+            stacked_axes=stacked, compress_int8=compress_int8)
+        mom_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params_sds)
+        wp_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((2,) + x.shape, x.dtype), params_sds)
+        lowered = jax.jit(
+            fn, in_shardings=(psh, psh, pod_sh),
+            out_shardings=(psh, psh, pod_sh),
+        ).lower(params_sds, mom_sds, wp_sds)
+        compiled = lowered.compile()
+    rec = _analyze(lowered, compiled, time.time() - t0)
+    rec.update(arch=arch, shape="outer_exchange", kind="outer",
+               mesh="multi", plan={"compress_int8": compress_int8,
+                                   "method": method},
+               n_devices=mesh.devices.size)
+    return rec
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--outer-exchange", action="store_true",
+                    help="also lower the HeLoCo outer round per arch (multi)")
+    ap.add_argument("--compress-int8", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--plan", default=None,
+                    help='JSON plan overrides, e.g. \'{"grad_accum":1,'
+                         '"remat_group":4,"head_tp":true}\'')
+    ap.add_argument("--tag", default="",
+                    help="suffix for output files (perf iterations)")
+    args = ap.parse_args()
+    overrides = json.loads(args.plan) if args.plan else None
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            ok, why = shape_applicable(cfg, SHAPES[shape_name])
+            for multi in meshes:
+                tag = (f"{arch}__{shape_name}__"
+                       f"{'multi' if multi else 'single'}"
+                       + (f"__{args.tag}" if args.tag else ""))
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    rec = json.load(open(path))
+                    if "error" not in rec:
+                        print(f"HAVE {tag}", flush=True)
+                        continue
+                if not ok:
+                    rec = {"arch": arch, "shape": shape_name, "skipped": why,
+                           "mesh": "multi" if multi else "single"}
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"SKIP {tag}: {why}", flush=True)
+                    continue
+                try:
+                    mesh = make_production_mesh(multi_pod=multi)
+                    rec = lower_cell(arch, shape_name, mesh, multi_pod=multi,
+                                     overrides=overrides)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    mem = rec["memory"]["peak_estimate_bytes"] / 2**30
+                    print(f"OK   {tag}: {rec['compile_seconds']:.1f}s "
+                          f"flops/dev={rec['flops_per_device']:.3e} "
+                          f"peak/dev={mem:.2f}GiB "
+                          f"wire/dev={rec['wire_bytes_per_device']:.3e}B",
+                          flush=True)
+                except Exception as e:
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape_name,
+                                   "mesh": "multi" if multi else "single",
+                                   "error": repr(e)}, f, indent=1)
+                    print(f"FAIL {tag}: {e!r}", flush=True)
+                    traceback.print_exc()
+        if args.outer_exchange:
+            tag = f"{arch}__outer_exchange__multi"
+            try:
+                mesh = make_production_mesh(multi_pod=True)
+                rec = lower_outer_exchange(arch, mesh,
+                                           compress_int8=args.compress_int8)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"OK   {tag}: wire/dev={rec['wire_bytes_per_device']:.3e}B",
+                      flush=True)
+            except Exception as e:
+                print(f"FAIL {tag}: {e!r}", flush=True)
+                traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

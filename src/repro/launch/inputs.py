@@ -1,0 +1,65 @@
+"""Abstract input construction for the dry-run: ShapeDtypeStruct stand-ins
+for every model input / state (weak-type-correct, shardable, no device
+allocation)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+
+PyTree = Any
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs_struct(cfg: ModelConfig, batch: int, seq: int,
+                       with_labels: bool = True) -> Dict[str, S]:
+    """Abstract train/prefill batch for one DiLoCo worker (pod)."""
+    emb = jnp.dtype(cfg.compute_dtype)
+    out: Dict[str, S] = {}
+    if cfg.frontend.kind == "audio":
+        out["features"] = S((batch, seq, cfg.d_model), emb)
+        if with_labels:
+            out["labels"] = S((batch, seq), jnp.int32)
+        return out
+    if cfg.frontend.kind == "vision":
+        npfx = cfg.frontend.n_prefix_tokens
+        out["patches"] = S((batch, npfx, cfg.d_model), emb)
+        out["tokens"] = S((batch, seq - npfx), jnp.int32)
+        if with_labels:
+            out["labels"] = S((batch, seq - npfx), jnp.int32)
+        return out
+    out["tokens"] = S((batch, seq), jnp.int32)
+    if with_labels:
+        out["labels"] = S((batch, seq), jnp.int32)
+    return out
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, cache_len: int) -> PyTree:
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_caches(batch, cache_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All abstract inputs for an (arch x shape) dry-run cell."""
+    if shape.kind == "train":
+        return {"batch": batch_specs_struct(cfg, shape.global_batch,
+                                            shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs_struct(cfg, shape.global_batch,
+                                            shape.seq_len, with_labels=False)}
+    # decode: one new token against a cache of seq_len
+    return {
+        "token": S((shape.global_batch,), jnp.int32),
+        "pos": S((), jnp.int32),
+        "caches": abstract_caches(cfg, shape.global_batch, shape.seq_len),
+    }

@@ -1,0 +1,99 @@
+"""Training launcher.
+
+Two modes:
+  - simulator (default): the asynchronous HeLoCo training engine with
+    heterogeneous virtual-clock workers — the paper's experiment runtime.
+    Any --arch is accepted; pass --smoke to use its reduced config on CPU.
+  - dryrun: defer to repro.launch.dryrun for the production-mesh
+    lower/compile pass (see that module's CLI).
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinygpt-15m --smoke \
+        --method heloco --paces 1,1,6,6,6 --outer 50 --inner 10 \
+        --ckpt-dir /tmp/ck --resume
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.configs import get_config, reduced
+from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
+from repro.async_engine.simulator import AsyncSimulator, make_eval_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinygpt-15m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--method", default="heloco",
+                    choices=["heloco", "mla", "nesterov", "sync_nesterov"])
+    ap.add_argument("--workers", type=int, default=5)
+    ap.add_argument("--paces", default="1,1,1,1,1")
+    ap.add_argument("--outer", type=int, default=50)
+    ap.add_argument("--inner", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--iid", action="store_true")
+    ap.add_argument("--dylu", action="store_true")
+    ap.add_argument("--outer-lr", type=float, default=0.7)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--inner-lr", type=float, default=3e-3)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--drop-stale-after", type=int, default=None)
+    ap.add_argument("--shard-assignment", default="fixed",
+                    choices=["fixed", "flexible"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    model = get_config(args.arch)
+    if args.smoke:
+        model = reduced(model)
+    paces = tuple(float(p) for p in args.paces.split(","))
+    if len(paces) < args.workers:
+        paces = tuple(paces[i % len(paces)] for i in range(args.workers))
+
+    outer_lr = args.outer_lr if args.method != "nesterov" else min(
+        args.outer_lr, 0.07)
+    rc = RunConfig(
+        model=model,
+        inner=InnerOptConfig(lr=args.inner_lr,
+                             warmup_steps=max(args.outer * args.inner // 20, 2),
+                             total_steps=args.outer * args.inner),
+        outer=OuterOptConfig(method=args.method, outer_lr=outer_lr,
+                             momentum=args.momentum,
+                             compression=args.compression,
+                             drop_stale_after=args.drop_stale_after),
+        n_workers=args.workers, inner_steps=args.inner,
+        outer_steps=args.outer, batch_size=args.batch, seq_len=args.seq,
+        worker_paces=paces, non_iid=not args.iid, dylu=args.dylu,
+        shard_assignment=args.shard_assignment, seed=args.seed)
+
+    sim = AsyncSimulator(rc)
+    if args.resume and args.ckpt_dir:
+        latest = ckpt_lib.latest(args.ckpt_dir)
+        if latest:
+            sim.restore(latest)
+            print(f"resumed from {latest} (outer step {sim.server.t})")
+
+    eval_fn = make_eval_fn(sim, batch=8)
+    hist = sim.run(eval_every=args.eval_every, eval_fn=eval_fn,
+                   ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+                   ckpt_dir=args.ckpt_dir)
+    for e in hist.evals:
+        print(f"step {e['step']:5d}  t={e['time']:8.0f}s  "
+              f"loss={e['mean']:.4f}")
+    taus = [a["staleness"] for a in hist.arrivals] or [0]
+    print(f"done: arrivals={len(hist.arrivals)} tokens={hist.tokens} "
+          f"mean_staleness={sum(taus) / len(taus):.2f} "
+          f"comm={hist.comm_bytes / 1e6:.1f}MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,293 @@
+"""GQA attention with a chunked (flash-style) training path and a KV-cache
+serving path.
+
+The training/prefill path never materialises the full (Sq, Skv) score
+matrix: it scans over query chunks, computing each chunk's full score row
+in fp32 (memory: B*H*q_chunk*Skv). On TPU the per-chunk einsum maps onto
+the MXU; the q-chunk loop is `lax.scan` in production and a Python loop
+under ``unroll=True`` (dry-run cost probes, where scan bodies must appear
+once per iteration in the HLO).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _normal, apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": _normal(ks[0], (d, h, hd), s, pd),
+        "wk": _normal(ks[1], (d, kv, hd), s, pd),
+        "wv": _normal(ks[2], (d, kv, hd), s, pd),
+        "wo": _normal(ks[3], (h, hd, d), (h * hd) ** -0.5, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), pd)
+        p["bk"] = jnp.zeros((kv, hd), pd)
+        p["bv"] = jnp.zeros((kv, hd), pd)
+    return p
+
+
+def _constrain_heads(t: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Pin (B,S,H,D) activations to (batch=data, heads=TP). Padding-sharding
+    of non-divisible head counts is legal for intermediates (only jit
+    inputs must divide), which keeps e.g. 28-head models on head-TP instead
+    of falling into resharding storms."""
+    if not cfg.act_model_axis or not cfg.act_batch_axes:
+        return t
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        t, P(tuple(cfg.act_batch_axes), None, cfg.act_model_axis, None))
+
+
+def qkv_project(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = _constrain_heads(q, cfg)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = _constrain_heads(q, cfg)
+    return q, k, v
+
+
+def _chunk_attend(qc: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  q_idx: jnp.ndarray, kv_valid: int | jnp.ndarray,
+                  causal: bool, head_dim: int) -> jnp.ndarray:
+    """One query chunk vs. the full KV. qc: (B,C,KV,G,D), k/v: (B,S,KV,D)."""
+    scale = head_dim ** -0.5
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qc, k).astype(jnp.float32) * scale
+    kv_idx = jnp.arange(k.shape[1])
+    mask = kv_idx[None, :] < kv_valid  # (1, S) or broadcast
+    if causal:
+        mask = mask & (kv_idx[None, :] <= q_idx[:, None])
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+    return jnp.einsum("bkgcs,bskd->bckgd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (training path): custom_vjp that saves only (out, lse) and
+# recomputes scores in the backward — removes the O(Sq*Skv) fp32 softmax
+# residuals that otherwise dominate activation memory.
+# ---------------------------------------------------------------------------
+
+def _flash_chunk_fwd(qc, k, v, q_idx, kv_valid, causal, scale):
+    """qc: (B,C,KV,G,D) -> (out, lse). lse: (B,KV,G,C) fp32."""
+    s = jnp.einsum("bckgd,bskd->bkgcs", qc, k,
+                   preferred_element_type=jnp.float32) * scale
+    kv_idx = jnp.arange(k.shape[1])
+    mask = kv_idx[None, :] < kv_valid
+    if causal:
+        mask = mask & (kv_idx[None, :] <= q_idx[:, None])
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jax.lax.stop_gradient(s.max(-1, keepdims=True))
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    lse = (m + jnp.log(l))[..., 0]
+    out = jnp.einsum("bkgcs,bskd->bckgd", (p / l).astype(qc.dtype), v)
+    return out, lse
+
+
+def _flash_chunk_bwd(qc, k, v, oc, lse, doc, q_idx, kv_valid, causal, scale):
+    """Gradients for one q-chunk: returns (dqc, dk_contrib, dv_contrib)."""
+    s = jnp.einsum("bckgd,bskd->bkgcs", qc, k,
+                   preferred_element_type=jnp.float32) * scale
+    kv_idx = jnp.arange(k.shape[1])
+    mask = kv_idx[None, :] < kv_valid
+    if causal:
+        mask = mask & (kv_idx[None, :] <= q_idx[:, None])
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - lse[..., None])                         # (B,KV,G,C,S)
+    dv = jnp.einsum("bkgcs,bckgd->bskd", p.astype(doc.dtype), doc)
+    dp = jnp.einsum("bckgd,bskd->bkgcs", doc, v,
+                    preferred_element_type=jnp.float32)
+    delta = jnp.einsum("bckgd,bckgd->bkgc", doc.astype(jnp.float32),
+                       oc.astype(jnp.float32))
+    ds = p * (dp - delta[..., None]) * scale                # (B,KV,G,C,S)
+    dqc = jnp.einsum("bkgcs,bskd->bckgd", ds.astype(qc.dtype), k)
+    dk = jnp.einsum("bkgcs,bckgd->bskd", ds.astype(qc.dtype), qc)
+    return dqc, dk, dv
+
+
+def _make_flash(causal: bool, q_chunk: int, q_offset: int, unroll: bool):
+    @jax.custom_vjp
+    def flash(q5, k, v, kv_valid):
+        out, _ = flash_fwd(q5, k, v, kv_valid)
+        return out
+
+    def chunks_of(q5):
+        b, sq, kvh, g, d = q5.shape
+        n = max(1, sq // q_chunk)
+        return q5.reshape(b, n, sq // n, kvh, g, d), n, sq // n
+
+    def flash_fwd(q5, k, v, kv_valid):
+        scale = q5.shape[-1] ** -0.5
+        qs, n, c = chunks_of(q5)
+
+        def one(i):
+            q_idx = q_offset + i * c + jnp.arange(c)
+            return _flash_chunk_fwd(qs[:, i], k, v, q_idx, kv_valid, causal,
+                                    scale)
+
+        if unroll or n == 1:
+            outs, lses = zip(*[one(i) for i in range(n)])
+            out = jnp.stack(outs, 1)
+            lse = jnp.stack(lses, 1)
+        else:
+            out, lse = jax.lax.map(one, jnp.arange(n))
+            out = jnp.moveaxis(out, 0, 1)
+            lse = jnp.moveaxis(lse, 0, 1)
+        # lse: (B, n_chunks, KV, G, C)
+        return out.reshape(q5.shape), (q5, k, v, kv_valid,
+                                       out.reshape(q5.shape), lse)
+
+    def flash_bwd(res, do):
+        q5, k, v, kv_valid, out, lse = res
+        scale = q5.shape[-1] ** -0.5
+        qs, n, c = chunks_of(q5)
+        os_ = out.reshape(qs.shape)
+        dos = do.reshape(qs.shape)
+
+        def one(i, dk, dv):
+            q_idx = q_offset + i * c + jnp.arange(c)
+            dqc, dkc, dvc = _flash_chunk_bwd(
+                qs[:, i], k, v, os_[:, i], lse[:, i], dos[:, i], q_idx,
+                kv_valid, causal, scale)
+            return dqc, dk + dkc.astype(dk.dtype), dv + dvc.astype(dv.dtype)
+
+        dk0 = jnp.zeros(k.shape, jnp.float32)
+        dv0 = jnp.zeros(v.shape, jnp.float32)
+        if unroll or n == 1:
+            dqs = []
+            dk, dv = dk0, dv0
+            for i in range(n):
+                dqc, dk, dv = one(i, dk, dv)
+                dqs.append(dqc)
+            dq = jnp.stack(dqs, 1)
+        else:
+            def body(carry, i):
+                dk, dv = carry
+                dqc, dk, dv = one(i, dk, dv)
+                return (dk, dv), dqc
+            (dk, dv), dq = jax.lax.scan(body, (dk0, dv0), jnp.arange(n))
+            dq = jnp.moveaxis(dq, 0, 1)
+        return (dq.reshape(q5.shape), dk.astype(k.dtype), dv.astype(v.dtype),
+                None)
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool, q_offset: int = 0,
+                    kv_valid: Optional[jnp.ndarray] = None,
+                    q_chunk: int = 128, unroll: bool = False) -> jnp.ndarray:
+    """Memory-lean attention: q (B,Sq,H,D), k/v (B,Skv,KV,D)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    q5 = q.reshape(b, sq, kvh, h // kvh, hd)
+    if kv_valid is None:
+        kv_valid = jnp.asarray(k.shape[1], jnp.int32)
+    q_chunk = min(q_chunk, sq)
+    if sq % q_chunk != 0:
+        q_chunk = sq
+    fn = _make_flash(causal, q_chunk, q_offset, unroll)
+    out = fn(q5, k, v, jnp.asarray(kv_valid))
+    return out.reshape(b, sq, h, hd)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+           causal: bool, cfg: ModelConfig, q_offset: int = 0,
+           kv_valid: Optional[jnp.ndarray] = None,
+           q_chunk: int = 128, unroll: bool = False,
+           use_flash: bool = True) -> jnp.ndarray:
+    """q: (B,Sq,H,D); k,v: (B,Skv,KV,D) -> (B,Sq,H,D).
+
+    use_flash=True routes through the custom_vjp flash path (O(Sq) softmax
+    residuals); use_flash=False is the naive reference used by tests.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if use_flash:
+        return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_valid=kv_valid, q_chunk=q_chunk,
+                               unroll=unroll)
+    if kv_valid is None:
+        kv_valid = k.shape[1]
+    qg = q.reshape(b, sq, kvh, g, hd)
+    if sq <= q_chunk:
+        q_idx = q_offset + jnp.arange(sq)
+        out = _chunk_attend(qg, k, v, q_idx, kv_valid, causal, hd)
+        return out.reshape(b, sq, h, hd)
+    n_chunks = sq // q_chunk
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    qg = qg.reshape(b, n_chunks, q_chunk, kvh, g, hd)
+
+    def body(i):
+        q_idx = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        return _chunk_attend(qg[:, i], k, v, q_idx, kv_valid, causal, hd)
+
+    if unroll:
+        out = jnp.stack([body(i) for i in range(n_chunks)], axis=1)
+    else:
+        out = jax.lax.map(lambda i: body(i), jnp.arange(n_chunks))  # (n,B,C,KV,G,D)
+        out = jnp.moveaxis(out, 0, 1)
+    return out.reshape(b, sq, h, hd)
+
+
+def attn_output(p: Params, ctx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(ctx.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (serving)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def cache_write(cache: Dict[str, jnp.ndarray], k_new: jnp.ndarray,
+                v_new: jnp.ndarray, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Write (B, S_new, KV, D) at position `pos` (scalar int32)."""
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1),
+    }
+
+
+def decode_attend(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                  pos: jnp.ndarray, cfg: ModelConfig
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode: x (B,1,d), cache (B,S,KV,D), pos scalar."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k_new, v_new = qkv_project(p, x, cfg, positions)
+    cache = cache_write(cache, k_new, v_new, pos)
+    ctx = attend(q, cache["k"].astype(x.dtype), cache["v"].astype(x.dtype),
+                 causal=False, cfg=cfg, kv_valid=pos + 1)
+    return attn_output(p, ctx), cache

@@ -1,0 +1,185 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+All functions are pure; params are plain dict pytrees. Compute runs in
+``cfg.compute_dtype``; params are stored in ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def constrain_acts(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Pin activations at block boundaries (GSPMD hint). No-op unless
+    cfg.act_batch_axes is set (the scale/dry-run path). With
+    cfg.seq_parallel the seq dim is additionally sharded over the TP axis
+    (Megatron-SP): XLA then materialises reduce-scatter/all-gather pairs
+    around each block instead of full all-reduces."""
+    if not cfg.act_batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    seq_axis = (cfg.act_model_axis or "model") if (
+        cfg.seq_parallel and x.ndim >= 3) else None
+    spec = P(tuple(cfg.act_batch_axes), seq_axis,
+             *((None,) * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rmsnorm_gated(x: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    """Mamba2-style gated RMSNorm: norm(x * silu(z)) * scale."""
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    var = (xf ** 2).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S) int32. Half-split rotation."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                            # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d: int, ff: int) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = ff ** -0.5
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p = {
+            "w_gate": _normal(ks[0], (d, ff), s_in, pd),
+            "w_up": _normal(ks[1], (d, ff), s_in, pd),
+            "w_down": _normal(ks[2], (ff, d), s_out, pd),
+        }
+    else:  # gelu
+        p = {
+            "w_in": _normal(ks[0], (d, ff), s_in, pd),
+            "w_down": _normal(ks[2], (ff, d), s_out, pd),
+        }
+    if cfg.mlp_bias:
+        if cfg.mlp_act in ("swiglu", "geglu"):
+            p["b_gate"] = jnp.zeros((ff,), pd)
+            p["b_up"] = jnp.zeros((ff,), pd)
+        else:
+            p["b_in"] = jnp.zeros((ff,), pd)
+        p["b_down"] = jnp.zeros((d,), pd)
+    return p
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        if cfg.mlp_bias:
+            g = g + p["b_gate"].astype(dt)
+            u = u + p["b_up"].astype(dt)
+        act = jax.nn.silu(g) if cfg.mlp_act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = x @ p["w_in"].astype(dt)
+        if cfg.mlp_bias:
+            h = h + p["b_in"].astype(dt)
+        h = jax.nn.gelu(h)
+    out = h @ p["w_down"].astype(dt)
+    if cfg.mlp_bias:
+        out = out + p["b_down"].astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    p = {"tok": _normal(ks[0], (cfg.vocab_size, cfg.d_model), 0.02, pd)}
+    if not cfg.tied_embeddings:
+        p["lm_head"] = _normal(ks[1], (cfg.d_model, cfg.vocab_size),
+                               cfg.d_model ** -0.5, pd)
+    return p
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = p["tok"].astype(dtype_of(cfg))[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def lm_logits(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tied_embeddings:
+        w = p["tok"].astype(x.dtype).T
+    else:
+        w = p["lm_head"].astype(x.dtype)
+    return x @ w
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy, computed in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

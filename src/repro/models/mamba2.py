@@ -1,0 +1,200 @@
+"""Mamba2 (State-Space Duality) block.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of length Q; each chunk computes its quadratic intra-chunk part and
+the recurrence over chunk states is a `lax.scan` carrying the SSM state
+(B, H, P, N). Decode is the exact single-step recurrence. Sub-quadratic in
+sequence length; the per-chunk einsums are MXU-shaped on TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _normal
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return dict(d_inner=d_inner, n_heads=n_heads, conv_dim=conv_dim,
+                d_state=s.d_state, head_dim=s.head_dim, n_groups=s.n_groups,
+                conv_kernel=s.conv_kernel)
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    dm = ssm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * dm["d_inner"] + 2 * dm["n_groups"] * dm["d_state"] + dm["n_heads"]
+    p = {
+        "w_in": _normal(ks[0], (d, in_dim), d ** -0.5, pd),
+        "conv_w": _normal(ks[1], (dm["conv_kernel"], dm["conv_dim"]), 0.5, pd),
+        "conv_b": jnp.zeros((dm["conv_dim"],), pd),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, dm["n_heads"])).astype(jnp.float32),
+        "d_skip": jnp.ones((dm["n_heads"],), jnp.float32),
+        "dt_bias": jnp.zeros((dm["n_heads"],), jnp.float32),
+        "norm_scale": jnp.ones((dm["d_inner"],), pd),
+        "w_out": _normal(ks[2], (dm["d_inner"], d), dm["d_inner"] ** -0.5, pd),
+    }
+    return p
+
+
+def _split_in(proj: jnp.ndarray, dm: Dict[str, int]):
+    di, gn, h = dm["d_inner"], dm["n_groups"] * dm["d_state"], dm["n_heads"]
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * gn]
+    dt = proj[..., di + di + 2 * gn:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _conv1d(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+            cache: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over seq. xbc: (B,S,C); w: (K,C).
+
+    Returns (out (B,S,C), new_cache (B,K-1,C)). `cache` holds the last K-1
+    inputs from the previous call (decode), zeros otherwise.
+    """
+    k = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    ext = jnp.concatenate([cache.astype(xbc.dtype), xbc], axis=1)   # (B, S+K-1, C)
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + ext[:, i: i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+    out = jax.nn.silu(out + b.astype(xbc.dtype))
+    new_cache = ext[:, ext.shape[1] - (k - 1):]
+    return out, new_cache
+
+
+def _ssd_chunk(carry, inputs, *, head_dim: int):
+    """One SSD chunk. carry: state (B,H,P,N) fp32. inputs per chunk:
+    x (B,L,H,P), dt (B,L,H) fp32, A (H,) fp32, Bm/Cm (B,L,G,N)."""
+    state = carry
+    x, dt, a, bm, cm = inputs
+    b, l, h, p = x.shape
+    g = bm.shape[2]
+    rep = h // g
+    dt_a = dt * a[None, None, :]                                   # (B,L,H) <=0
+    cum = jnp.cumsum(dt_a, axis=1)                                 # (B,L,H)
+    # --- inter-chunk: contribution of carried state ---
+    cm_h = jnp.repeat(cm, rep, axis=2)                             # (B,L,H,N)
+    bm_h = jnp.repeat(bm, rep, axis=2)
+    decay_in = jnp.exp(cum)                                        # (B,L,H)
+    y_inter = jnp.einsum("blhn,bhpn->blhp", cm_h * decay_in[..., None], state)
+    # --- intra-chunk (quadratic in L) ---
+    seg = cum[:, :, None, :] - cum[:, None, :, :]                  # (B,L,M,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    seg = jnp.where(mask[None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)                                           # (B,L,M,H)
+    scores = jnp.einsum("blhn,bmhn->blmh", cm_h, bm_h)             # (B,L,M,H)
+    w = scores * decay * dt[:, None, :, :]                         # weight for x_m
+    y_intra = jnp.einsum("blmh,bmhp->blhp", w.astype(x.dtype), x)
+    # --- state update ---
+    decay_out = jnp.exp(cum[:, -1:, :] - cum)                      # (B,L,H)
+    contrib = jnp.einsum("blhn,blhp->bhpn",
+                         (bm_h * (decay_out * dt)[..., None]).astype(jnp.float32),
+                         x.astype(jnp.float32))
+    state = state * jnp.exp(cum[:, -1])[:, :, None, None] + contrib
+    return state, (y_inter.astype(x.dtype) + y_intra)
+
+
+def ssd_forward(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                bm: jnp.ndarray, cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                unroll: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,H,P); dt: (B,S,H) fp32 (post-softplus); bm/cm: (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32)."""
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def reshape_c(t):
+        return t.reshape((t.shape[0], nc, chunk) + t.shape[2:])
+
+    xs = (reshape_c(x), reshape_c(dt), a, reshape_c(bm), reshape_c(cm))
+    step = lambda carry, i: _ssd_chunk(
+        carry, (xs[0][:, i], xs[1][:, i], xs[2], xs[3][:, i], xs[4][:, i]),
+        head_dim=p)
+    if unroll or nc == 1:
+        state = init_state
+        ys = []
+        for i in range(nc):
+            state, y = step(state, i)
+            ys.append(y)
+        y = jnp.stack(ys, axis=1)
+    else:
+        state, y = jax.lax.scan(step, init_state, jnp.arange(nc))
+        y = jnp.moveaxis(y, 0, 1)                                  # (B,nc,L,H,P)
+    return y.reshape(b, s, h, p), state
+
+
+def apply_mamba2(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                 state: Optional[Dict[str, jnp.ndarray]] = None,
+                 unroll: bool = False, return_state: bool = False
+                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full Mamba2 mixer. x: (B,S,d). If `state` is given (decode), uses and
+    returns {"ssm": (B,H,P,N), "conv": (B,K-1,C)}; S must be 1 then.
+    ``return_state=True`` (prefill) returns the end-of-sequence state."""
+    from repro.models.layers import rmsnorm_gated
+    dm = ssm_dims(cfg)
+    dt_ = x.dtype
+    proj = x @ p["w_in"].astype(dt_)
+    z, xbc, dt_raw = _split_in(proj, dm)
+    conv_cache = state["conv"] if state is not None else None
+    xbc, new_conv = _conv1d(xbc, p["conv_w"], p["conv_b"], conv_cache)
+    di = dm["d_inner"]
+    gn = dm["n_groups"] * dm["d_state"]
+    xs = xbc[..., :di]
+    bm = xbc[..., di: di + gn].reshape(x.shape[0], x.shape[1], dm["n_groups"], dm["d_state"])
+    cm = xbc[..., di + gn:].reshape(x.shape[0], x.shape[1], dm["n_groups"], dm["d_state"])
+    h, hd = dm["n_heads"], dm["head_dim"]
+    xh = xs.reshape(x.shape[0], x.shape[1], h, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                         # (H,) < 0
+
+    if state is not None:  # exact recurrent decode (S == 1)
+        s0 = state["ssm"]
+        dta = jnp.exp(dt[:, 0] * a[None, :])                         # (B,H)
+        bm_h = jnp.repeat(bm[:, 0], h // dm["n_groups"], axis=1)     # (B,H,N)
+        cm_h = jnp.repeat(cm[:, 0], h // dm["n_groups"], axis=1)
+        contrib = jnp.einsum("bhn,bhp->bhpn", bm_h.astype(jnp.float32) * dt[:, 0][..., None],
+                             xh[:, 0].astype(jnp.float32))
+        s1 = s0 * dta[:, :, None, None] + contrib
+        y = jnp.einsum("bhpn,bhn->bhp", s1, cm_h.astype(jnp.float32))
+        y = y[:, None].astype(dt_)
+        new_state = {"ssm": s1, "conv": new_conv.astype(jnp.bfloat16)}
+    else:
+        y, s1 = ssd_forward(xh, dt, a, bm, cm, cfg.ssm.chunk_size, unroll=unroll)
+        new_state = ({"ssm": s1, "conv": new_conv.astype(jnp.bfloat16)}
+                     if return_state else None)
+    y = y + xh * p["d_skip"][None, None, :, None].astype(dt_)
+    y = y.reshape(x.shape[0], x.shape[1], di)
+    y = rmsnorm_gated(y, z, p["norm_scale"])
+    out = y @ p["w_out"].astype(dt_)
+    return out, new_state
+
+
+def apply_mamba2_with_final_state(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                                  unroll: bool = False):
+    return apply_mamba2(p, x, cfg, unroll=unroll, return_state=True)
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    dm = ssm_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, dm["n_heads"], dm["head_dim"], dm["d_state"]), jnp.float32),
+        "conv": jnp.zeros((batch, dm["conv_kernel"] - 1, dm["conv_dim"]), jnp.bfloat16),
+    }

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with capacity-based
+einsum dispatch (GSPMD-friendly; experts shard over the `model` mesh axis).
+
+Tokens are processed in groups of ``cfg.moe.group_size`` (scanned in
+production, Python loop under ``unroll=True``) so the one-hot dispatch
+tensor (g*k, E, C) stays small. Router runs in fp32; an auxiliary
+load-balancing loss (Switch-style) is returned for logging / training.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _normal
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    e, ff = cfg.moe.n_experts, cfg.moe.expert_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {
+        "router": _normal(ks[0], (d, e), 0.02, jnp.float32),
+        "w_gate": _normal(ks[1], (e, d, ff), s_in, pd),
+        "w_up": _normal(ks[2], (e, d, ff), s_in, pd),
+        "w_down": _normal(ks[3], (e, ff, d), s_out, pd),
+    }
+    if cfg.moe.shared_expert:
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _normal(ks2[0], (d, ff), s_in, pd),
+            "w_up": _normal(ks2[1], (d, ff), s_in, pd),
+            "w_down": _normal(ks2[2], (ff, d), s_out, pd),
+        }
+    return p
+
+
+def expert_capacity(cfg: ModelConfig, group: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.top_k * group / m.n_experts * m.capacity_factor))
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def _group_moe(p: Params, xg: jnp.ndarray, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """xg: (g, d) -> (out (g, d), aux loss scalar)."""
+    m = cfg.moe
+    g, d = xg.shape
+    e, k = m.n_experts, m.top_k
+    cap = expert_capacity(cfg, g)
+    dt = xg.dtype
+
+    logits = xg.astype(jnp.float32) @ p["router"]          # (g, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                  # (g, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss.
+    density = jax.nn.one_hot(top_i[:, 0], e).mean(0)
+    density_prob = probs.mean(0)
+    aux = e * jnp.sum(density * density_prob)
+
+    sel = jax.nn.one_hot(top_i.reshape(-1), e, dtype=jnp.int32)   # (g*k, E)
+    pos = jnp.cumsum(sel, axis=0) - sel                            # (g*k, E)
+    pos = (pos * sel).sum(-1)                                      # (g*k,)
+    within = pos < cap
+    expert_of = top_i.reshape(-1)
+    gate_of = jnp.where(within, top_p.reshape(-1), 0.0)
+    x_rep = jnp.repeat(xg, k, axis=0)                              # (g*k, d)
+
+    if m.dispatch == "einsum":
+        # one-hot matmul dispatch: O(T*E*C*d) but purely dense (MXU-shaped)
+        oh_e = (jax.nn.one_hot(expert_of, e, dtype=dt)
+                * within[:, None].astype(dt))
+        oh_c = jax.nn.one_hot(jnp.minimum(pos, cap - 1), cap, dtype=dt)
+        dispatch = oh_e[:, :, None] * oh_c[:, None, :]             # (g*k, E, C)
+        expert_in = jnp.einsum("tec,td->ecd", dispatch, x_rep)     # (E, C, d)
+    else:
+        # scatter dispatch: O(T*d). Slots are unique among within-capacity
+        # entries, so scatter-add has no collisions.
+        slot = expert_of * cap + jnp.minimum(pos, cap - 1)         # (g*k,)
+        contrib = jnp.where(within[:, None], x_rep, 0).astype(dt)
+        expert_in = (jnp.zeros((e * cap, d), dt).at[slot].add(contrib)
+                     .reshape(e, cap, d))
+
+    h_gate = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"].astype(dt))
+    h_up = jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"].astype(dt))
+    h = jax.nn.silu(h_gate) * h_up
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+
+    if m.dispatch == "einsum":
+        combine = dispatch * gate_of[:, None, None].astype(dt)     # (g*k, E, C)
+        out = jnp.einsum("tec,ecd->td", combine, expert_out)       # (g*k, d)
+    else:
+        gathered = expert_out.reshape(e * cap, d)[slot]            # (g*k, d)
+        out = gathered * (gate_of * within).astype(dt)[:, None]
+    out = out.reshape(g, k, d).sum(1)
+
+    if m.shared_expert:
+        sp = p["shared"]
+        sh = jax.nn.silu(xg @ sp["w_gate"].astype(dt)) * (xg @ sp["w_up"].astype(dt))
+        out = out + sh @ sp["w_down"].astype(dt)
+    return out, aux
+
+
+def apply_moe(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              unroll: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux). Groups tokens and dispatches."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    t = flat.shape[0]
+    gsz = min(cfg.moe.group_size, t)
+    n_groups = t // gsz
+    assert t % gsz == 0, (t, gsz)
+    groups = flat.reshape(n_groups, gsz, d)
+    if cfg.moe.group_mode == "vmap" and n_groups > 1:
+        out, auxs = jax.vmap(lambda xg: _group_moe(p, xg, cfg))(groups)
+        aux = auxs.mean()
+    elif unroll or n_groups == 1:
+        outs, auxs = zip(*[_group_moe(p, groups[i], cfg) for i in range(n_groups)])
+        out = jnp.stack(outs)
+        aux = jnp.stack(auxs).mean()
+    else:
+        out, auxs = jax.lax.map(lambda xg: _group_moe(p, xg, cfg), groups)
+        aux = auxs.mean()
+    return out.reshape(b, s, d), aux

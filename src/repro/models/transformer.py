@@ -1,0 +1,504 @@
+"""Model assembly: composable block stacks for every assigned architecture.
+
+One functional `Model` facade per ModelConfig with:
+  - ``init(key)``            -> params pytree
+  - ``loss(params, batch)``  -> (scalar loss, aux dict)   [train forward]
+  - ``prefill(params, batch)`` -> (last-token logits, caches)
+  - ``decode(params, token, caches, pos)`` -> (logits, caches)
+
+Families:
+  dense / moe / audio / vlm : homogeneous attention(+MLP|MoE) stack,
+                              `lax.scan` over stacked layer params.
+  hybrid (zamba2)           : scan over super-blocks of `shared_attn_every`
+                              Mamba2 layers + one shared attention block.
+  ssm (xlstm)               : unrolled mixed mLSTM/sLSTM stack.
+
+``unroll=True`` replaces every lax.scan/map with Python loops — used only
+by the dry-run cost probes so HLO FLOPs count each iteration.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    apply_mlp, apply_norm, constrain_acts, cross_entropy, dtype_of,
+    embed_tokens, init_embed, init_mlp, init_norm, lm_logits,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Attention(+MLP/MoE) block
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "norm1": init_norm(cfg, cfg.d_model),
+        "attn": attn_lib.init_attention(ks[0], cfg),
+    }
+    if not cfg.parallel_block:
+        p["norm2"] = init_norm(cfg, cfg.d_model)
+    if cfg.block_kind == "moe":
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def apply_attn_block(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                     positions: jnp.ndarray, unroll: bool = False,
+                     q_chunk: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/prefill forward without cache. Returns (x', aux)."""
+    h = apply_norm(p["norm1"], x, cfg)
+    q, k, v = attn_lib.qkv_project(p["attn"], h, cfg, positions)
+    ctx = attn_lib.attend(q, k, v, causal=cfg.causal, cfg=cfg,
+                          q_chunk=q_chunk, unroll=unroll)
+    a = attn_lib.attn_output(p["attn"], ctx)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        if cfg.block_kind == "moe":
+            mo, aux = moe_lib.apply_moe(p["moe"], h, cfg, unroll=unroll)
+        else:
+            mo = apply_mlp(p["mlp"], h, cfg)
+        return x + a + mo, aux
+    x = x + a
+    h2 = apply_norm(p["norm2"], x, cfg)
+    if cfg.block_kind == "moe":
+        mo, aux = moe_lib.apply_moe(p["moe"], h2, cfg, unroll=unroll)
+    else:
+        mo = apply_mlp(p["mlp"], h2, cfg)
+    return x + mo, aux
+
+
+def prefill_attn_block(p, x, cfg, *, positions, cache_len: int,
+                       unroll: bool = False, q_chunk: int = 128):
+    """Forward that also builds the KV cache (padded to cache_len)."""
+    h = apply_norm(p["norm1"], x, cfg)
+    q, k, v = attn_lib.qkv_project(p["attn"], h, cfg, positions)
+    ctx = attn_lib.attend(q, k, v, causal=cfg.causal, cfg=cfg,
+                          q_chunk=q_chunk, unroll=unroll)
+    a = attn_lib.attn_output(p["attn"], ctx)
+    cache = attn_lib.init_kv_cache(cfg, x.shape[0], cache_len, dtype=x.dtype)
+    cache = attn_lib.cache_write(cache, k, v, 0)
+    if cfg.parallel_block:
+        mo = (moe_lib.apply_moe(p["moe"], h, cfg, unroll=unroll)[0]
+              if cfg.block_kind == "moe" else apply_mlp(p["mlp"], h, cfg))
+        return x + a + mo, cache
+    x = x + a
+    h2 = apply_norm(p["norm2"], x, cfg)
+    mo = (moe_lib.apply_moe(p["moe"], h2, cfg, unroll=unroll)[0]
+          if cfg.block_kind == "moe" else apply_mlp(p["mlp"], h2, cfg))
+    return x + mo, cache
+
+
+def decode_attn_block(p, x, cfg, *, cache, pos):
+    h = apply_norm(p["norm1"], x, cfg)
+    a, cache = attn_lib.decode_attend(p["attn"], h, cache, pos, cfg)
+    if cfg.parallel_block:
+        mo = (moe_lib.apply_moe(p["moe"], h, cfg)[0]
+              if cfg.block_kind == "moe" else apply_mlp(p["mlp"], h, cfg))
+        return x + a + mo, cache
+    x = x + a
+    h2 = apply_norm(p["norm2"], x, cfg)
+    mo = (moe_lib.apply_moe(p["moe"], h2, cfg)[0]
+          if cfg.block_kind == "moe" else apply_mlp(p["mlp"], h2, cfg))
+    return x + mo, cache
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------- init ----------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_embed, k_blocks, k_shared = jax.random.split(key, 3)
+        params: Params = {"embed": init_embed(k_embed, cfg),
+                          "final_norm": init_norm(cfg, cfg.d_model)}
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            keys = jax.random.split(k_blocks, cfg.n_layers)
+            if cfg.scan_layers:
+                params["blocks"] = jax.vmap(
+                    lambda k: init_attn_block(k, cfg))(keys)
+            else:
+                params["blocks_list"] = {
+                    f"layer_{i:02d}": init_attn_block(keys[i], cfg)
+                    for i in range(cfg.n_layers)}
+        elif cfg.family == "hybrid":
+            per = cfg.shared_attn_every
+            n_super = cfg.n_layers // per
+            keys = jax.random.split(k_blocks, cfg.n_layers).reshape(n_super, per, 2)
+            def init_unit(k):
+                return {"norm": init_norm(cfg, cfg.d_model),
+                        "mamba": m2.init_mamba2(k, cfg)}
+            params["super"] = jax.vmap(jax.vmap(init_unit))(keys)
+            params["shared"] = init_attn_block(k_shared, cfg)
+        elif cfg.family == "ssm":
+            keys = jax.random.split(k_blocks, cfg.n_layers)
+            blocks = {}
+            for i in range(cfg.n_layers):
+                kind = "slstm" if i in cfg.xlstm.slstm_at else "mlstm"
+                init = xl.init_slstm if kind == "slstm" else xl.init_mlstm
+                blocks[f"layer_{i:02d}"] = {
+                    "norm": init_norm(cfg, cfg.d_model),
+                    kind: init(keys[i], cfg)}
+            params["blocks_list"] = blocks
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    # ---------------- embedding front ----------------
+
+    def _embed(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (x (B,S,d), positions (B,S))."""
+        cfg = self.cfg
+        if cfg.frontend.kind == "audio":
+            x = batch["features"].astype(dtype_of(cfg))
+        elif cfg.frontend.kind == "vision":
+            prefix = batch["patches"].astype(dtype_of(cfg))
+            tok = embed_tokens(params["embed"], batch["tokens"], cfg)
+            x = jnp.concatenate([prefix, tok], axis=1)
+        else:
+            x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return constrain_acts(x, cfg), positions
+
+    # ---------------- train forward ----------------
+
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray], *,
+             unroll: bool = False, q_chunk: int = 128
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        aux_sum = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            block = functools.partial(apply_attn_block, cfg=cfg,
+                                      positions=positions, unroll=unroll,
+                                      q_chunk=q_chunk)
+            k = max(cfg.remat_group, 1)
+
+            def group(gp, xc, ac):
+                """k consecutive layers; remat checkpoints the whole group
+                (store 1 input per k layers -> activation memory / k)."""
+                for j in range(k):
+                    lp = jax.tree.map(lambda t: t[j], gp) if k > 1 else gp
+                    xn, a = block(lp, xc)
+                    xc = constrain_acts(xn, cfg)
+                    ac = ac + a
+                return xc, ac
+
+            grp = jax.checkpoint(group) if cfg.remat else group
+            if cfg.scan_layers and not unroll:
+                stacked = params["blocks"]
+                if k > 1:
+                    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+                    stacked = jax.tree.map(
+                        lambda t: t.reshape((cfg.n_layers // k, k)
+                                            + t.shape[1:]), stacked)
+                def body(carry, gp):
+                    xc, ac = carry
+                    xn, an = grp(gp, xc, ac)
+                    return (xn, an), None
+                (x, aux_sum), _ = jax.lax.scan(body, (x, aux_sum), stacked)
+            else:
+                blocks = (params["blocks_list"] if "blocks_list" in params
+                          else None)
+                assert cfg.n_layers % k == 0 or blocks is not None
+                if blocks is not None:
+                    for i in range(cfg.n_layers):
+                        lp = blocks[f"layer_{i:02d}"]
+                        xb = (jax.checkpoint(block) if cfg.remat else block)
+                        x, a = xb(lp, x)
+                        x = constrain_acts(x, cfg)
+                        aux_sum = aux_sum + a
+                else:
+                    for i in range(cfg.n_layers // k):
+                        gp = jax.tree.map(
+                            lambda t: t[i * k:(i + 1) * k] if k > 1
+                            else t[i], params["blocks"])
+                        x, aux_sum = grp(gp, x, aux_sum)
+        elif cfg.family == "hybrid":
+            x = self._hybrid_forward(params, x, positions, unroll, q_chunk)
+        elif cfg.family == "ssm":
+            x = self._xlstm_forward(params, x, unroll)
+
+        x = apply_norm(params["final_norm"], x, cfg)
+        if cfg.frontend.kind == "vision":
+            x = x[:, cfg.frontend.n_prefix_tokens:]
+        logits = lm_logits(params["embed"], x, cfg)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = (labels >= 0)
+        loss = cross_entropy(logits, jnp.maximum(labels, 0), mask)
+        aux = {"aux_loss": aux_sum / max(cfg.n_layers, 1)}
+        if cfg.is_moe:
+            loss = loss + 0.01 * aux["aux_loss"]
+        return loss, aux
+
+    def _hybrid_forward(self, params, x, positions, unroll, q_chunk):
+        cfg = self.cfg
+        per = cfg.shared_attn_every
+        n_super = cfg.n_layers // per
+
+        def mamba_unit(up, xc):
+            h = apply_norm(up["norm"], xc, cfg)
+            y, _ = m2.apply_mamba2(up["mamba"], h, cfg, unroll=unroll)
+            return xc + y
+
+        def super_block(sp, xc):
+            if unroll:
+                for j in range(per):
+                    up = jax.tree.map(lambda t: t[j], sp)
+                    xc = constrain_acts(mamba_unit(up, xc), cfg)
+            else:
+                xc, _ = jax.lax.scan(
+                    lambda c, up: (constrain_acts(mamba_unit(up, c), cfg),
+                                   None), xc, sp)
+            xc, _ = apply_attn_block(params["shared"], xc, cfg,
+                                     positions=positions, unroll=unroll,
+                                     q_chunk=q_chunk)
+            return constrain_acts(xc, cfg)
+
+        sb = jax.checkpoint(super_block) if cfg.remat else super_block
+        if unroll:
+            for i in range(n_super):
+                sp = jax.tree.map(lambda t: t[i], params["super"])
+                x = sb(sp, x)
+        else:
+            x, _ = jax.lax.scan(lambda c, sp: (sb(sp, c), None),
+                                x, params["super"])
+        return x
+
+    def _xlstm_forward(self, params, x, unroll):
+        cfg = self.cfg
+        for i in range(cfg.n_layers):
+            lp = params["blocks_list"][f"layer_{i:02d}"]
+            kind = "slstm" if i in cfg.xlstm.slstm_at else "mlstm"
+
+            def blk(lp_, x_):
+                h = apply_norm(lp_["norm"], x_, cfg)
+                if kind == "slstm":
+                    y, _ = xl.apply_slstm_block(lp_["slstm"], h, cfg,
+                                                unroll=unroll)
+                else:
+                    y, _ = xl.apply_mlstm_block(lp_["mlstm"], h, cfg,
+                                                unroll=unroll)
+                return x_ + y
+
+            if cfg.remat:
+                blk = jax.checkpoint(blk)
+            x = constrain_acts(blk(lp, x), cfg)
+        return x
+
+    # ---------------- serving: prefill ----------------
+
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray], *,
+                cache_len: Optional[int] = None, unroll: bool = False,
+                q_chunk: int = 128):
+        """Returns (last-position logits, caches)."""
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        s = x.shape[1]
+        cache_len = cache_len or s
+
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            block = functools.partial(prefill_attn_block, cfg=cfg,
+                                      positions=positions, cache_len=cache_len,
+                                      unroll=unroll, q_chunk=q_chunk)
+            if cfg.scan_layers and not unroll:
+                def body(xc, lp):
+                    xn, cache = block(lp, xc)
+                    return xn, cache
+                x, caches = jax.lax.scan(body, x, params["blocks"])
+            else:
+                caches = {}
+                for i in range(cfg.n_layers):
+                    lp = (params["blocks_list"][f"layer_{i:02d}"]
+                          if "blocks_list" in params
+                          else jax.tree.map(lambda t: t[i], params["blocks"]))
+                    x, c = block(lp, x)
+                    caches[f"layer_{i:02d}"] = c
+        elif cfg.family == "hybrid":
+            x, caches = self._hybrid_prefill(params, x, positions, cache_len,
+                                             unroll, q_chunk)
+        elif cfg.family == "ssm":
+            x, caches = self._xlstm_prefill(params, x, unroll)
+
+        x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+        logits = lm_logits(params["embed"], x, cfg)[:, 0]
+        return logits, caches
+
+    def _hybrid_prefill(self, params, x, positions, cache_len, unroll, q_chunk):
+        cfg = self.cfg
+        per = cfg.shared_attn_every
+        n_super = cfg.n_layers // per
+
+        # Prefill needs the final SSM state of every mamba layer plus the
+        # shared block's KV cache.
+        def super_block_with_states(sp, xc):
+            def body(c, up):
+                h = apply_norm(up["norm"], c, cfg)
+                # run ssd and capture final state
+                y, st = self._mamba_with_state(up["mamba"], h, cfg, unroll)
+                return c + y, st
+            if unroll:
+                sts = []
+                for j in range(per):
+                    up = jax.tree.map(lambda t: t[j], sp)
+                    xc, st = body(xc, up)
+                    sts.append(st)
+                sts = jax.tree.map(lambda *t: jnp.stack(t), *sts)
+            else:
+                xc, sts = jax.lax.scan(body, xc, sp)
+            xn, cache = prefill_attn_block(params["shared"], xc, cfg,
+                                           positions=positions,
+                                           cache_len=cache_len,
+                                           unroll=unroll, q_chunk=q_chunk)
+            return xn, (sts, cache)
+
+        if unroll:
+            caches = []
+            for i in range(n_super):
+                sp = jax.tree.map(lambda t: t[i], params["super"])
+                x, c = super_block_with_states(sp, x)
+                caches.append(c)
+            caches = jax.tree.map(lambda *t: jnp.stack(t), *caches)
+        else:
+            x, caches = jax.lax.scan(
+                lambda c, sp: super_block_with_states(sp, c), x, params["super"])
+        return x, caches
+
+    def _mamba_with_state(self, mp, h, cfg, unroll):
+        """Mamba2 forward that also returns the post-sequence SSM+conv state."""
+        return m2.apply_mamba2_with_final_state(mp, h, cfg, unroll=unroll)
+
+    def _xlstm_prefill(self, params, x, unroll):
+        cfg = self.cfg
+        caches = {}
+        for i in range(cfg.n_layers):
+            lp = params["blocks_list"][f"layer_{i:02d}"]
+            kind = "slstm" if i in cfg.xlstm.slstm_at else "mlstm"
+            h = apply_norm(lp["norm"], x, cfg)
+            if kind == "slstm":
+                y, st = xl.apply_slstm_block_with_state(lp["slstm"], h, cfg,
+                                                        unroll=unroll)
+            else:
+                y, st = xl.apply_mlstm_block_with_state(lp["mlstm"], h, cfg,
+                                                        unroll=unroll)
+            x = x + y
+            caches[f"layer_{i:02d}"] = st
+        return x, caches
+
+    # ---------------- serving: decode ----------------
+
+    def init_caches(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        cache_dtype = dtype_of(cfg)
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            one = lambda: attn_lib.init_kv_cache(cfg, batch, cache_len,
+                                                 dtype=cache_dtype)
+            if cfg.scan_layers:
+                return jax.tree.map(
+                    lambda t: jnp.broadcast_to(t, (cfg.n_layers,) + t.shape),
+                    one())
+            return {f"layer_{i:02d}": one() for i in range(cfg.n_layers)}
+        if cfg.family == "hybrid":
+            per = cfg.shared_attn_every
+            n_super = cfg.n_layers // per
+            st = m2.init_mamba2_state(cfg, batch)
+            sts = jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (n_super, per) + t.shape), st)
+            kv = attn_lib.init_kv_cache(cfg, batch, cache_len,
+                                        dtype=cache_dtype)
+            kvs = jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (n_super,) + t.shape), kv)
+            return (sts, kvs)
+        if cfg.family == "ssm":
+            caches = {}
+            for i in range(cfg.n_layers):
+                kind = "slstm" if i in cfg.xlstm.slstm_at else "mlstm"
+                caches[f"layer_{i:02d}"] = (
+                    xl.init_slstm_state(cfg, batch) if kind == "slstm"
+                    else xl.init_mlstm_state(cfg, batch))
+            return caches
+        raise ValueError(cfg.family)
+
+    def decode(self, params: Params, token: jnp.ndarray, caches, pos):
+        """One decode step. token: (B,) int32; pos: scalar int32 (same for
+        all batch rows; continuous batching handles ragged pos upstream)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], token[:, None], cfg)
+
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            if cfg.scan_layers:
+                def body(xc, inp):
+                    lp, cache = inp
+                    xn, c2 = decode_attn_block(lp, xc, cfg, cache=cache, pos=pos)
+                    return xn, c2
+                x, caches = jax.lax.scan(body, x, (params["blocks"], caches))
+            else:
+                new = {}
+                for i in range(cfg.n_layers):
+                    key = f"layer_{i:02d}"
+                    x, c2 = decode_attn_block(params["blocks_list"][key], x,
+                                              cfg, cache=caches[key], pos=pos)
+                    new[key] = c2
+                caches = new
+        elif cfg.family == "hybrid":
+            sts, kvs = caches
+            def body(xc, inp):
+                sp, st, kv = inp
+                def inner(c, inp2):
+                    up, stt = inp2
+                    h = apply_norm(up["norm"], c, cfg)
+                    y, st2 = m2.apply_mamba2(up["mamba"], h, cfg, state=stt)
+                    return c + y, st2
+                xc, st2 = jax.lax.scan(inner, xc, (sp, st))
+                xc, kv2 = decode_attn_block(params["shared"], xc, cfg,
+                                            cache=kv, pos=pos)
+                return xc, (st2, kv2)
+            x, (sts, kvs) = jax.lax.scan(body, x, (params["super"], sts, kvs))
+            caches = (sts, kvs)
+        elif cfg.family == "ssm":
+            new = {}
+            for i in range(cfg.n_layers):
+                key = f"layer_{i:02d}"
+                lp = params["blocks_list"][key]
+                kind = "slstm" if i in cfg.xlstm.slstm_at else "mlstm"
+                h = apply_norm(lp["norm"], x, cfg)
+                if kind == "slstm":
+                    y, st = xl.apply_slstm_block(lp["slstm"], h, cfg,
+                                                 state=caches[key])
+                else:
+                    y, st = xl.apply_mlstm_block(lp["mlstm"], h, cfg,
+                                                 state=caches[key])
+                x = x + y
+                new[key] = st
+            caches = new
+
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params["embed"], x, cfg)[:, 0]
+        return logits, caches
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,322 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel training form +
+exact recurrent decode) and sLSTM (scalar memory, exponential gating,
+sequential scan).
+
+The chunkwise mLSTM follows the stabilized formulation: per head it carries
+(C (P,P), n (P), m (scalar max-state)); within a chunk the quadratic
+attention-like form is used, across chunks a `lax.scan` propagates the
+carry. The recurrent step form is mathematically identical and serves as
+the decode path and the test oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _normal, apply_norm, init_norm
+
+NEG = -1e30
+
+
+def mlstm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    di = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    h = cfg.n_heads
+    return dict(d_inner=di, n_heads=h, head_dim=di // h)
+
+
+def slstm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    ff = int(round(cfg.xlstm.proj_factor_slstm * d))
+    return dict(d=d, n_heads=h, head_dim=d // h, d_ff=ff)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    dm = mlstm_dims(cfg)
+    d, di, h = cfg.d_model, dm["d_inner"], dm["n_heads"]
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    si = di ** -0.5
+    return {
+        "w_up": _normal(ks[0], (d, 2 * di), s, pd),
+        "conv_w": _normal(ks[1], (cfg.xlstm.conv_kernel, di), 0.5, pd),
+        "conv_b": jnp.zeros((di,), pd),
+        "w_q": _normal(ks[2], (di, di), si, pd),
+        "w_k": _normal(ks[3], (di, di), si, pd),
+        "w_v": _normal(ks[4], (di, di), si, pd),
+        "w_i": _normal(ks[5], (di, h), si, jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": _normal(ks[6], (di, h), si, jnp.float32),
+        "b_f": 3.0 * jnp.ones((h,), jnp.float32),
+        "headnorm": jnp.ones((di,), pd),
+        "w_down": _normal(ks[7], (di, d), si, pd),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 cache: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + ext[:, i: i + x.shape[1]] * w[i].astype(x.dtype)
+    out = jax.nn.silu(out + b.astype(x.dtype))
+    return out, ext[:, ext.shape[1] - (k - 1):]
+
+
+def _mlstm_chunk(carry, inputs):
+    """carry: (C (B,H,P,P), n (B,H,P), m (B,H)) fp32.
+    inputs: q,k,v (B,L,H,P); logi, logf (B,L,H) fp32."""
+    c_prev, n_prev, m_prev = carry
+    q, k, v, logi, logf = inputs
+    b, l, h, p = q.shape
+    scale = p ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    fcum = jnp.cumsum(logf, axis=1)                                # (B,L,H)
+    # intra-chunk log weights: D[l,m] = fcum_l - fcum_m + logi_m (m <= l)
+    dmat = fcum[:, :, None, :] - fcum[:, None, :, :] + logi[:, None, :, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, NEG)            # (B,L,M,H)
+    # inter weight: fcum_l + m_prev
+    inter_log = fcum + m_prev[:, None, :]                          # (B,L,H)
+    m_loc = jnp.maximum(dmat.max(axis=2), inter_log)               # (B,L,H)
+    w_intra = jnp.exp(dmat - m_loc[:, :, None, :])                 # (B,L,M,H)
+    w_inter = jnp.exp(inter_log - m_loc)                           # (B,L,H)
+    scores = jnp.einsum("blhp,bmhp->blmh", qf, kf)                 # (B,L,M,H)
+    num = (jnp.einsum("blmh,bmhp->blhp", scores * w_intra, vf)
+           + jnp.einsum("blhp,bhpq->blhq", qf * w_inter[..., None], c_prev))
+    # denominator: q_l . n_state_l where n_state_l = decayed n_prev + sum w k
+    qn = (jnp.einsum("blmh,blmh->blh", w_intra, scores)
+          + jnp.einsum("blhp,bhp->blh", qf * w_inter[..., None], n_prev))
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_loc))
+    y = num / den[..., None]
+    # --- carry update ---
+    flast = fcum[:, -1]                                            # (B,H)
+    m_new = jnp.maximum(flast + m_prev, (flast[:, None] - fcum + logi).max(axis=1))
+    wk = jnp.exp(flast[:, None] - fcum + logi - m_new[:, None])    # (B,L,H)
+    c_new = (c_prev * jnp.exp(flast + m_prev - m_new)[:, :, None, None]
+             + jnp.einsum("blhp,blhq->bhpq", kf * wk[..., None], vf))
+    n_new = (n_prev * jnp.exp(flast + m_prev - m_new)[:, :, None]
+             + (kf * wk[..., None]).sum(axis=1))
+    return (c_new, n_new, m_new), y
+
+
+def mlstm_sequence(q, k, v, logi, logf, chunk: int,
+                   state: Optional[Tuple] = None, unroll: bool = False):
+    """Chunkwise mLSTM. q,k,v: (B,S,H,P); logi/logf: (B,S,H) fp32."""
+    b, s, h, p = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    if state is None:
+        state = (jnp.zeros((b, h, p, p), jnp.float32),
+                 jnp.zeros((b, h, p), jnp.float32),
+                 jnp.full((b, h), 0.0, jnp.float32))
+
+    def rs(t):
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    qs, ks_, vs, iis, ffs = rs(q), rs(k), rs(v), rs(logi), rs(logf)
+    step = lambda carry, i: _mlstm_chunk(
+        carry, (qs[:, i], ks_[:, i], vs[:, i], iis[:, i], ffs[:, i]))
+    if unroll or nc == 1:
+        ys = []
+        for i in range(nc):
+            state, y = step(state, i)
+            ys.append(y)
+        y = jnp.stack(ys, axis=1)
+    else:
+        state, y = jax.lax.scan(step, state, jnp.arange(nc))
+        y = jnp.moveaxis(y, 0, 1)
+    return y.reshape(b, s, h, p), state
+
+
+def mlstm_step(q, k, v, logi, logf, state):
+    """Exact recurrent step. q,k,v: (B,H,P); logi/logf: (B,H)."""
+    c_prev, n_prev, m_prev = state
+    p = q.shape[-1]
+    qf = q.astype(jnp.float32) * p ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m_prev, logi)
+    fz = jnp.exp(logf + m_prev - m_new)
+    iz = jnp.exp(logi - m_new)
+    c_new = c_prev * fz[..., None, None] + iz[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n_new = n_prev * fz[..., None] + iz[..., None] * kf
+    num = jnp.einsum("bhp,bhpq->bhq", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n_new)), jnp.exp(-m_new))
+    return num / den[..., None], (c_new, n_new, m_new)
+
+
+def apply_mlstm_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                      state: Optional[Dict] = None, unroll: bool = False,
+                      return_state: bool = False):
+    """Pre-norm residual mLSTM block. x: (B,S,d)."""
+    dm = mlstm_dims(cfg)
+    h, hd = dm["n_heads"], dm["head_dim"]
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_cache = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], conv_cache)
+    b, s, _ = x.shape
+    q = (xc @ p["w_q"].astype(dt)).reshape(b, s, h, hd)
+    k = (xc @ p["w_k"].astype(dt)).reshape(b, s, h, hd)
+    v = (xm @ p["w_v"].astype(dt)).reshape(b, s, h, hd)
+    logi = xm.astype(jnp.float32) @ p["w_i"] + p["b_i"]
+    logf = jax.nn.log_sigmoid(xm.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+    if state is not None:
+        y, new_m = mlstm_step(q[:, 0], k[:, 0], v[:, 0], logi[:, 0], logf[:, 0],
+                              state["mlstm"])
+        y = y[:, None]
+        new_state = {"mlstm": new_m, "conv": new_conv}
+    else:
+        y, mstate = mlstm_sequence(q, k, v, logi, logf, cfg.xlstm.chunk_size,
+                                   unroll=unroll)
+        new_state = ({"mlstm": mstate, "conv": new_conv.astype(jnp.bfloat16)}
+                     if return_state else None)
+    # headwise rmsnorm then flatten
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-5)).astype(dt)
+    y = y.reshape(b, s, dm["d_inner"]) * p["headnorm"].astype(dt)
+    out = (y * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    dm = slstm_dims(cfg)
+    d, h, hd, ff = dm["d"], dm["n_heads"], dm["head_dim"], dm["d_ff"]
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    p = {"conv_w": _normal(ks[0], (cfg.xlstm.conv_kernel, d), 0.5, pd),
+         "conv_b": jnp.zeros((d,), pd)}
+    for gi, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w_{gate}"] = _normal(ks[1 + gi], (d, d), s, pd)
+        p[f"r_{gate}"] = _normal(ks[5 + gi], (h, hd, hd), hd ** -0.5, pd)
+        p[f"b_{gate}"] = (3.0 * jnp.ones((d,), jnp.float32) if gate == "f"
+                          else jnp.zeros((d,), jnp.float32))
+    p["groupnorm"] = jnp.ones((d,), pd)
+    p["ffn"] = {
+        "w_gate": _normal(ks[9], (d, ff), s, pd),
+        "w_up": _normal(ks[10], (d, ff), s, pd),
+        "w_down": _normal(ks[11], (ff, d), ff ** -0.5, pd),
+    }
+    return p
+
+
+def _slstm_cell(p: Params, xz, xi, xf, xo, state, n_heads: int):
+    """One time step. x*: (B,d) fp32 pre-activations (input part).
+    state: (c, n, m, h) each (B,d) fp32."""
+    c, n, m, hprev = state
+    b, d = xz.shape
+    hd = d // n_heads
+    hh = hprev.reshape(b, n_heads, hd)
+
+    def rec(name):
+        return jnp.einsum("bhp,hpq->bhq", hh, p[f"r_{name}"].astype(jnp.float32)
+                          ).reshape(b, d)
+
+    zt = jnp.tanh(xz + rec("z"))
+    it = xi + rec("i")                       # log-space input gate
+    ft = jax.nn.log_sigmoid(xf + rec("f"))   # log forget gate
+    ot = jax.nn.sigmoid(xo + rec("o"))
+    m_new = jnp.maximum(ft + m, it)
+    iz = jnp.exp(it - m_new)
+    fz = jnp.exp(ft + m - m_new)
+    c_new = fz * c + iz * zt
+    n_new = fz * n + iz
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def apply_slstm_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                      state: Optional[Dict] = None, unroll: bool = False,
+                      return_state: bool = False):
+    """Pre-norm residual sLSTM block with post-FFN. x: (B,S,d)."""
+    dm = slstm_dims(cfg)
+    dt = x.dtype
+    b, s, d = x.shape
+    conv_cache = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(x, p["conv_w"], p["conv_b"], conv_cache)
+    xz = (xc @ p["w_z"].astype(dt)).astype(jnp.float32) + p["b_z"]
+    xi = (xc @ p["w_i"].astype(dt)).astype(jnp.float32) + p["b_i"]
+    xf = (xc @ p["w_f"].astype(dt)).astype(jnp.float32) + p["b_f"]
+    xo = (x @ p["w_o"].astype(dt)).astype(jnp.float32) + p["b_o"]
+    if state is not None:
+        st = _slstm_cell(p, xz[:, 0], xi[:, 0], xf[:, 0], xo[:, 0],
+                         state["slstm"], cfg.n_heads)
+        h = st[3][:, None].astype(dt)
+        new_state = {"slstm": st, "conv": new_conv}
+    else:
+        init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
+
+        def step(carry, t):
+            st = _slstm_cell(p, xz[:, t], xi[:, t], xf[:, t], xo[:, t], carry,
+                             cfg.n_heads)
+            return st, st[3]
+
+        if unroll:
+            carry, hs = init, []
+            for t in range(s):
+                carry, ht = step(carry, t)
+                hs.append(ht)
+            h = jnp.stack(hs, axis=1).astype(dt)
+        else:
+            carry, h = jax.lax.scan(step, init, jnp.arange(s))
+            h = jnp.moveaxis(h, 0, 1).astype(dt)
+        new_state = ({"slstm": carry, "conv": new_conv.astype(jnp.bfloat16)}
+                     if return_state else None)
+    # group norm (per head) then FFN
+    hf = h.astype(jnp.float32).reshape(b, s, cfg.n_heads, -1)
+    mu = hf.mean(-1, keepdims=True)
+    var = ((hf - mu) ** 2).mean(-1, keepdims=True)
+    hf = ((hf - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    h = hf.astype(dt) * p["groupnorm"].astype(dt)
+    fp = p["ffn"]
+    ff = jax.nn.gelu(h @ fp["w_gate"].astype(dt)) * (h @ fp["w_up"].astype(dt))
+    out = ff @ fp["w_down"].astype(dt)
+    return h + out, new_state
+
+
+def apply_mlstm_block_with_state(p, x, cfg, unroll=False):
+    return apply_mlstm_block(p, x, cfg, unroll=unroll, return_state=True)
+
+
+def apply_slstm_block_with_state(p, x, cfg, unroll=False):
+    return apply_slstm_block(p, x, cfg, unroll=unroll, return_state=True)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    dm = mlstm_dims(cfg)
+    h, hd, di = dm["n_heads"], dm["head_dim"], dm["d_inner"]
+    return {
+        "mlstm": (jnp.zeros((batch, h, hd, hd), jnp.float32),
+                  jnp.zeros((batch, h, hd), jnp.float32),
+                  jnp.zeros((batch, h), jnp.float32)),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_kernel - 1, di), jnp.bfloat16),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {
+        "slstm": tuple(jnp.zeros((batch, d), jnp.float32) for _ in range(4)),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_kernel - 1, d), jnp.bfloat16),
+    }

@@ -1,0 +1,64 @@
+"""AdamW inner optimizer with global-norm clipping (pure JAX, pytree-based)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InnerOptConfig
+from repro.optim.schedules import constant, cosine_warmup
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def init_adam(params: PyTree) -> AdamState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: AdamState,
+                 cfg: InnerOptConfig):
+    """Returns (new_params, new_state)."""
+    if cfg.grad_clip > 0:
+        grads = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state.count + 1
+    sched = cosine_warmup if cfg.schedule == "cosine" else constant
+    lr = sched(count, cfg.lr, warmup_steps=cfg.warmup_steps,
+               total_steps=cfg.total_steps)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    mu2 = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                       state.mu, grads)
+    nu2 = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        return (pf - lr * (step + cfg.weight_decay * pf)).astype(p.dtype)
+
+    params2 = jax.tree.map(upd, params, mu2, nu2)
+    return params2, AdamState(mu=mu2, nu=nu2, count=count)

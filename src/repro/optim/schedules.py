@@ -1,0 +1,21 @@
+"""LR schedules (optax is unavailable offline; these are self-contained)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac*base_lr.
+    Matches the inner schedule of Liu et al. 2024 (async local-SGD)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac * base_lr + (1 - final_frac) * base_lr * 0.5 * (
+        1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, base_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), base_lr)

@@ -1,0 +1,151 @@
+"""Parse compiled (SPMD-partitioned) HLO text for collective statistics.
+
+Shapes in `compiled.as_text()` are PER-DEVICE (post-partitioning), so the
+byte counts here are per-chip. Wire-byte estimates per collective kind:
+  all-reduce        : 2 x result bytes   (ring: reduce-scatter + all-gather)
+  all-gather        : result bytes       (each chip receives ~result)
+  reduce-scatter    : result bytes x (g-1)  (sends ~operand = result x g)
+  all-to-all        : result bytes
+  collective-permute: result bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_LINE = re.compile(
+    r"=\s*(?P<type>\([^()]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>" + "|".join(_COLL) + r")(?:-start)?\(")
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPLICIT.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: count, result_bytes, wire_bytes (per device)."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "result_bytes": 0, "wire_bytes": 0} for k in _COLL}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _LINE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _bytes_of_type(m.group("type"))
+        g = _group_size(line)
+        if op == "all-reduce":
+            wire = 2 * b * (g - 1) / max(g, 1)
+        elif op == "all-gather":
+            wire = b * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = b * (g - 1)
+        else:
+            wire = b
+        out[op]["count"] += 1
+        out[op]["result_bytes"] += b
+        out[op]["wire_bytes"] += wire
+    return out
+
+
+def total_wire_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["wire_bytes"] for v in stats.values())
+
+
+_NO_TRAFFIC_OPS = ("parameter(", "constant(", "get-tuple-element(",
+                   "bitcast(", "tuple(", "after-all(", "partition-id(")
+
+_DEF_LINE = re.compile(r"^\s*(?:ROOT\s+)?%\S+\s*=\s*"
+                       r"(\([^()]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+(\S+?)\(")
+_COMP_START = re.compile(r"^(%?\S+)\s.*\{\s*(?://.*)?$")
+
+
+def hbm_traffic_estimate(hlo_text: str) -> float:
+    """Approximate post-fusion HBM traffic per device: sum of output bytes of
+    instructions OUTSIDE fusion computations (fusion internals live in
+    VMEM/registers), counted twice (one write + one read by a consumer);
+    entry parameters counted once (read)."""
+    total = 0.0
+    in_fused = False
+    for raw in hlo_text.splitlines():
+        stripped = raw.strip()
+        # computation headers look like: `%name (args) -> type {`
+        if stripped.endswith("{") and "->" in stripped:
+            name = stripped.split()[0].lstrip("%")
+            in_fused = name.startswith(("fused", "wide.fused"))
+            continue
+        if stripped.startswith("ENTRY"):
+            in_fused = False
+            continue
+        if in_fused:
+            continue
+        m = _DEF_LINE.match(raw)
+        if not m:
+            continue
+        op = m.group(2)
+        if op in ("get-tuple-element", "bitcast", "tuple", "constant",
+                  "after-all", "partition-id"):
+            continue
+        b = _bytes_of_type(m.group(1))
+        total += b if op == "parameter" else 2.0 * b
+    return total
+
+
+def group_size_histogram(hlo_text: str) -> Dict[int, int]:
+    """Collective count per replica-group size. A DiLoCo-correct multi-pod
+    inner step must show no groups of size 2 (pod pairs) or >= 32 (merged
+    pod x data/model axes)."""
+    hist: Dict[int, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _LINE.search(line)
+        if not m:
+            continue
+        g = _group_size(line)
+        hist[g] = hist.get(g, 0) + 1
+    return hist
+
+
+def has_axis_collectives(hlo_text: str, n_partitions: int,
+                         axis_group_size: int) -> bool:
+    """Heuristic: any collective whose group size equals axis_group_size."""
+    for line in hlo_text.splitlines():
+        m = _LINE.search(line)
+        if m and _group_size(line) == axis_group_size:
+            return True
+    return False
