@@ -1,0 +1,20 @@
+# Developer entry points. `make verify` is the tier-1 gate: the full test
+# suite on CPU with interpret-mode Pallas kernels (auto-selected on CPU),
+# so kernel regressions are caught without a TPU.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: verify test bench bench-full
+
+verify:
+	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
+
+test: verify
+
+# micro-benchmarks only; persists arrival-path rows to BENCH_arrival.json
+bench:
+	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.run --skip-training
+
+bench-full:
+	$(PYTHON) -m benchmarks.run --full

@@ -59,6 +59,49 @@ def run() -> List[Dict]:
                  "us_per_call": 0.0,
                  "derived": (f"fused={5 * d_bytes}B unfused={8 * d_bytes}B "
                              f"saving=37.5%")})
+    rows.extend(packed_rows(n))
+    return rows
+
+
+def packed_rows(n: int) -> List[Dict]:
+    """Packed-buffer kernels (one launch per sweep) vs their per-leaf
+    equivalents at the same d: the packed stats sweep replaces one
+    block_stats launch PER LEAF, and the fused correct+outer sweep
+    replaces one correct_apply + one outer_update launch per leaf."""
+    from repro.core import packing
+    from repro.kernels import packed as pk
+
+    key = jax.random.PRNGKey(3)
+    tree = {f"b{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                       (n // 8,)) for i in range(8)}
+    layout = packing.build_layout(tree)
+    rb = jnp.asarray(layout.row_block)
+    u2 = packing.pack(layout, tree)
+    v2 = packing.pack(layout, jax.tree.map(lambda x: -x + 0.25, tree))
+    g2 = packing.pack(layout, jax.tree.map(lambda x: 0.5 * x, tree))
+    cu = jnp.ones((layout.n_rows, 1))
+    cv = 0.5 * jnp.ones((layout.n_rows, 1))
+
+    rows = [
+        {"name": "packed_stats_pallas_interp",
+         "us_per_call": _time(jax.jit(
+             lambda a, b: pk.packed_stats(
+                 a, b, rb, layout.n_blocks, interpret=True,
+                 ranges=layout.block_row_ranges)), u2, v2),
+         "derived": f"d={n} 8 blocks, ONE launch (was one per leaf)"},
+        {"name": "packed_correct_outer_pallas_interp",
+         "us_per_call": _time(jax.jit(
+             lambda p, m, g: pk.packed_correct_outer(
+                 p, m, g, cu, cv, 0.7, 0.9, 1.0, interpret=True)),
+             u2, v2, g2),
+         "derived": "fused Alg.2 + Eqs.17-19: 3 reads + 2 writes of d "
+                    "floats, ONE launch"},
+        {"name": "packed_hbm_traffic",
+         "us_per_call": 0.0,
+         "derived": (f"packed_arrival={9 * n * 4}B (pack 1R+1W, stats 2R, "
+                     f"fused 3R+2W) per_leaf={10 * n * 4}B (stats 2R, "
+                     "apply 2R+1W, outer 3R+2W)")},
+    ]
     return rows
 
 

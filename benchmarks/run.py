@@ -1,15 +1,38 @@
 """Benchmark driver: one function per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV rows (plus per-benchmark summary blocks).
 
-Fast benches (overhead, kernels) always run; the paper-reproduction
-training benches run with reduced budgets by default (pass --full for the
-paper-scale budgets used in EXPERIMENTS.md).
+Fast benches (overhead, kernels) always run and their rows are persisted
+to BENCH_arrival.json at the repo root (appending one entry per run, so
+the arrival-path perf trajectory accumulates across PRs); the
+paper-reproduction training benches run with reduced budgets by default
+(pass --full for the paper-scale budgets used in EXPERIMENTS.md).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_arrival.json")
+
+
+def _persist(rows) -> None:
+    history = []
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({"unix_time": time.time(), "rows": rows})
+    tmp = BENCH_JSON + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=1)
+    os.replace(tmp, BENCH_JSON)
+    print(f"# persisted {len(rows)} rows -> {BENCH_JSON}")
 
 
 def main() -> None:
@@ -22,10 +45,10 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     from benchmarks import bench_kernels, bench_overhead
-    for r in bench_overhead.run():
+    micro = bench_overhead.run() + bench_kernels.run()
+    for r in micro:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
-    for r in bench_kernels.run():
-        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    _persist(micro)
     sys.stdout.flush()
 
     if args.skip_training:

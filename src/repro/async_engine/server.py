@@ -6,19 +6,31 @@ initializations (look-ahead model for HeLoCo/MLA, Eq. 5), and processes
 arriving pseudo-gradients through the configured method (HeLoCo per-block
 correction / MLA / Nesterov), including staleness bookkeeping, arrival
 weighting, and optional stale-update dropping (App. A.6).
+
+Arrival fast path (default): the outer state lives PACKED — params and
+momentum are flattened once at init into fp32 (R, 128) buffers (see
+``repro.core.packing``), every arrival donates and rewrites those buffers
+through the two fused packed kernels (O(1) launches per arrival instead of
+O(#leaves)), and the pytree view is materialised only on demand for
+``worker_init`` / eval / checkpointing. Pass ``packed=False`` to keep the
+original per-leaf pytree path (the correctness reference); dropped stale
+arrivals skip the O(d) correction entirely and take a momentum-decay-only
+step on either path.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OuterOptConfig
+from repro.core import packing
 from repro.core.heloco import (
-    OuterState, apply_arrival, init_outer_state, lookahead_init,
+    OuterState, apply_arrival, apply_arrival_packed, init_outer_state,
+    lookahead_init, momentum_decay_packed, momentum_decay_update,
 )
 
 PyTree = Any
@@ -38,30 +50,87 @@ class ArrivalRecord:
 class Synchronizer:
     def __init__(self, init_params: PyTree, cfg: OuterOptConfig,
                  n_workers: int, stacked_axes: Optional[PyTree] = None,
-                 use_kernel: bool = False):
-        self.state: OuterState = init_outer_state(init_params)
+                 use_kernel: bool = False, packed: bool = True):
         self.cfg = cfg
         self.n_workers = n_workers
         self.stacked_axes = stacked_axes
         self.use_kernel = use_kernel
+        self.packed = packed
         self.records: List[ArrivalRecord] = []
-        self._apply = jax.jit(
-            lambda state, delta, rho, tau: apply_arrival(
-                state, delta, method=cfg.method, outer_lr=cfg.outer_lr,
-                mu=cfg.momentum, h=cfg.heloco, rho=rho, tau=tau,
-                stacked_axes=stacked_axes, use_kernel=use_kernel),
-            donate_argnums=(0,))
+        if packed:
+            self.layout = packing.build_layout(init_params, stacked_axes)
+            self._pbuf = packing.pack(self.layout, init_params)
+            self._mbuf = packing.zeros(self.layout)
+            self._step = 0
+            self._state_cache: Optional[OuterState] = None
+            self._apply_packed = jax.jit(
+                lambda p, m, delta, rho, tau: apply_arrival_packed(
+                    p, m, delta, self.layout, method=cfg.method,
+                    outer_lr=cfg.outer_lr, mu=cfg.momentum, h=cfg.heloco,
+                    rho=rho, tau=tau),
+                donate_argnums=(0, 1))
+            self._decay_packed = jax.jit(
+                lambda p, m, rho, tau: momentum_decay_packed(
+                    p, m, cfg.outer_lr, cfg.momentum, method=cfg.method,
+                    rho=rho, tau=tau),
+                donate_argnums=(0, 1))
+            self._unpack_p = jax.jit(
+                lambda b: packing.unpack(self.layout, b))
+            self._unpack_m = jax.jit(
+                lambda b: packing.unpack(self.layout, b, dtype=jnp.float32))
+            self._lookahead_packed = jax.jit(
+                lambda p, m: packing.unpack(
+                    self.layout, p - cfg.outer_lr * cfg.momentum * m))
+        else:
+            self.layout = None
+            self._state = init_outer_state(init_params)
+            self._apply = jax.jit(
+                lambda state, delta, rho, tau: apply_arrival(
+                    state, delta, method=cfg.method, outer_lr=cfg.outer_lr,
+                    mu=cfg.momentum, h=cfg.heloco, rho=rho, tau=tau,
+                    stacked_axes=stacked_axes, use_kernel=use_kernel),
+                donate_argnums=(0,))
+            self._decay = jax.jit(
+                lambda state, rho, tau: momentum_decay_update(
+                    state, cfg.outer_lr, cfg.momentum, method=cfg.method,
+                    rho=rho, tau=tau),
+                donate_argnums=(0,))
 
-    # -- worker initialization ------------------------------------------------
+    # -- outer state view -----------------------------------------------------
+    @property
+    def state(self) -> OuterState:
+        """Pytree view of the outer state (unpacked on demand, cached)."""
+        if not self.packed:
+            return self._state
+        if self._state_cache is None:
+            self._state_cache = OuterState(
+                params=self._unpack_p(self._pbuf),
+                momentum=self._unpack_m(self._mbuf),
+                step=jnp.asarray(self._step, jnp.int32))
+        return self._state_cache
+
+    @state.setter
+    def state(self, value: OuterState):
+        if not self.packed:
+            self._state = value
+            return
+        self._pbuf = packing.pack(self.layout, value.params)
+        self._mbuf = packing.pack(self.layout, value.momentum)
+        self._step = int(value.step)
+        self._state_cache = None
+
     @property
     def t(self) -> int:
-        return int(self.state.step)
+        return self._step if self.packed else int(self._state.step)
 
+    # -- worker initialization ------------------------------------------------
     def worker_init(self) -> PyTree:
         """Model state handed to a newly-available worker (Eq. 5 look-ahead
         for HeLoCo/MLA; plain theta_t for the Nesterov baselines)."""
         if self.cfg.lookahead_init and self.cfg.method in ("heloco", "mla"):
-            return lookahead_init(self.state, self.cfg.outer_lr,
+            if self.packed:
+                return self._lookahead_packed(self._pbuf, self._mbuf)
+            return lookahead_init(self._state, self.cfg.outer_lr,
                                   self.cfg.momentum)
         return self.state.params
 
@@ -78,19 +147,43 @@ class Synchronizer:
             rho = rho / math.sqrt(1.0 + tau)
         return rho
 
+    # -- outer-step drivers ---------------------------------------------------
+    def _step_update(self, delta: PyTree, rho: float, tau: float):
+        if self.packed:
+            self._pbuf, self._mbuf = self._apply_packed(
+                self._pbuf, self._mbuf, delta, jnp.asarray(rho),
+                jnp.asarray(tau, jnp.float32))
+            self._step += 1
+            self._state_cache = None
+        else:
+            self._state = self._apply(self._state, delta, jnp.asarray(rho),
+                                      jnp.asarray(tau, jnp.float32))
+
+    def _step_decay(self, rho: float, tau: float):
+        """Dropped arrival (App. A.6): momentum-decay-only outer step —
+        equivalent to the method applied to a zero pseudo-gradient, but no
+        zero pytree is materialised and the O(d) correction is skipped."""
+        rho = jnp.asarray(rho)
+        tau = jnp.asarray(tau, jnp.float32)
+        if self.packed:
+            self._pbuf, self._mbuf = self._decay_packed(
+                self._pbuf, self._mbuf, rho, tau)
+            self._step += 1
+            self._state_cache = None
+        else:
+            self._state = self._decay(self._state, rho, tau)
+
     # -- arrival processing ---------------------------------------------------
     def on_arrival(self, delta: PyTree, s_i: int, worker_id: int,
                    sim_time: float = 0.0, lang: str = "") -> ArrivalRecord:
         tau = self.t - s_i
         dropped = (self.cfg.drop_stale_after is not None
                    and tau > self.cfg.drop_stale_after)
-        if dropped:
-            # App. A.6: suppress the stale update (G_t = 0); the outer step
-            # still advances so momentum decays consistently.
-            delta = jax.tree.map(lambda x: jnp.zeros_like(x), delta)
         rho = self._rho(tau)
-        self.state = self._apply(self.state, delta, jnp.asarray(rho),
-                                 jnp.asarray(tau, jnp.float32))
+        if dropped:
+            self._step_decay(rho, tau)
+        else:
+            self._step_update(delta, rho, tau)
         rec = ArrivalRecord(outer_step=self.t, worker_id=worker_id,
                             staleness=tau, rho=rho, sim_time=sim_time,
                             lang=lang, dropped=dropped)
@@ -104,10 +197,8 @@ class Synchronizer:
         k = len(deltas)
         avg = jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / k,
                            *deltas)
-        rho = self._rho(0) * k if self.cfg.weight_factor == "average" else 1.0
         # sync-nesterov in the paper uses average weighting: G = mean(Delta)
-        self.state = self._apply(self.state, avg, jnp.asarray(1.0),
-                                 jnp.asarray(0.0, jnp.float32))
+        self._step_update(avg, 1.0, 0.0)
         rec = ArrivalRecord(outer_step=self.t, worker_id=-1, staleness=0,
                             rho=1.0, sim_time=sim_time)
         self.records.append(rec)

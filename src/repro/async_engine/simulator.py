@@ -161,9 +161,13 @@ class AsyncSimulator:
         if lang is not None:
             self.lang_tokens[lang] += toks
         delta = pseudo_gradient(w.params, result.params)
+        # int8 rides the server's packed layout: per-block scales, O(1)
+        # kernel launches, and a packed error-feedback buffer per worker.
+        layout = (self.server.layout
+                  if self.cfg.outer.compression == "int8" else None)
         decoded, w.ef, nbytes = roundtrip_with_error_feedback(
             delta, w.ef, self.cfg.outer.compression,
-            self.cfg.outer.topk_ratio)
+            self.cfg.outer.topk_ratio, layout=layout)
         if not self.cfg.outer.error_feedback:
             w.ef = None
         self.history.comm_bytes += nbytes

@@ -19,7 +19,9 @@ _SEP = "/"
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in newer jax; tree_util's
+    # spelling works across the versions this repo supports.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -76,7 +78,7 @@ def restore(path: str, like: PyTree, verify: bool = True) -> Tuple[PyTree, Dict]
     missing = set(ref_flat) - set(flat)
     if missing:
         raise IOError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
-    leaves_ref, treedef = jax.tree.flatten_with_path(like)
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(like)
     keys = [_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
                       for p in path_) for path_, _ in leaves_ref]
     leaves = [flat[k] for k in keys]

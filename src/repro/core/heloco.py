@@ -7,6 +7,15 @@ individual model tensor"). For scanned layer stacks (leaves carrying a
 leading layer axis) the correction is vmapped over that axis so granularity
 matches the unstacked model; pass ``stacked_axes`` describing how many
 leading axes of each leaf are layer axes.
+
+Two arrival implementations share the same math (verified equivalent in
+tests/test_packed.py):
+
+  apply_arrival         per-leaf pytree path — the correctness reference
+  apply_arrival_packed  fast path over the packed (R, 128) buffer from
+                        ``repro.core.packing``: one stats sweep + one fused
+                        correct+outer sweep, O(1) kernel launches per
+                        arrival (see docs/packed_layout.md)
 """
 from __future__ import annotations
 
@@ -151,6 +160,43 @@ def mla_correct(delta: PyTree, momentum: PyTree, outer_lr: float,
         delta, momentum)
 
 
+def _decay_coeffs(method: str, outer_lr: float, mu: float, rho, tau):
+    """Scalar coefficients of the dropped-arrival outer step.
+
+    With the pseudo-gradient suppressed (Delta = 0), every method's
+    corrected gradient collapses to a scalar multiple of the momentum:
+    heloco/nesterov give G = 0; MLA gives G = eta mu tau_norm m
+    (``mla_correct`` of a zero delta). Either way the outer step is
+      m' = c_m m;  theta' = theta - eta c_p m
+    so no zero pytree and no O(d) correction sweep is ever needed.
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    scale = (outer_lr * mu * jnp.minimum(tau, 10.0) / 10.0
+             if method == "mla" else 0.0)
+    g = rho * scale                       # G = g * m
+    c_m = mu + (1.0 - mu) * g
+    c_p = g + mu * c_m
+    return c_m, c_p
+
+
+def momentum_decay_update(state: OuterState, outer_lr: float, mu: float,
+                          method: str = "heloco",
+                          rho: jnp.ndarray | float = 1.0,
+                          tau: jnp.ndarray | float = 0.0) -> OuterState:
+    """Outer step for a DROPPED stale arrival (App. A.6). Equivalent to
+    ``apply_arrival`` with a zero pseudo-gradient (for every method, incl.
+    MLA's momentum extrapolation of the zero delta) but skips
+    materialising the zero pytree and the O(d) correction entirely.
+    """
+    c_m, c_p = _decay_coeffs(method, outer_lr, mu, rho, tau)
+    momentum = jax.tree.map(lambda m: c_m * m, state.momentum)
+    params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - outer_lr * c_p * m
+                      ).astype(p.dtype),
+        state.params, state.momentum)
+    return OuterState(params=params, momentum=momentum, step=state.step + 1)
+
+
 def apply_arrival(state: OuterState, delta: PyTree, *, method: str,
                   outer_lr: float, mu: float, h: HeLoCoConfig,
                   rho: jnp.ndarray | float = 1.0,
@@ -173,3 +219,65 @@ def apply_arrival(state: OuterState, delta: PyTree, *, method: str,
     else:
         raise ValueError(method)
     return outer_update(state, g, outer_lr, mu, rho=rho)
+
+
+# ---------------------------------------------------------------------------
+# Packed fast path: same math, one flat buffer, O(1) kernel launches
+# ---------------------------------------------------------------------------
+
+def apply_arrival_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
+                         delta: PyTree, layout, *, method: str,
+                         outer_lr: float, mu: float, h: HeLoCoConfig,
+                         rho: jnp.ndarray | float = 1.0,
+                         tau: jnp.ndarray | float = 0.0,
+                         interpret: bool | None = None):
+    """Process one arrival on the packed (R, 128) outer state.
+
+    pbuf/mbuf: packed fp32 params / momentum (see ``repro.core.packing``).
+    delta: the arriving pseudo-gradient pytree (packed here — one fused
+    XLA gather/concat, no kernel launches). Returns (pbuf', mbuf').
+
+    Numerically equivalent to ``apply_arrival`` on fp32 pytrees: every
+    method reduces to per-block scalars (cu, cv) with g = cu*delta + cv*m,
+    so the whole arrival is ONE statistics sweep (HeLoCo only) plus ONE
+    fused correct+outer sweep — 2 pallas_calls regardless of #leaves,
+    vs 2 per leaf + a second full tree sweep on the per-leaf path.
+    """
+    from repro.core import packing
+    from repro.kernels import packed as pk
+    from repro.kernels.ops import _auto_interpret
+
+    interpret = _auto_interpret(interpret)
+    tau = jnp.asarray(tau)
+    row_block = jnp.asarray(layout.row_block)
+    dbuf = packing.pack(layout, delta)
+    if method == "heloco":
+        stats = pk.packed_stats(dbuf, mbuf, row_block, layout.n_blocks,
+                                interpret=interpret,
+                                ranges=layout.block_row_ranges)
+        cu, cv = pk.branch_scalars(stats, h)
+    elif method == "mla":
+        scale = outer_lr * mu * jnp.minimum(tau.astype(jnp.float32),
+                                            10.0) / 10.0
+        cu = jnp.ones((layout.n_blocks,), jnp.float32)
+        cv = jnp.broadcast_to(scale, (layout.n_blocks,))
+    elif method in ("nesterov", "sync_nesterov"):
+        cu = jnp.ones((layout.n_blocks,), jnp.float32)
+        cv = jnp.zeros((layout.n_blocks,), jnp.float32)
+    else:
+        raise ValueError(method)
+    cu_rows = cu[row_block][:, None]
+    cv_rows = cv[row_block][:, None]
+    return pk.packed_correct_outer(pbuf, mbuf, dbuf, cu_rows, cv_rows,
+                                   outer_lr, mu, rho, interpret=interpret)
+
+
+def momentum_decay_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
+                          outer_lr: float, mu: float,
+                          method: str = "heloco",
+                          rho: jnp.ndarray | float = 1.0,
+                          tau: jnp.ndarray | float = 0.0):
+    """Dropped-arrival step on packed state (see ``_decay_coeffs``).
+    Pure elementwise buffer math (XLA fuses it into one pass)."""
+    c_m, c_p = _decay_coeffs(method, outer_lr, mu, rho, tau)
+    return pbuf - outer_lr * c_p * mbuf, c_m * mbuf

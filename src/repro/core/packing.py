@@ -1,0 +1,203 @@
+"""Flat packed view of a parameter pytree for the arrival fast path.
+
+The synchronizer's hot loop processes one pseudo-gradient per arrival. At
+paper granularity every tensor block needs its own correction scalars, but
+nothing about the math requires the blocks to live in separate arrays —
+so we flatten the whole pytree ONCE into a single fp32 ``(R, 128)`` buffer
+plus a static :class:`BlockLayout`, and every O(d) sweep (correction
+statistics, fused correct+outer update, quantization) becomes a single
+kernel launch over that buffer instead of one launch per leaf.
+
+Memory format (see also docs/packed_layout.md):
+
+  * Leaves are laid out back-to-back in pytree-flatten order.
+  * A leaf with ``n`` stacked leading layer axes (scanned layer stacks) is
+    split into ``prod(shape[:n])`` independent blocks — one per layer — so
+    packing preserves the paper's per-tensor block granularity.
+  * Each block is zero-padded up to a whole number of 128-lane rows and
+    starts on a row boundary; ``row_block[r]`` gives the block id owning
+    row ``r``. Zero padding is invariant under every packed sweep (stats
+    see zero contributions; the fused update maps 0 -> 0), so it is never
+    re-zeroed.
+  * Trailing filler rows that align R to the kernel row-tile are assigned
+    block id 0; they hold zeros and stay zero.
+
+``pack``/``unpack`` are pure jittable functions of the (static) layout;
+the buffer dtype is fp32, which doubles as the master copy of bf16 params
+(unpack casts back to each leaf's dtype).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tiling import LANES, padded_rows
+
+PyTree = Any
+
+
+class Packed(NamedTuple):
+    """A pytree value that already lives in packed (R, 128) form.
+
+    ``pack`` unwraps it for free, so producers that naturally end with a
+    packed buffer (e.g. the packed int8 round-trip) can hand it straight
+    to the packed arrival path without an unpack -> re-pack detour. Being
+    a NamedTuple it is also a pytree, so tree-wide arithmetic (e.g. the
+    sync-round average) maps over the buffer transparently.
+    """
+    buf: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Static placement of one pytree leaf inside the packed buffer."""
+    shape: Tuple[int, ...]
+    dtype: Any                 # np.dtype of the original leaf
+    n_stack: int               # number of blocks (prod of stacked layer axes)
+    block_elems: int           # elements per block
+    rows_per_block: int        # 128-lane rows per block (zero-padded)
+    start_row: int
+    start_block: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Static map between a parameter pytree and its packed (R, 128) view.
+
+    Hashable (usable as a jit static argument); the device-independent
+    ``row_block`` map is materialised lazily and cached.
+    """
+    leaves: Tuple[LeafSpec, ...]
+    treedef: Any
+    data_rows: int             # rows backed by leaf data
+    n_rows: int                # R: data_rows aligned to the kernel row tile
+    n_blocks: int
+    total_elems: int           # real (unpadded) elements
+
+    @functools.cached_property
+    def row_block(self) -> np.ndarray:
+        """(R,) int32: block id of each row (filler rows -> block 0)."""
+        ids = np.zeros(self.n_rows, np.int32)
+        for leaf in self.leaves:
+            r0 = leaf.start_row
+            for s in range(leaf.n_stack):
+                ids[r0 + s * leaf.rows_per_block:
+                    r0 + (s + 1) * leaf.rows_per_block] = leaf.start_block + s
+        return ids
+
+    @functools.cached_property
+    def block_sizes(self) -> np.ndarray:
+        """(B,) int64: real element count of each block."""
+        sizes = np.zeros(self.n_blocks, np.int64)
+        for leaf in self.leaves:
+            sizes[leaf.start_block:leaf.start_block + leaf.n_stack] = \
+                leaf.block_elems
+        return sizes
+
+    @functools.cached_property
+    def block_row_ranges(self) -> tuple:
+        """((start_row, end_row), ...) per block, in block-id order.
+
+        Blocks are CONTIGUOUS row ranges by construction, so per-block
+        reductions over per-row partials can be static slices — much
+        cheaper than a scatter-based segment sum, and exact.
+        """
+        ranges = [None] * self.n_blocks
+        for leaf in self.leaves:
+            for s in range(leaf.n_stack):
+                r0 = leaf.start_row + s * leaf.rows_per_block
+                ranges[leaf.start_block + s] = (r0, r0 + leaf.rows_per_block)
+        return tuple(ranges)
+
+
+def build_layout(params: PyTree,
+                 stacked_axes: Optional[PyTree] = None) -> BlockLayout:
+    """Compute the static layout for ``params``.
+
+    stacked_axes: optional pytree of ints (same structure) giving the number
+    of leading layer axes per leaf; each layer becomes its own block, same
+    as :func:`repro.core.heloco.block_correct`.
+    """
+    vals, treedef = jax.tree.flatten(params)
+    if not vals:
+        raise ValueError("cannot build a BlockLayout for an empty pytree")
+    if stacked_axes is None:
+        axes = [0] * len(vals)
+    else:
+        axes, axes_def = jax.tree.flatten(stacked_axes)
+        if axes_def != treedef:
+            raise ValueError("stacked_axes structure does not match params")
+    specs = []
+    row = block = elems = 0
+    for x, nax in zip(vals, axes):
+        shape = tuple(int(s) for s in x.shape)
+        nax = int(nax)
+        if nax > len(shape):
+            raise ValueError(f"stacked_axes {nax} exceeds rank of {shape}")
+        n_stack = int(np.prod(shape[:nax], dtype=np.int64)) if nax else 1
+        block_elems = int(np.prod(shape[nax:], dtype=np.int64))
+        rpb = max(1, -(-block_elems // LANES))
+        specs.append(LeafSpec(shape=shape, dtype=np.dtype(x.dtype),
+                              n_stack=n_stack, block_elems=block_elems,
+                              rows_per_block=rpb, start_row=row,
+                              start_block=block))
+        row += n_stack * rpb
+        block += n_stack
+        elems += n_stack * block_elems
+    n_rows = padded_rows(row * LANES)  # align row count to the kernel tile
+    return BlockLayout(leaves=tuple(specs), treedef=treedef, data_rows=row,
+                       n_rows=n_rows, n_blocks=block, total_elems=elems)
+
+
+def pack(layout: BlockLayout, tree: PyTree,
+         dtype=jnp.float32) -> jnp.ndarray:
+    """Flatten ``tree`` into the packed (R, 128) buffer (jittable).
+
+    A :class:`Packed` value passes through unwrapped (it is already the
+    buffer for this layout).
+    """
+    if isinstance(tree, Packed):
+        return tree.buf.astype(dtype)
+    vals = jax.tree.leaves(tree)
+    if len(vals) != len(layout.leaves):
+        raise ValueError("tree does not match layout")
+    parts = []
+    for x, leaf in zip(vals, layout.leaves):
+        xf = jnp.asarray(x).astype(dtype).reshape(leaf.n_stack,
+                                                  leaf.block_elems)
+        pad = leaf.rows_per_block * LANES - leaf.block_elems
+        if pad:
+            xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        parts.append(xf.reshape(leaf.n_stack * leaf.rows_per_block, LANES))
+    buf = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    filler = layout.n_rows - layout.data_rows
+    if filler:
+        buf = jnp.pad(buf, ((0, filler), (0, 0)))
+    return buf
+
+
+def unpack(layout: BlockLayout, buf: jnp.ndarray,
+           dtype=None) -> PyTree:
+    """Rebuild the pytree from a packed buffer (jittable).
+
+    dtype: override the per-leaf output dtype (e.g. fp32 for momentum);
+    default restores each leaf's original dtype.
+    """
+    leaves_out = []
+    for leaf in layout.leaves:
+        rows = leaf.n_stack * leaf.rows_per_block
+        x = buf[leaf.start_row:leaf.start_row + rows]
+        x = x.reshape(leaf.n_stack, leaf.rows_per_block * LANES)
+        x = x[:, :leaf.block_elems].reshape(leaf.shape)
+        leaves_out.append(x.astype(dtype or leaf.dtype))
+    return jax.tree.unflatten(layout.treedef, leaves_out)
+
+
+def zeros(layout: BlockLayout, dtype=jnp.float32) -> jnp.ndarray:
+    """A packed buffer of zeros (e.g. fresh momentum / error feedback)."""
+    return jnp.zeros((layout.n_rows, LANES), dtype)

@@ -9,10 +9,12 @@ HBM round-trips over d floats. These kernels do exactly two passes:
   block_stats   : tiled VMEM reduction -> per-tile partial (dot, uu, vv)
   correct_apply : fused out = cu*u + cv*v in one read of (u, v)
 
-Tiling: the flattened block is padded to a multiple of (ROWS x 128) and
-viewed as (R, 128); the grid walks row-blocks so each step's working set
+Tiling (shared rules in ``repro.kernels.tiling``): the flattened block is
+zero-padded to an (R, 128) view with R tile-aligned; on TPU the grid walks
+row-tiles of up to ROWS rows so each step's working set
 (2 x ROWS x 128 x 4B = 256 KiB at ROWS=256) sits comfortably in VMEM, and
-the 128-lane minor dimension matches the TPU vector registers.
+the 128-lane minor dimension matches the TPU vector registers. The CPU
+interpreter runs one grid step (see ``tiling.row_tile``).
 """
 from __future__ import annotations
 
@@ -22,8 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANES = 128
-ROWS = 256  # rows per grid step: 2 inputs * 256*128*4B = 256 KiB of VMEM
+from repro.kernels.tiling import LANES, ROWS, row_tile
 
 
 def _stats_kernel(u_ref, v_ref, out_ref):
@@ -35,11 +36,11 @@ def _stats_kernel(u_ref, v_ref, out_ref):
 
 
 def block_stats(u2d: jnp.ndarray, v2d: jnp.ndarray,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool = True, rows: int | None = None
+                ) -> jnp.ndarray:
     """u2d, v2d: (R, 128). Returns (n_tiles, 3) partial sums fp32."""
     r = u2d.shape[0]
-    rows = min(ROWS, r)
-    assert r % rows == 0
+    rows = row_tile(r, interpret, rows)
     grid = (r // rows,)
     return pl.pallas_call(
         _stats_kernel,
@@ -60,11 +61,11 @@ def _apply_kernel(u_ref, v_ref, cu_ref, cv_ref, out_ref):
 
 
 def correct_apply(u2d: jnp.ndarray, v2d: jnp.ndarray, cu: jnp.ndarray,
-                  cv: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+                  cv: jnp.ndarray, interpret: bool = True,
+                  rows: int | None = None) -> jnp.ndarray:
     """out = cu*u + cv*v, fused single pass. cu/cv: scalar arrays."""
     r = u2d.shape[0]
-    rows = min(ROWS, r)
-    assert r % rows == 0
+    rows = row_tile(r, interpret, rows)
     grid = (r // rows,)
     return pl.pallas_call(
         _apply_kernel,

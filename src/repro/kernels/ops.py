@@ -1,9 +1,16 @@
-"""jit'd public wrappers around the Pallas kernels: padding/reshaping to the
-(R, 128) tiled view, branch-scalar computation, and pytree-level entry
-points that mirror the pure-jnp references in ``repro.kernels.ref``.
+"""jit'd public wrappers around the PER-LEAF Pallas kernels:
+padding/reshaping to the (R, 128) tiled view, branch-scalar computation,
+and pytree-level entry points that mirror the pure-jnp references in
+``repro.kernels.ref``.
 
 ``interpret=None`` auto-selects: interpreter on CPU (validation), compiled
 Mosaic on TPU.
+
+The arrival hot loop does not go through these per-block wrappers any
+more: ``repro.kernels.packed`` + ``repro.core.packing`` process the whole
+pytree as one flat buffer with O(1) launches (docs/packed_layout.md).
+These wrappers remain the correctness reference and the entry point for
+single-tensor use.
 """
 from __future__ import annotations
 
@@ -17,8 +24,8 @@ from repro.configs.base import HeLoCoConfig
 from repro.kernels import heloco_correct as hk
 from repro.kernels import outer_update as ok
 from repro.kernels import quantize as qk
+from repro.kernels.tiling import LANES, padded_rows
 
-LANES = hk.LANES
 PyTree = Any
 
 
@@ -29,13 +36,16 @@ def _auto_interpret(interpret):
 
 
 def _to_2d(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
-    """Flatten + zero-pad to (R, 128) with R a multiple of min(ROWS, R)."""
+    """Flatten + zero-pad to (R, 128), R tile-aligned (see kernels.tiling).
+
+    Over-padding is bounded by one sublane tile (7 rows) — the old rule
+    padded awkward sizes like 128*256 + 1 to 2x their footprint.
+    """
     flat = x.reshape(-1)
     n = flat.size
-    row_unit = LANES * min(hk.ROWS, max(1, -(-n // LANES)))
-    padded = -(-n // row_unit) * row_unit
-    flat = jnp.pad(flat, (0, padded - n))
-    return flat.reshape(-1, LANES), n
+    r = padded_rows(n)
+    flat = jnp.pad(flat, (0, r * LANES - n))
+    return flat.reshape(r, LANES), n
 
 
 def _from_2d(x2d: jnp.ndarray, n: int, shape, dtype) -> jnp.ndarray:

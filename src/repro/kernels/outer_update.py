@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANES = 128
-ROWS = 256
+from repro.kernels.tiling import LANES, row_tile
 
 
 def _outer_kernel(p_ref, m_ref, g_ref, hp_ref, p_out, m_out):
@@ -32,11 +31,10 @@ def _outer_kernel(p_ref, m_ref, g_ref, hp_ref, p_out, m_out):
 
 def outer_update_2d(p2d: jnp.ndarray, m2d: jnp.ndarray, g2d: jnp.ndarray,
                     eta: float, mu: float, rho,
-                    interpret: bool = True):
+                    interpret: bool = True, rows: int | None = None):
     """p2d/m2d/g2d: (R, 128). Returns (p', m'). m is fp32."""
     r = p2d.shape[0]
-    rows = min(ROWS, r)
-    assert r % rows == 0
+    rows = row_tile(r, interpret, rows)
     grid = (r // rows,)
     hp = jnp.stack([jnp.asarray(eta, jnp.float32),
                     jnp.asarray(mu, jnp.float32),

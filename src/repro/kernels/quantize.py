@@ -9,8 +9,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANES = 128
-ROWS = 256
+from repro.kernels.tiling import LANES, row_tile
 
 
 def _absmax_kernel(x_ref, out_ref):
@@ -19,8 +18,7 @@ def _absmax_kernel(x_ref, out_ref):
 
 def absmax(x2d: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
     r = x2d.shape[0]
-    rows = min(ROWS, r)
-    assert r % rows == 0
+    rows = row_tile(r, interpret)
     grid = (r // rows,)
     parts = pl.pallas_call(
         _absmax_kernel,
@@ -48,7 +46,7 @@ def quantize_2d(x2d: jnp.ndarray, interpret: bool = True):
     """Returns (q (R,128) int8, scale scalar fp32)."""
     scale = jnp.maximum(absmax(x2d, interpret), 1e-12) / 127.0
     r = x2d.shape[0]
-    rows = min(ROWS, r)
+    rows = row_tile(r, interpret)
     grid = (r // rows,)
     q = pl.pallas_call(
         _quant_kernel,
@@ -65,7 +63,7 @@ def quantize_2d(x2d: jnp.ndarray, interpret: bool = True):
 def dequantize_2d(q2d: jnp.ndarray, scale: jnp.ndarray,
                   out_dtype=jnp.float32, interpret: bool = True):
     r = q2d.shape[0]
-    rows = min(ROWS, r)
+    rows = row_tile(r, interpret)
     grid = (r // rows,)
     return pl.pallas_call(
         _dequant_kernel,

@@ -1,0 +1,52 @@
+"""Shared (R, 128) tiling rules for every Pallas kernel in this package.
+
+All kernels view their operands as a 2-D ``(R, LANES)`` buffer whose minor
+dimension matches the TPU vector lanes. The grid walks row-tiles of
+``row_tile(R)`` rows; that tile size must divide R exactly, so the padding
+rule and the tile rule are defined together here:
+
+  * R <= ROWS          : a single grid step covers the whole buffer, so any
+                         R works (tile = R, no row padding needed).
+  * R > ROWS           : R is padded up to a multiple of ROW_ALIGN (the fp32
+                         sublane tile) and the row-tile is ``gcd(R, ROWS)``
+                         — at least ROW_ALIGN rows, at most ROWS, and always
+                         an exact divisor of R.
+
+Compared to the old rule (pad R to a multiple of min(ROWS, R)) this bounds
+the over-padding at ROW_ALIGN - 1 rows instead of ROWS - 1: a buffer of
+128*256 + 1 elements used to be padded to 2x its size, now to +1023
+elements.
+"""
+from __future__ import annotations
+
+import math
+
+LANES = 128      # TPU vector lanes: minor dim of every tiled view
+ROWS = 256       # max rows per grid step: 3 operands * 256*128*4B < VMEM
+ROW_ALIGN = 8    # fp32 sublane tile: row counts are padded to this
+
+
+def padded_rows(n: int) -> int:
+    """Number of rows of the (R, LANES) view holding ``n`` elements."""
+    r = max(1, -(-n // LANES))
+    if r <= ROWS:
+        return r
+    return -(-r // ROW_ALIGN) * ROW_ALIGN
+
+
+def row_tile(r: int, interpret: bool = False, rows: int | None = None) -> int:
+    """Rows per grid step for an R-row buffer; always divides ``r``.
+
+    interpret: the interpreter (CPU correctness path) has no VMEM limit,
+    and its per-grid-step cost scales with the FULL operand size — a
+    multi-step grid is quadratic there — so interpret mode runs the whole
+    buffer as one grid step.
+    rows: explicit override (must divide r); used by tests to exercise
+    multi-step grids under the interpreter.
+    """
+    if rows is not None:
+        assert r % rows == 0, (r, rows)
+        return rows
+    if interpret or r <= ROWS:
+        return r
+    return math.gcd(r, ROWS)

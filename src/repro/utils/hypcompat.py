@@ -1,0 +1,98 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The test suite uses hypothesis when it is installed. When it is absent
+(the pinned CI image does not ship it), this module provides a tiny
+deterministic stand-in implementing the small strategy surface the tests
+actually use (floats / integers / lists, ``@given``, ``@settings``): each
+``@given`` test runs a fixed, seeded set of examples — boundary values
+first, then uniform draws — so the suite still exercises the property
+tests instead of skipping them wholesale.
+
+Usage in tests:  ``from repro.utils.hypcompat import given, settings, st``
+"""
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised implicitly when hypothesis exists
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _SEED = 0x4E70C0
+    _MAX_FALLBACK_EXAMPLES = 25   # cap: deterministic examples, not search
+
+    class _Strategy:
+        def __init__(self, sample, boundaries=()):
+            self._sample = sample
+            self.boundaries = tuple(boundaries)
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _Namespace:
+        @staticmethod
+        def floats(min_value=-1e9, max_value=1e9, allow_nan=True,
+                   allow_infinity=None, **_):
+            lo, hi = float(min_value), float(max_value)
+            bounds = [lo, hi] + ([0.0] if lo <= 0.0 <= hi else [])
+            return _Strategy(lambda rng: rng.uniform(lo, hi), bounds)
+
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1, **_):
+            lo, hi = int(min_value), int(max_value)
+            return _Strategy(lambda rng: rng.randint(lo, hi), [lo, hi])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_):
+            def gen(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(n)]
+            # boundary: shortest and longest lists of boundary elements
+            bounds = []
+            for size in (min_size, max_size):
+                for b in elements.boundaries or (0,):
+                    bounds.append([b] * size)
+            return _Strategy(gen, bounds)
+
+    st = _Namespace()
+
+    def settings(max_examples=None, deadline=None, **_):
+        def deco(fn):
+            if max_examples is not None:
+                fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest follows __wrapped__ when
+            # inspecting signatures and would mistake the property
+            # arguments for fixtures; the wrapper must look zero-arg.
+            def run():
+                # @settings usually sits ABOVE @given, so it annotates
+                # this wrapper, not the inner fn — check both.
+                requested = getattr(run, "_hyp_max_examples",
+                                    getattr(fn, "_hyp_max_examples", 100))
+                budget = min(requested, _MAX_FALLBACK_EXAMPLES)
+                rng = random.Random(_SEED)
+                # boundary examples first (aligned across strategies),
+                # then seeded uniform draws up to the budget.
+                n_bound = max((len(s.boundaries) for s in strategies),
+                              default=0)
+                examples = []
+                for i in range(n_bound):
+                    examples.append(tuple(
+                        s.boundaries[i % len(s.boundaries)]
+                        if s.boundaries else s.sample(rng)
+                        for s in strategies))
+                while len(examples) < budget:
+                    examples.append(tuple(s.sample(rng) for s in strategies))
+                for ex in examples[:budget]:
+                    fn(*ex)
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            return run
+        return deco

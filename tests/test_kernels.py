@@ -1,11 +1,13 @@
 """Per-kernel validation: sweep shapes/dtypes and assert_allclose against
-the pure-jnp oracles in repro/kernels/ref.py (kernels run in interpret
-mode on CPU; BlockSpec tiling is identical to the TPU path)."""
+the pure-jnp oracles in repro/kernels/ref.py. Kernels run in interpret
+mode on CPU with a single-step grid (see kernels.tiling.row_tile); the
+multi-step TPU index maps are exercised via the explicit ``rows=``
+override (test_packed.py::test_multi_step_grid_matches_single_step)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.utils.hypcompat import given, settings, st
 
 from repro.configs.base import HeLoCoConfig
 from repro.kernels import ops
