@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test bench bench-full
+.PHONY: verify test bench bench-full bench-runtime smoke-wallclock
 
 verify:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
@@ -18,3 +18,16 @@ bench:
 
 bench-full:
 	$(PYTHON) -m benchmarks.run --full
+
+# simulator vs threaded concurrent runtime (deterministic + free-running);
+# persists arrivals/sec, server occupancy, queue depth, overlap evidence
+# to BENCH_runtime.json
+bench-runtime:
+	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.run --runtime
+
+# tiny end-to-end wallclock-engine training run (the CI smoke job)
+smoke-wallclock:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.launch.train --arch tinygpt-15m \
+		--smoke --engine wallclock --free --pace-scale 0.02 \
+		--paces 1,1,2,6 --workers 4 --outer 8 --inner 2 \
+		--batch 2 --seq 16 --eval-every 8

@@ -1,0 +1,73 @@
+"""Wall-clock runtime benchmark: the serialized virtual-clock simulator
+vs the threaded ConcurrentRuntime (deterministic commit order and
+free-running) on the same heterogeneous non-IID config.
+
+Reported per engine: wall seconds, arrivals/sec, server occupancy
+(fraction of wall time spent applying outer updates), queue depth, and
+the overlap evidence the paper's wall-clock claims rest on — how many
+workers were mid-round at the moment the server applied an update, and
+total worker-compute seconds per wall second (compute_parallelism > 1
+means genuine concurrency). Persisted to BENCH_runtime.json by
+``benchmarks.run --runtime`` / ``make bench-runtime``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import base_run
+
+
+def run(outer: int = 16, inner: int = 4,
+        paces=(1.0, 1.0, 2.0, 6.0)) -> List[Dict]:
+    from repro.async_engine.engine import make_engine
+
+    rc = base_run(paces, method="async-heloco", non_iid=True,
+                  outer_steps=outer, inner_steps=inner)
+    rows: List[Dict] = []
+
+    t0 = time.time()
+    sim = make_engine(rc, "sim")
+    sim.run()
+    sim_wall = time.time() - t0
+    rows.append({
+        "name": "runtime/simulator_serialized",
+        "us_per_call": sim_wall / outer * 1e6,
+        "derived": f"wall={sim_wall:.2f}s arrivals/s={outer / sim_wall:.2f}",
+        "engine": "sim", "wall_seconds": sim_wall,
+        "arrivals_per_sec": outer / sim_wall,
+    })
+
+    for mode, kw in (("deterministic", {}),
+                     ("free", {"pace_scale": 0.02})):
+        eng = make_engine(rc, "wallclock", mode=mode, **kw)
+        eng.run()
+        s = eng.stats_summary()
+        rows.append({
+            "name": f"runtime/wallclock_{mode}",
+            "us_per_call": s["wall_seconds"] / max(s["arrivals"], 1) * 1e6,
+            "derived": (f"arrivals/s={s['arrivals_per_sec']:.2f} "
+                        f"occ={s['server_occupancy']:.2f} "
+                        f"par={s['compute_parallelism']:.2f} "
+                        f"qmax={s['queue_depth_max']} "
+                        f"overlap_max={s['overlap_max']}"),
+            "engine": "wallclock", **s,
+            "speedup_vs_sim": sim_wall / max(s["wall_seconds"], 1e-9),
+        })
+    return rows
+
+
+def summarize(rows: List[Dict]) -> str:
+    lines = ["engine/mode, arrivals/s, occupancy, parallelism, overlap_max"]
+    for r in rows:
+        lines.append(
+            f"{r['name']}, {r.get('arrivals_per_sec', 0):.2f}, "
+            f"{r.get('server_occupancy', float('nan')):.2f}, "
+            f"{r.get('compute_parallelism', float('nan')):.2f}, "
+            f"{r.get('overlap_max', '-')}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

@@ -1,9 +1,10 @@
 """Shared harness for the paper-reproduction benchmarks.
 
-Each benchmark builds RunConfigs for the paper's methods, runs the
-event-driven simulator (real training, virtual clock), and caches results
-as JSON under results/experiments/ so EXPERIMENTS.md assembly and reruns
-are cheap.
+Each benchmark builds RunConfigs for the paper's methods, runs a training
+engine (the event-driven simulator by default; pass engine="wallclock"
+for the threaded concurrent runtime — same Engine API, real overlap), and
+caches results as JSON under results/experiments/ so EXPERIMENTS.md
+assembly and reruns are cheap.
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config, reduced
 from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
-from repro.async_engine.simulator import AsyncSimulator, make_eval_fn
+from repro.async_engine.engine import make_engine, make_eval_fn
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/experiments")
 
@@ -55,24 +56,33 @@ def base_run(paces: Sequence[float], *, method: str, non_iid: bool,
         shard_assignment=shard_assignment)
 
 
-def _key(rc: RunConfig, eval_every: int) -> str:
+def _key(rc: RunConfig, eval_every: int, engine: str = "sim",
+         engine_kw: Optional[Dict] = None) -> str:
     blob = json.dumps(dataclasses.asdict(rc), sort_keys=True, default=str)
-    return hashlib.sha1((blob + str(eval_every)).encode()).hexdigest()[:16]
+    # keep pre-engine cache keys stable for the default simulator
+    tag = ("" if engine == "sim"
+           else engine + json.dumps(engine_kw or {}, sort_keys=True,
+                                    default=str))
+    return hashlib.sha1((blob + str(eval_every) + tag).encode()
+                        ).hexdigest()[:16]
 
 
 def run_cached(name: str, rc: RunConfig, eval_every: int = 0,
-               force: bool = False) -> Dict:
+               force: bool = False, engine: str = "sim",
+               **engine_kw) -> Dict:
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{name}__{_key(rc, eval_every)}.json")
+    path = os.path.join(
+        RESULTS_DIR, f"{name}__{_key(rc, eval_every, engine, engine_kw)}.json")
     if os.path.exists(path) and not force:
         return json.load(open(path))
-    sim = AsyncSimulator(rc)
-    eval_fn = make_eval_fn(sim, batch=8, seq=rc.seq_len)
+    eng = make_engine(rc, engine, **engine_kw)
+    eval_fn = make_eval_fn(eng, batch=8, seq=rc.seq_len)
     t0 = time.time()
-    hist = sim.run(eval_every=eval_every or max(rc.outer_steps // 8, 1),
+    hist = eng.run(eval_every=eval_every or max(rc.outer_steps // 8, 1),
                    eval_fn=eval_fn)
     out = {
         "name": name,
+        "engine": engine,
         "config": {"paces": rc.worker_paces, "method": rc.outer.method,
                    "non_iid": rc.non_iid, "dylu": rc.dylu,
                    "outer_steps": rc.outer_steps,
@@ -90,6 +100,8 @@ def run_cached(name: str, rc: RunConfig, eval_every: int = 0,
         "n_dropped": sum(1 for a in hist.arrivals if a.get("dropped")),
         "wall_seconds": time.time() - t0,
     }
+    if hasattr(eng, "stats_summary"):
+        out["runtime_stats"] = eng.stats_summary()
     json.dump(out, open(path, "w"), indent=1)
     return out
 

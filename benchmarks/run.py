@@ -15,24 +15,25 @@ import os
 import sys
 import time
 
-BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_arrival.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_arrival.json")
+BENCH_RUNTIME_JSON = os.path.join(_ROOT, "BENCH_runtime.json")
 
 
-def _persist(rows) -> None:
+def _persist(rows, path=BENCH_JSON) -> None:
     history = []
-    if os.path.exists(BENCH_JSON):
+    if os.path.exists(path):
         try:
-            with open(BENCH_JSON) as f:
+            with open(path) as f:
                 history = json.load(f)
         except (json.JSONDecodeError, OSError):
             history = []
     history.append({"unix_time": time.time(), "rows": rows})
-    tmp = BENCH_JSON + ".tmp"
+    tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(history, f, indent=1)
-    os.replace(tmp, BENCH_JSON)
-    print(f"# persisted {len(rows)} rows -> {BENCH_JSON}")
+    os.replace(tmp, path)
+    print(f"# persisted {len(rows)} rows -> {path}")
 
 
 def main() -> None:
@@ -41,7 +42,21 @@ def main() -> None:
                     help="paper-scale budgets (slow)")
     ap.add_argument("--skip-training", action="store_true",
                     help="only micro-benchmarks")
+    ap.add_argument("--runtime", action="store_true",
+                    help="wall-clock runtime benchmark (simulator vs "
+                         "threaded ConcurrentRuntime) -> BENCH_runtime.json")
     args = ap.parse_args()
+
+    if args.runtime:
+        from benchmarks import bench_runtime
+        outer, inner = (24, 8) if args.full else (12, 3)
+        print("name,us_per_call,derived")
+        rows = bench_runtime.run(outer, inner)
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        print("\n" + bench_runtime.summarize(rows))
+        _persist(rows, BENCH_RUNTIME_JSON)
+        return
 
     print("name,us_per_call,derived")
     from benchmarks import bench_kernels, bench_overhead

@@ -3,7 +3,8 @@ a few hundred steps, comparing HeLoCo to the paper's baselines under a
 chosen pace configuration. Demonstrates DyLU, compression, and stale-drop.
 
     PYTHONPATH=src python examples/heterogeneous_async.py \
-        --paces 1,1,6,6,6 --methods async-heloco,async-mla --outer 30
+        --paces 1,1,6,6,6 --methods async-heloco,async-mla --outer 30 \
+        --engine wallclock
 """
 import argparse
 
@@ -22,18 +23,21 @@ def main():
     ap.add_argument("--compression", default="none",
                     choices=["none", "int8", "topk"])
     ap.add_argument("--drop-stale-after", type=int, default=None)
+    ap.add_argument("--engine", default="sim", choices=["sim", "wallclock"],
+                    help="wallclock = threaded concurrent runtime "
+                         "(deterministic mode: same results, real overlap)")
     args = ap.parse_args()
 
     paces = tuple(float(p) for p in args.paces.split(","))
     print(f"paces={paces} non_iid={not args.iid} dylu={args.dylu} "
-          f"compression={args.compression}")
+          f"compression={args.compression} engine={args.engine}")
     print("method,final_loss,mean_staleness,sim_time_s,comm_MB")
     for method in args.methods.split(","):
         rc = base_run(paces, method=method, non_iid=not args.iid,
                       outer_steps=args.outer, inner_steps=args.inner,
                       dylu=args.dylu, compression=args.compression,
                       drop_stale_after=args.drop_stale_after)
-        r = run_cached(f"example_{method}", rc)
+        r = run_cached(f"example_{method}", rc, engine=args.engine)
         tau = sum(r["staleness"]) / max(len(r["staleness"]), 1)
         print(f"{method},{r['final_loss']:.4f},{tau:.2f},"
               f"{r['final_time']:.0f},{r['comm_bytes'] / 1e6:.1f}")

@@ -1,0 +1,516 @@
+"""Shared Engine contract for the asynchronous training runtimes.
+
+Two engines implement it:
+
+  - ``AsyncSimulator`` (``repro.async_engine.simulator``): event-driven
+    virtual clock — the paper's reference runtime. Inner rounds execute
+    serially at event-pop time; only *time* is simulated.
+  - ``ConcurrentRuntime`` (``repro.async_engine.runtime``): wall-clock
+    concurrency — one thread per worker (optionally pinned to its own
+    ``jax.devices()`` entry), pseudo-gradients travel through a
+    ``Transport``, and the server applies the packed fused update while
+    other workers keep computing.
+
+The contract is enforced structurally: everything that must behave
+identically across engines lives here —
+
+  - worker bookkeeping (``Worker``), dispatch capture (``_make_task``),
+    the functional inner round (``_execute``: reads only its ``RoundTask``
+    snapshot, so it is safe on any thread and a lost round leaves no
+    trace), and the server-side commit (``_commit``: optimizer state,
+    token/byte accounting, ``Synchronizer.on_arrival``);
+  - the virtual-clock event loop (``_run_async``) with failure injection,
+    elastic membership, and checkpoint cadence. The deterministic
+    wall-clock mode reuses this loop verbatim — arrivals are committed in
+    virtual-deadline order regardless of which thread finished first,
+    which is the determinism contract (see docs/runtime.md): a
+    FIFO-forced ``ConcurrentRuntime`` reproduces the simulator's arrival
+    sequence ``(wid, s_i, staleness, lang)`` exactly.
+
+Subclasses provide two hooks: ``_submit`` (where a captured round goes —
+nowhere for the simulator, a worker inbox for the runtime) and
+``_obtain`` (how the result comes back — computed in-line vs. received
+through the transport).
+"""
+from __future__ import annotations
+
+import heapq
+import os
+import time as _time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import RunConfig
+from repro.core.compression import roundtrip_with_error_feedback
+from repro.async_engine.server import Synchronizer
+from repro.data.synthetic import ShardSampler, eval_batches, make_language_specs
+from repro.models import build_model
+from repro.optim.adamw import init_adam
+from repro.train.inner import pseudo_gradient, run_inner
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Shared datatypes
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Worker:
+    wid: int
+    pace: float                      # seconds per inner step (virtual)
+    lang: Optional[int]              # shard index (None = IID mixture)
+    params: PyTree = None            # in-flight initialization (captured)
+    opt: Any = None                  # persistent AdamW state
+    ef: PyTree = None                # compression error-feedback buffer
+    s_i: int = 0                     # outer step at dispatch
+    h_steps: int = 0                 # local steps this round
+    cur_lang: Optional[int] = None   # shard chosen for the current round
+    inner_step_count: int = 0        # lifetime inner steps (for LR schedule)
+    alive: bool = True
+    dispatch_time: float = 0.0
+    generation: int = 0              # incremented on crash: stale rounds dropped
+    round_seq: int = 0               # monotonically increasing dispatch counter
+    in_flight: bool = False          # a dispatched round has not committed yet
+    pending_task_id: Optional[int] = None  # engine-unique id of that round
+    device: Any = None               # optional pinned jax device
+
+
+@dataclass
+class FailureEvent:
+    time: float
+    wid: int
+    restart_delay: float = 60.0      # simulated seconds until rejoin
+
+
+@dataclass
+class ElasticEvent:
+    time: float
+    action: str                      # "join" | "leave"
+    wid: int
+    pace: float = 1.0
+    lang: Optional[int] = None
+
+
+@dataclass
+class History:
+    arrivals: List[Dict] = field(default_factory=list)
+    evals: List[Dict] = field(default_factory=list)
+    tokens: int = 0
+    comm_bytes: int = 0
+    final_time: float = 0.0
+
+    def summary(self) -> Dict:
+        return {
+            "outer_steps": len(self.arrivals),
+            "tokens": self.tokens,
+            "comm_bytes": self.comm_bytes,
+            "final_time": self.final_time,
+            "final_eval": self.evals[-1] if self.evals else None,
+        }
+
+
+@dataclass
+class RoundTask:
+    """Snapshot of one dispatched inner round. Captured on the server
+    thread; ``_execute`` reads only this, never the live ``Worker``, so a
+    concurrently-injected crash (generation bump) cannot race the compute
+    — the stale result is simply discarded at commit."""
+    task_id: int                     # engine-unique: never reused, even when
+    wid: int                         # a wid rejoins as a fresh Worker
+    generation: int
+    round_seq: int
+    params: PyTree
+    opt: Any
+    ef: PyTree
+    s_i: int
+    h_steps: int
+    lang: Optional[int]
+    inner_step_offset: int
+    dispatch_time: float = 0.0
+    sleep_per_step: float = 0.0      # free-running pace throttle (wall sec)
+    device: Any = None
+
+
+@dataclass
+class RoundResult:
+    task_id: int
+    wid: int
+    generation: int
+    round_seq: int
+    delta: PyTree
+    opt: Any
+    ef: PyTree
+    nbytes: int
+    s_i: int
+    h_steps: int
+    lang: Optional[int]
+    compute_seconds: float = 0.0
+
+
+class Engine(Protocol):
+    """What callers (launchers, benchmarks, examples) may rely on."""
+    cfg: RunConfig
+    server: Synchronizer
+    workers: Dict[int, Worker]
+    history: History
+    time: float
+
+    def run(self, eval_every: int = 0,
+            eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
+            ckpt_every: int = 0, ckpt_dir: str = "") -> History: ...
+    def checkpoint(self, ckpt_dir: str) -> str: ...
+    def restore(self, path: str) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# Shared engine implementation
+# ---------------------------------------------------------------------------
+
+class EngineBase:
+    def __init__(self, run_cfg: RunConfig, *,
+                 failures: Optional[List[FailureEvent]] = None,
+                 elastic: Optional[List[ElasticEvent]] = None):
+        self.cfg = run_cfg
+        self.model = build_model(run_cfg.model)
+        self.specs = make_language_specs(run_cfg.model.vocab_size,
+                                         n_langs=max(run_cfg.n_workers, 2),
+                                         seed=run_cfg.seed)
+        key = jax.random.PRNGKey(run_cfg.seed)
+        init_params = self.model.init(key)
+        self.server = Synchronizer(init_params, run_cfg.outer,
+                                   run_cfg.n_workers)
+        self.workers: Dict[int, Worker] = {}
+        for wid in range(run_cfg.n_workers):
+            pace = run_cfg.worker_paces[wid % len(run_cfg.worker_paces)]
+            lang = (wid % len(self.specs)) if run_cfg.non_iid else None
+            self.workers[wid] = Worker(
+                wid=wid, pace=pace, lang=lang, opt=init_adam(init_params))
+        self.failures = sorted(failures or [], key=lambda f: f.time)
+        self.elastic = sorted(elastic or [], key=lambda e: e.time)
+        self.lang_tokens = np.zeros(len(self.specs), np.int64)
+        self.history = History()
+        self.time = 0.0
+        self._heap: List[Tuple[float, int, str, int, int]] = []
+        self._seq = 0
+        self._task_counter = 0
+        self._min_pace = min(w.pace for w in self.workers.values())
+
+    # -------------------------------------------------------- engine hooks
+    def _submit(self, task: RoundTask) -> None:
+        """Hand a captured round to whatever executes it."""
+        raise NotImplementedError
+
+    def _obtain(self, w: Worker) -> RoundResult:
+        """Produce/collect the result of the worker's outstanding round."""
+        raise NotImplementedError
+
+    def _sleep_per_step(self, w: Worker) -> float:
+        """Wall-clock pace throttle (free-running runtime only)."""
+        return 0.0
+
+    def _on_worker_removed(self, w: Worker) -> None:
+        """Crash / elastic-leave notification (runtime stops the thread)."""
+
+    # ------------------------------------------------------------------ utils
+    def _push(self, time: float, kind: str, wid: int, gen: int):
+        heapq.heappush(self._heap, (time, self._seq, kind, wid, gen))
+        self._seq += 1
+
+    def _h_steps(self, w: Worker) -> int:
+        if self.cfg.dylu:
+            return max(1, int(round(self.cfg.inner_steps *
+                                    self._min_pace / w.pace)))
+        return self.cfg.inner_steps
+
+    def _pick_lang(self, w: Worker) -> Optional[int]:
+        if not self.cfg.non_iid:
+            return None
+        if self.cfg.shard_assignment == "flexible":
+            return int(np.argmin(self.lang_tokens))
+        return w.lang
+
+    # --------------------------------------------------------------- dispatch
+    def _make_task(self, w: Worker) -> RoundTask:
+        """Capture the worker's initialization + round snapshot (server
+        thread only — reads Synchronizer state and shard accounting)."""
+        w.params = jax.tree.map(jnp.copy, self.server.worker_init())
+        w.s_i = self.server.t
+        w.h_steps = self._h_steps(w)
+        w.cur_lang = self._pick_lang(w)
+        w.dispatch_time = self.time
+        w.round_seq += 1
+        w.in_flight = True
+        self._task_counter += 1
+        w.pending_task_id = self._task_counter
+        return RoundTask(
+            task_id=self._task_counter,
+            wid=w.wid, generation=w.generation, round_seq=w.round_seq,
+            params=w.params, opt=w.opt, ef=w.ef, s_i=w.s_i,
+            h_steps=w.h_steps, lang=w.cur_lang,
+            inner_step_offset=w.inner_step_count,
+            dispatch_time=self.time,
+            sleep_per_step=self._sleep_per_step(w), device=w.device)
+
+    def _dispatch(self, w: Worker):
+        """Capture the round, schedule its virtual return, submit it."""
+        task = self._make_task(w)
+        if self._use_virtual_clock():
+            self._push(self.time + task.h_steps * w.pace, "return",
+                       w.wid, w.generation)
+        self._submit(task)
+
+    def _use_virtual_clock(self) -> bool:
+        return True
+
+    # ------------------------------------------------------------ inner round
+    def _execute(self, task: RoundTask) -> RoundResult:
+        """Run one inner round from the task snapshot. Reads no mutable
+        engine state — safe to call from any thread, results of a lost
+        (crashed-generation) round can be discarded without side effects."""
+        t0 = _time.perf_counter()
+        sampler = ShardSampler(self.specs, task.lang, self.cfg.batch_size,
+                               self.cfg.seq_len,
+                               seed=self.cfg.seed * 977 + task.wid)
+        result = run_inner(self.model, self.cfg.inner, task.params, task.opt,
+                           sampler, task.h_steps,
+                           step_offset=task.inner_step_offset)
+        delta = pseudo_gradient(task.params, result.params)
+        # int8 rides the server's packed layout: per-block scales, O(1)
+        # kernel launches, and a packed error-feedback buffer per worker.
+        layout = (self.server.layout
+                  if self.cfg.outer.compression == "int8" else None)
+        decoded, ef, nbytes = roundtrip_with_error_feedback(
+            delta, task.ef, self.cfg.outer.compression,
+            self.cfg.outer.topk_ratio, layout=layout)
+        if not self.cfg.outer.error_feedback:
+            ef = None
+        return RoundResult(
+            task_id=task.task_id, wid=task.wid, generation=task.generation,
+            round_seq=task.round_seq, delta=decoded, opt=result.opt, ef=ef,
+            nbytes=nbytes, s_i=task.s_i, h_steps=task.h_steps,
+            lang=task.lang, compute_seconds=_time.perf_counter() - t0)
+
+    # ----------------------------------------------------------------- commit
+    def _commit_worker(self, w: Worker, res: RoundResult):
+        """Fold a completed round back into worker + shared accounting
+        (server thread only; order of commits defines the history)."""
+        w.opt = res.opt
+        w.ef = res.ef
+        w.inner_step_count += res.h_steps
+        w.in_flight = False
+        w.pending_task_id = None
+        toks = res.h_steps * self.cfg.batch_size * self.cfg.seq_len
+        self.history.tokens += toks
+        if res.lang is not None:
+            self.lang_tokens[res.lang] += toks
+        self.history.comm_bytes += res.nbytes
+
+    def _commit(self, w: Worker, res: RoundResult):
+        self._commit_worker(w, res)
+        rec = self.server.on_arrival(
+            res.delta, res.s_i, res.wid, sim_time=self.time,
+            lang=(self.specs[res.lang].lang
+                  if res.lang is not None else "iid"))
+        self.history.arrivals.append(rec.__dict__)
+        return rec
+
+    def _post_commit(self, eval_every, eval_fn, ckpt_every, ckpt_dir):
+        t = self.server.t
+        if eval_every and eval_fn and t % eval_every == 0:
+            self.history.evals.append(eval_fn(self.server.state.params,
+                                              t, self.time))
+        if ckpt_every and ckpt_dir and t % ckpt_every == 0:
+            self.checkpoint(ckpt_dir)
+
+    def _finalize(self, eval_fn) -> History:
+        self.history.final_time = self.time
+        if eval_fn and (not self.history.evals
+                        or self.history.evals[-1]["step"] != self.server.t):
+            self.history.evals.append(eval_fn(self.server.state.params,
+                                              self.server.t, self.time))
+        return self.history
+
+    # -------------------------------------------------------------- main loop
+    def run(self, eval_every: int = 0,
+            eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
+            ckpt_every: int = 0, ckpt_dir: str = "") -> History:
+        if self.cfg.outer.method == "sync_nesterov":
+            return self._run_sync(eval_every, eval_fn, ckpt_every, ckpt_dir)
+        return self._run_async(eval_every, eval_fn, ckpt_every, ckpt_dir)
+
+    def _run_async(self, eval_every, eval_fn, ckpt_every, ckpt_dir) -> History:
+        """Virtual-clock event loop. Used by the simulator AND by the
+        deterministic wall-clock runtime (which overlaps compute but
+        commits in exactly this event order)."""
+        for w in self.workers.values():
+            if w.alive and not w.in_flight:
+                self._dispatch(w)
+        fail_idx = el_idx = 0
+        target = self.cfg.outer_steps
+        while self.server.t < target and self._heap:
+            time, _, kind, wid, gen = heapq.heappop(self._heap)
+            # interleave failure / elastic events that occur first
+            while (fail_idx < len(self.failures)
+                   and self.failures[fail_idx].time <= time):
+                self._handle_failure(self.failures[fail_idx])
+                fail_idx += 1
+            while (el_idx < len(self.elastic)
+                   and self.elastic[el_idx].time <= time):
+                self._handle_elastic(self.elastic[el_idx])
+                el_idx += 1
+            self.time = time
+            if kind == "restart":
+                w = self.workers.get(wid)
+                if w is not None:
+                    w.alive = True
+                    self._dispatch(w)
+                continue
+            w = self.workers.get(wid)
+            if w is None or not w.alive or gen != w.generation:
+                continue  # stale event (crashed/removed worker)
+            res = self._obtain(w)
+            self._commit(w, res)
+            self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
+            if self.server.t < target:
+                self._dispatch(w)
+        return self._finalize(eval_fn)
+
+    # ------------------------------------------------------------- sync mode
+    def _execute_sync(self, tasks: List[RoundTask]) -> List[RoundResult]:
+        """Barrier round execution; the concurrent runtime overrides this
+        to compute all workers in parallel threads."""
+        return [self._execute(t) for t in tasks]
+
+    def _run_sync(self, eval_every, eval_fn, ckpt_every, ckpt_dir) -> History:
+        target = self.cfg.outer_steps
+        while self.server.t < target:
+            alive = [w for w in self.workers.values() if w.alive]
+            tasks = [self._make_task(w) for w in alive]
+            results = self._execute_sync(tasks)
+            round_time = 0.0
+            for w, res in zip(alive, results):
+                self._commit_worker(w, res)
+                round_time = max(round_time, w.h_steps * w.pace)
+            self.time += round_time  # barrier: slowest worker gates the round
+            rec = self.server.on_sync_round([r.delta for r in results],
+                                            sim_time=self.time)
+            self.history.arrivals.append(rec.__dict__)
+            self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
+        return self._finalize(eval_fn)
+
+    # ------------------------------------------------------- fault tolerance
+    def _crash_worker(self, w: Worker):
+        """Shared crash bookkeeping: the in-flight round is lost."""
+        w.alive = False
+        w.generation += 1
+        w.ef = None
+        w.in_flight = False
+        w.pending_task_id = None
+
+    def _handle_failure(self, ev: FailureEvent):
+        w = self.workers.get(ev.wid)
+        if w is None:
+            return
+        self._crash_worker(w)
+        self._push(ev.time + ev.restart_delay, "restart", w.wid, w.generation)
+
+    def _handle_elastic(self, ev: ElasticEvent):
+        if ev.action == "join":
+            w = Worker(wid=ev.wid, pace=ev.pace, lang=ev.lang,
+                       opt=init_adam(self.server.state.params))
+            self.workers[ev.wid] = w
+            self.server.set_n_workers(
+                sum(1 for x in self.workers.values() if x.alive))
+            self._dispatch(w)
+        elif ev.action == "leave":
+            w = self.workers.pop(ev.wid, None)
+            if w is not None:
+                w.generation += 1
+                self._on_worker_removed(w)
+            self.server.set_n_workers(
+                sum(1 for x in self.workers.values() if x.alive))
+        self._min_pace = min((x.pace for x in self.workers.values()
+                              if x.alive), default=1.0)
+
+    # ---------------------------------------------------------- checkpointing
+    def server_tree(self) -> Dict:
+        return {"params": self.server.state.params,
+                "momentum": self.server.state.momentum,
+                "step": self.server.state.step}
+
+    def checkpoint(self, ckpt_dir: str) -> str:
+        path = os.path.join(ckpt_dir, f"step_{self.server.t}.npz")
+        meta = {"time": self.time, "tokens": int(self.history.tokens)}
+        ckpt.save(path, self.server_tree(), meta)
+        return path
+
+    def restore(self, path: str):
+        tree, meta = ckpt.restore(path, self.server_tree())
+        self.server.state = self.server.state._replace(
+            params=tree["params"],
+            momentum=tree["momentum"],
+            step=jnp.asarray(tree["step"]))
+        self.time = float(meta.get("time", 0.0))
+        self.history.tokens = int(meta.get("tokens", 0))
+        # in-flight worker rounds are lost on restart (real-world semantics)
+        self._heap.clear()
+        for w in self.workers.values():
+            w.generation += 1
+            w.in_flight = False
+            w.pending_task_id = None
+            if w.alive:
+                self._dispatch(w)
+
+
+# ---------------------------------------------------------------------------
+# Factory + shared eval protocol
+# ---------------------------------------------------------------------------
+
+ENGINES = ("sim", "wallclock")
+
+
+def make_engine(run_cfg: RunConfig, engine: str = "sim", *,
+                failures: Optional[List[FailureEvent]] = None,
+                elastic: Optional[List[ElasticEvent]] = None,
+                **runtime_kw) -> Engine:
+    """Build a training engine. ``engine``: "sim" (virtual clock) or
+    "wallclock" (threaded ``ConcurrentRuntime``; extra keywords — ``mode``,
+    ``pace_scale``, ``transport``, ... — are forwarded to it)."""
+    if engine in ("sim", "simulator", "virtual"):
+        if runtime_kw:
+            raise TypeError(f"simulator takes no runtime options: {runtime_kw}")
+        from repro.async_engine.simulator import AsyncSimulator
+        return AsyncSimulator(run_cfg, failures=failures, elastic=elastic)
+    if engine in ("wallclock", "concurrent", "runtime"):
+        from repro.async_engine.runtime import ConcurrentRuntime
+        return ConcurrentRuntime(run_cfg, failures=failures, elastic=elastic,
+                                 **runtime_kw)
+    raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
+
+
+def make_eval_fn(engine, batch: int = 16, seq: int = None):
+    """Per-language + mean validation loss (Fig. 2/3 protocol)."""
+    seq = seq or engine.cfg.seq_len
+    batches = eval_batches(engine.specs, batch, seq,
+                           seed=engine.cfg.seed + 4242)
+    model = engine.model
+
+    @jax.jit
+    def loss_of(params, tokens, labels):
+        return model.loss(params, {"tokens": tokens, "labels": labels})[0]
+
+    def eval_fn(params, step, time):
+        per = {}
+        for b in batches:
+            per[b["lang"]] = float(loss_of(params, jnp.asarray(b["tokens"]),
+                                           jnp.asarray(b["labels"])))
+        mean = float(np.mean(list(per.values())))
+        return {"step": step, "time": time, "mean": mean, "per_lang": per}
+
+    return eval_fn

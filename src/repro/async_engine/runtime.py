@@ -1,0 +1,376 @@
+"""Wall-clock concurrent runtime: real asynchronous workers behind the
+shared ``Engine`` API.
+
+Each worker runs in its own thread (optionally pinned to its own
+``jax.devices()`` entry when more than one is visible), executes the same
+functional inner round as the simulator (``EngineBase._execute``), and
+pushes its compressed pseudo-gradient through a ``Transport`` (bounded
+in-process queue today; the interface leaves room for a socket backend).
+The server loop drains arrivals and applies the packed fused update from
+``Synchronizer.on_arrival`` while the other workers keep computing — the
+compute/update overlap the paper's wall-clock claims rest on.
+
+Two commit orders:
+
+  mode="deterministic" (default)
+      The virtual-clock event loop from ``EngineBase`` runs unchanged on
+      the server thread; compute is merely *eager* (dispatched to the
+      worker thread at capture time) instead of lazy. Arrivals are
+      committed in virtual-deadline order no matter which thread finishes
+      first, so with a fixed seed this runtime reproduces the simulator's
+      arrival sequence ``(wid, s_i, staleness, lang)`` exactly and its
+      final parameters to fp32 tolerance — the determinism contract
+      (docs/runtime.md) and the acceptance anchor for every wall-clock
+      experiment.
+
+  mode="free"
+      True arrival order: first pseudo-gradient through the transport is
+      applied first. ``pace_scale`` maps the configured virtual paces
+      onto wall-clock sleeps (a worker with pace p takes at least
+      ``h * p * pace_scale`` wall seconds per round), reproducing the
+      paper's (1, 2, 6, 15)-style device heterogeneity on homogeneous
+      hardware. Failure / elastic event times are interpreted on the same
+      scaled clock.
+
+Fault tolerance rides the generation counters the simulator already
+uses: a crash bumps the worker's generation, so the in-flight round that
+eventually lands through the transport is discarded at the server —
+exactly a lost round in a real deployment. The thread itself is only
+torn down on elastic leave / shutdown (poison pill + transport close).
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.async_engine.engine import (
+    ElasticEvent, EngineBase, FailureEvent, History, RoundResult, RoundTask,
+    Worker,
+)
+from repro.async_engine.transport import (
+    InProcTransport, Transport, TransportClosed, TransportTimeout,
+)
+from repro.configs.base import RunConfig
+
+PyTree = Any
+
+
+@dataclass
+class RoundError:
+    """A worker thread raised; carried to the server and re-raised there."""
+    wid: int
+    generation: int
+    round_seq: int
+    error: str
+
+
+class ConcurrentRuntime(EngineBase):
+    def __init__(self, run_cfg: RunConfig, *,
+                 failures: Optional[List[FailureEvent]] = None,
+                 elastic: Optional[List[ElasticEvent]] = None,
+                 transport: Optional[Transport] = None,
+                 mode: str = "deterministic",
+                 pace_scale: float = 0.0,
+                 pin_devices: bool = True,
+                 queue_capacity: Optional[int] = None,
+                 result_timeout: float = 600.0):
+        if mode not in ("deterministic", "free"):
+            raise ValueError(f"mode must be 'deterministic' or 'free': {mode}")
+        super().__init__(run_cfg, failures=failures, elastic=elastic)
+        self.mode = mode
+        self.pace_scale = pace_scale
+        self.result_timeout = result_timeout
+        self._capacity = queue_capacity or max(2 * len(self.workers), 4)
+        self._own_transport = transport is None
+        self.transport = transport or InProcTransport(self._capacity)
+        self._inboxes: Dict[int, "_queue.Queue"] = {}
+        self._threads: Dict[int, threading.Thread] = {}
+        self._results: Dict[int, RoundResult] = {}      # task_id -> result
+        self._computing = 0
+        self._comp_lock = threading.Lock()
+        self._shut = False
+        self.stats: Dict[str, Any] = {
+            "mode": mode, "arrivals": 0, "server_busy_seconds": 0.0,
+            "wall_seconds": 0.0, "queue_depth_samples": [],
+            "overlap_samples": [], "compute_seconds_total": 0.0,
+        }
+        devices = jax.devices()
+        if pin_devices and len(devices) > 1:
+            for w in self.workers.values():
+                w.device = devices[w.wid % len(devices)]
+
+    # ------------------------------------------------------- worker threads
+    def _start_worker_thread(self, wid: int):
+        inbox: "_queue.Queue[Optional[RoundTask]]" = _queue.Queue()
+        t = threading.Thread(target=self._worker_loop, args=(inbox,),
+                             name=f"heloco-worker-{wid}", daemon=True)
+        self._inboxes[wid] = inbox
+        self._threads[wid] = t
+        t.start()
+
+    def _worker_loop(self, inbox):
+        while True:
+            task = inbox.get()
+            if task is None:
+                return
+            t0 = time.monotonic()
+            with self._comp_lock:
+                self._computing += 1
+            try:
+                if task.device is not None:
+                    with jax.default_device(task.device):
+                        out: Any = self._execute(task)
+                else:
+                    out = self._execute(task)
+            except Exception as e:                      # noqa: BLE001
+                out = RoundError(task.wid, task.generation,
+                                 task.round_seq, repr(e))
+            finally:
+                # the throttle sleep below is emulated device time, not
+                # real compute: keep it out of the overlap evidence
+                with self._comp_lock:
+                    self._computing -= 1
+            # pace throttle: a device at `pace` sec/step takes at least
+            # h * pace * pace_scale wall seconds per round
+            if task.sleep_per_step > 0 and not isinstance(out, RoundError):
+                rest = (task.h_steps * task.sleep_per_step
+                        - (time.monotonic() - t0))
+                if rest > 0:
+                    time.sleep(rest)
+            try:
+                self.transport.send(out)
+            except TransportClosed:
+                return                                  # shutdown race: drop
+
+    # --------------------------------------------------------- engine hooks
+    def _use_virtual_clock(self) -> bool:
+        return self.mode == "deterministic"
+
+    def _sleep_per_step(self, w: Worker) -> float:
+        return w.pace * self.pace_scale if self.mode == "free" else 0.0
+
+    def _submit(self, task: RoundTask):
+        self._ensure_open()
+        th = self._threads.get(task.wid)
+        if th is None or not th.is_alive():
+            self._start_worker_thread(task.wid)
+        self._inboxes[task.wid].put(task)
+
+    def _recv_result(self, timeout: Optional[float] = None) -> RoundResult:
+        """One transport message, with stats + error unwrapping. With an
+        explicit ``timeout`` the ``TransportTimeout`` propagates (polling
+        callers keep their event clock ticking); without one it is a hard
+        liveness failure."""
+        try:
+            msg = self.transport.recv(
+                timeout=self.result_timeout if timeout is None else timeout)
+        except TransportTimeout:
+            if timeout is not None:
+                raise
+            raise RuntimeError(
+                f"no arrival within {self.result_timeout}s — worker thread "
+                f"dead or wedged (threads alive: "
+                f"{[w for w, t in self._threads.items() if t.is_alive()]})")
+        self.stats["queue_depth_samples"].append(self.transport.depth())
+        if isinstance(msg, RoundError):
+            raise RuntimeError(
+                f"worker {msg.wid} round {msg.round_seq} failed: {msg.error}")
+        self.stats["compute_seconds_total"] += msg.compute_seconds
+        return msg
+
+    def _is_current(self, res: RoundResult) -> bool:
+        """A result counts only if it is the round its worker is waiting
+        on. Task ids are engine-unique, so a departed incarnation of a
+        reused wid (or a crashed generation) can never be mistaken for
+        the live worker's round."""
+        w = self.workers.get(res.wid)
+        return w is not None and res.task_id == w.pending_task_id
+
+    def _obtain(self, w: Worker) -> RoundResult:
+        """Block until THIS worker's outstanding round has landed; results
+        from other workers are parked, stale rounds dropped (lost
+        in-flight rounds of crashed / departed workers)."""
+        want = w.pending_task_id
+        while want not in self._results:
+            res = self._recv_result()
+            if self._is_current(res):
+                self._results[res.task_id] = res
+        return self._results.pop(want)
+
+    def _commit(self, w: Worker, res: RoundResult):
+        with self._comp_lock:
+            overlap = self._computing
+        t0 = time.monotonic()
+        rec = super()._commit(w, res)
+        # materialize the outer step so busy time is real, not dispatch time
+        jax.block_until_ready(self.server._pbuf if self.server.packed
+                              else jax.tree.leaves(self.server.state.params))
+        self.stats["server_busy_seconds"] += time.monotonic() - t0
+        self.stats["overlap_samples"].append(overlap)
+        self.stats["arrivals"] += 1
+        return rec
+
+    def _crash_worker(self, w: Worker):
+        if w.pending_task_id is not None:               # drop a parked result
+            self._results.pop(w.pending_task_id, None)
+        super()._crash_worker(w)
+
+    def _on_worker_removed(self, w: Worker):
+        inbox = self._inboxes.pop(w.wid, None)
+        if inbox is not None:
+            inbox.put(None)                             # poison pill
+        self._threads.pop(w.wid, None)
+        if w.pending_task_id is not None:
+            self._results.pop(w.pending_task_id, None)
+
+    # ------------------------------------------------------------ lifecycle
+    def _ensure_open(self):
+        if self._shut:
+            if not self._own_transport:
+                raise RuntimeError("transport closed; inject a fresh one")
+            self.transport = InProcTransport(self._capacity)
+            self._shut = False
+
+    def shutdown(self):
+        """Tear down worker threads. Idempotent; ``run``/``restore`` after
+        shutdown transparently rebuild the channel + threads."""
+        self._shut = True
+        self.transport.close()
+        for inbox in self._inboxes.values():
+            inbox.put(None)
+        for t in self._threads.values():
+            t.join(timeout=5.0)
+        self._inboxes.clear()
+        self._threads.clear()
+        self._results.clear()
+
+    # -------------------------------------------------------------- run
+    def run(self, eval_every: int = 0,
+            eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
+            ckpt_every: int = 0, ckpt_dir: str = "") -> History:
+        t0 = time.monotonic()
+        try:
+            if (self.mode == "free"
+                    and self.cfg.outer.method != "sync_nesterov"):
+                hist = self._run_free(eval_every, eval_fn, ckpt_every,
+                                      ckpt_dir)
+            else:
+                hist = super().run(eval_every, eval_fn, ckpt_every, ckpt_dir)
+        finally:
+            self.stats["wall_seconds"] += time.monotonic() - t0
+            self.shutdown()
+        return hist
+
+    # ------------------------------------------------------- free-run loop
+    def _run_free(self, eval_every, eval_fn, ckpt_every, ckpt_dir) -> History:
+        """True arrival order on the wall clock. ``self.time`` is reported
+        in virtual seconds (wall / pace_scale) so histories stay
+        comparable with the simulator; with pace_scale == 0 it is raw wall
+        seconds. Failure / elastic / restart times live on that clock."""
+        target = self.cfg.outer_steps
+        t0 = time.monotonic()
+        scale = self.pace_scale if self.pace_scale > 0 else 1.0
+        fail_idx = el_idx = 0
+        restarts: List[Tuple[float, int]] = []
+        for w in self.workers.values():
+            if w.alive and not w.in_flight:
+                self._dispatch(w)
+
+        def vnow() -> float:
+            return (time.monotonic() - t0) / scale
+
+        def process_events(vt: float):
+            nonlocal fail_idx, el_idx
+            while (fail_idx < len(self.failures)
+                   and self.failures[fail_idx].time <= vt):
+                ev = self.failures[fail_idx]
+                fail_idx += 1
+                w = self.workers.get(ev.wid)
+                if w is None:
+                    continue
+                self._crash_worker(w)
+                restarts.append((ev.time + ev.restart_delay, ev.wid))
+                restarts.sort()
+            while (el_idx < len(self.elastic)
+                   and self.elastic[el_idx].time <= vt):
+                self._handle_elastic(self.elastic[el_idx])
+                el_idx += 1
+            while restarts and restarts[0][0] <= vt:
+                _, wid = restarts.pop(0)
+                w = self.workers.get(wid)
+                if w is not None and not w.alive:
+                    w.alive = True
+                    self._dispatch(w)
+
+        def progress_possible() -> bool:
+            """Someone will eventually produce an arrival: a live worker,
+            a pending restart, or an unfired failure/elastic event."""
+            return (any(w.alive for w in self.workers.values())
+                    or bool(restarts)
+                    or fail_idx < len(self.failures)
+                    or el_idx < len(self.elastic))
+
+        while self.server.t < target:
+            process_events(vnow())
+            if not progress_possible():
+                break                   # every worker gone: starved run
+            try:
+                msg = self._recv_result(timeout=0.05)
+            except TransportTimeout:
+                continue                # keep event clock ticking
+            if not self._is_current(msg) or not self.workers[msg.wid].alive:
+                continue                # stale: crashed / departed worker
+            w = self.workers[msg.wid]
+            self.time = vnow()
+            self._commit(w, msg)
+            self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
+            if self.server.t < target:
+                process_events(vnow())
+                if w.alive:
+                    self._dispatch(w)
+        self.time = vnow()
+        return self._finalize(eval_fn)
+
+    # -------------------------------------------------------- sync barrier
+    def _execute_sync(self, tasks: List[RoundTask]) -> List[RoundResult]:
+        """Sync DiLoCo round with genuinely parallel workers: all inner
+        rounds run concurrently, the barrier is the transport collect."""
+        for task in tasks:
+            self._submit(task)
+        want = {t.task_id: i for i, t in enumerate(tasks)}
+        got: Dict[int, RoundResult] = {}
+        while len(got) < len(tasks):
+            res = self._recv_result()
+            idx = want.get(res.task_id)
+            if idx is not None:
+                got[idx] = res
+        return [got[i] for i in range(len(tasks))]
+
+    # ----------------------------------------------------------- reporting
+    def stats_summary(self) -> Dict[str, Any]:
+        q = self.stats["queue_depth_samples"]
+        ov = self.stats["overlap_samples"]
+        wall = max(self.stats["wall_seconds"], 1e-9)
+        return {
+            "mode": self.mode,
+            "arrivals": self.stats["arrivals"],
+            "wall_seconds": self.stats["wall_seconds"],
+            "arrivals_per_sec": self.stats["arrivals"] / wall,
+            "server_busy_seconds": self.stats["server_busy_seconds"],
+            "server_occupancy": self.stats["server_busy_seconds"] / wall,
+            "compute_seconds_total": self.stats["compute_seconds_total"],
+            # >1.0 means workers computed more seconds than wall passed:
+            # genuine concurrency
+            "compute_parallelism": self.stats["compute_seconds_total"] / wall,
+            "queue_depth_mean": (sum(q) / len(q)) if q else 0.0,
+            "queue_depth_max": max(q) if q else 0,
+            # workers mid-round at the moment the server applied an update
+            "overlap_mean": (sum(ov) / len(ov)) if ov else 0.0,
+            "overlap_max": max(ov) if ov else 0,
+            "overlap_commits": sum(1 for x in ov if x >= 1),
+        }

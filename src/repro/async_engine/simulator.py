@@ -1,331 +1,49 @@
 """Event-driven virtual-clock simulator for heterogeneous asynchronous
 low-communication training.
 
-This is the reference runtime for every paper experiment: worker paces map
+This is the reference engine for every paper experiment: worker paces map
 1:1 to the paper's (1, 2, 6, 15)-style configurations, the clock is
 simulated seconds (deterministic on CPU), and the actual inner training is
-executed for real — only *time* is virtual. Supports:
+executed for real — only *time* is virtual. All scheduling semantics
+(DyLU, fixed/flexible shard assignment, compression + error feedback,
+fault injection, elastic membership, checkpoint/restore) live in the
+shared ``EngineBase`` (``repro.async_engine.engine``) so the wall-clock
+``ConcurrentRuntime`` inherits them unchanged; the simulator's only
+specialization is *lazy* execution — a dispatched round is stored and
+computed in-line when its virtual return event pops off the heap.
 
-  - async (HeLoCo / MLA / Nesterov) and sync (Nesterov) modes
-  - DyLU straggler mitigation (pace-proportional local steps)
-  - fixed / flexible shard-to-worker assignment (App. A.6)
-  - pseudo-gradient compression with error feedback
-  - fault injection: worker crash (in-flight round lost) + delayed rejoin,
-    elastic join/leave
-  - periodic checkpointing of server + worker state, restart from latest
+``ConcurrentRuntime`` in deterministic mode runs this exact event loop
+with eager threaded compute, which is why the two engines agree
+arrival-for-arrival (see docs/runtime.md).
 """
 from __future__ import annotations
 
-import heapq
-import os
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.async_engine.engine import (          # noqa: F401 (re-exports)
+    ElasticEvent, EngineBase, FailureEvent, History, RoundResult, RoundTask,
+    Worker, make_engine, make_eval_fn,
+)
 
-from repro.checkpoint import ckpt
-from repro.configs.base import RunConfig
-from repro.core.compression import roundtrip_with_error_feedback
-from repro.async_engine.server import Synchronizer
-from repro.data.synthetic import ShardSampler, eval_batches, make_language_specs
-from repro.models import build_model
-from repro.optim.adamw import init_adam
-from repro.train.inner import pseudo_gradient, run_inner
-
-PyTree = Any
+# Backwards-compatible name: the worker record predates the shared engine.
+WorkerSim = Worker
 
 
-@dataclass
-class WorkerSim:
-    wid: int
-    pace: float                      # seconds per inner step
-    lang: Optional[int]              # shard index (None = IID mixture)
-    params: PyTree = None            # in-flight initialization (captured)
-    opt: Any = None                  # persistent AdamW state
-    ef: PyTree = None                # compression error-feedback buffer
-    s_i: int = 0                     # outer step at dispatch
-    h_steps: int = 0                 # local steps this round
-    inner_step_count: int = 0        # lifetime inner steps (for LR schedule)
-    alive: bool = True
-    dispatch_time: float = 0.0
-    generation: int = 0              # incremented on crash: stale events ignored
+class AsyncSimulator(EngineBase):
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._pending: Dict[int, RoundTask] = {}
 
+    def _submit(self, task: RoundTask):
+        """Lazy execution: park the captured round until its virtual
+        return event fires (keyed by the engine-unique task id — a crash
+        orphans the entry, which is garbage-collected lazily)."""
+        self._pending[task.task_id] = task
 
-@dataclass
-class FailureEvent:
-    time: float
-    wid: int
-    restart_delay: float = 60.0      # simulated seconds until rejoin
-
-
-@dataclass
-class ElasticEvent:
-    time: float
-    action: str                      # "join" | "leave"
-    wid: int
-    pace: float = 1.0
-    lang: Optional[int] = None
-
-
-@dataclass
-class History:
-    arrivals: List[Dict] = field(default_factory=list)
-    evals: List[Dict] = field(default_factory=list)
-    tokens: int = 0
-    comm_bytes: int = 0
-    final_time: float = 0.0
-
-    def summary(self) -> Dict:
-        return {
-            "outer_steps": len(self.arrivals),
-            "tokens": self.tokens,
-            "comm_bytes": self.comm_bytes,
-            "final_time": self.final_time,
-            "final_eval": self.evals[-1] if self.evals else None,
-        }
-
-
-class AsyncSimulator:
-    def __init__(self, run_cfg: RunConfig, *,
-                 failures: Optional[List[FailureEvent]] = None,
-                 elastic: Optional[List[ElasticEvent]] = None):
-        self.cfg = run_cfg
-        self.model = build_model(run_cfg.model)
-        self.specs = make_language_specs(run_cfg.model.vocab_size,
-                                         n_langs=max(run_cfg.n_workers, 2),
-                                         seed=run_cfg.seed)
-        key = jax.random.PRNGKey(run_cfg.seed)
-        init_params = self.model.init(key)
-        self.server = Synchronizer(init_params, run_cfg.outer,
-                                   run_cfg.n_workers)
-        self.workers: Dict[int, WorkerSim] = {}
-        for wid in range(run_cfg.n_workers):
-            pace = run_cfg.worker_paces[wid % len(run_cfg.worker_paces)]
-            lang = (wid % len(self.specs)) if run_cfg.non_iid else None
-            self.workers[wid] = WorkerSim(
-                wid=wid, pace=pace, lang=lang, opt=init_adam(init_params))
-        self.failures = sorted(failures or [], key=lambda f: f.time)
-        self.elastic = sorted(elastic or [], key=lambda e: e.time)
-        self.lang_tokens = np.zeros(len(self.specs), np.int64)
-        self.history = History()
-        self.time = 0.0
-        self._heap: List[Tuple[float, int, str, int, int]] = []
-        self._seq = 0
-        self._min_pace = min(w.pace for w in self.workers.values())
-
-    # ------------------------------------------------------------------ utils
-    def _push(self, time: float, kind: str, wid: int, gen: int):
-        heapq.heappush(self._heap, (time, self._seq, kind, wid, gen))
-        self._seq += 1
-
-    def _h_steps(self, w: WorkerSim) -> int:
-        if self.cfg.dylu:
-            return max(1, int(round(self.cfg.inner_steps *
-                                    self._min_pace / w.pace)))
-        return self.cfg.inner_steps
-
-    def _pick_lang(self, w: WorkerSim) -> Optional[int]:
-        if not self.cfg.non_iid:
-            return None
-        if self.cfg.shard_assignment == "flexible":
-            return int(np.argmin(self.lang_tokens))
-        return w.lang
-
-    def _sampler(self, w: WorkerSim, lang: Optional[int]) -> ShardSampler:
-        return ShardSampler(self.specs, lang, self.cfg.batch_size,
-                            self.cfg.seq_len,
-                            seed=self.cfg.seed * 977 + w.wid)
-
-    def _dispatch(self, w: WorkerSim):
-        """Capture the worker's initialization and schedule its return."""
-        w.params = jax.tree.map(jnp.copy, self.server.worker_init())
-        w.s_i = self.server.t
-        w.h_steps = self._h_steps(w)
-        w.dispatch_time = self.time
-        w.cur_lang = self._pick_lang(w)
-        duration = w.h_steps * w.pace
-        self._push(self.time + duration, "return", w.wid, w.generation)
-
-    # ------------------------------------------------------------ inner round
-    def _compute_round(self, w: WorkerSim) -> PyTree:
-        lang = getattr(w, "cur_lang", w.lang)
-        sampler = self._sampler(w, lang)
-        result = run_inner(self.model, self.cfg.inner, w.params, w.opt,
-                           sampler, w.h_steps, step_offset=w.inner_step_count)
-        w.opt = result.opt
-        w.inner_step_count += w.h_steps
-        toks = w.h_steps * self.cfg.batch_size * self.cfg.seq_len
-        self.history.tokens += toks
-        if lang is not None:
-            self.lang_tokens[lang] += toks
-        delta = pseudo_gradient(w.params, result.params)
-        # int8 rides the server's packed layout: per-block scales, O(1)
-        # kernel launches, and a packed error-feedback buffer per worker.
-        layout = (self.server.layout
-                  if self.cfg.outer.compression == "int8" else None)
-        decoded, w.ef, nbytes = roundtrip_with_error_feedback(
-            delta, w.ef, self.cfg.outer.compression,
-            self.cfg.outer.topk_ratio, layout=layout)
-        if not self.cfg.outer.error_feedback:
-            w.ef = None
-        self.history.comm_bytes += nbytes
-        return decoded
-
-    # -------------------------------------------------------------- main loop
-    def run(self, eval_every: int = 0,
-            eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
-            ckpt_every: int = 0, ckpt_dir: str = "") -> History:
-        if self.cfg.outer.method == "sync_nesterov":
-            return self._run_sync(eval_every, eval_fn, ckpt_every, ckpt_dir)
-        for w in self.workers.values():
-            self._dispatch(w)
-        fail_idx = el_idx = 0
-        target = self.cfg.outer_steps
-        while self.server.t < target and self._heap:
-            time, _, kind, wid, gen = heapq.heappop(self._heap)
-            # interleave failure / elastic events that occur first
-            while (fail_idx < len(self.failures)
-                   and self.failures[fail_idx].time <= time):
-                self._handle_failure(self.failures[fail_idx])
-                fail_idx += 1
-            while (el_idx < len(self.elastic)
-                   and self.elastic[el_idx].time <= time):
-                self._handle_elastic(self.elastic[el_idx])
-                el_idx += 1
-            self.time = time
-            if kind == "restart":
-                w = self.workers.get(wid)
-                if w is not None:
-                    w.alive = True
-                    self._dispatch(w)
-                continue
-            w = self.workers.get(wid)
-            if w is None or not w.alive or gen != w.generation:
-                continue  # stale event (crashed/removed worker)
-            delta = self._compute_round(w)
-            rec = self.server.on_arrival(
-                delta, w.s_i, w.wid, sim_time=self.time,
-                lang=(self.specs[w.cur_lang].lang
-                      if getattr(w, "cur_lang", None) is not None else "iid"))
-            self.history.arrivals.append(rec.__dict__)
-            t = self.server.t
-            if eval_every and eval_fn and t % eval_every == 0:
-                self.history.evals.append(eval_fn(self.server.state.params,
-                                                  t, self.time))
-            if ckpt_every and ckpt_dir and t % ckpt_every == 0:
-                self.checkpoint(ckpt_dir)
-            if self.server.t < target:
-                self._dispatch(w)
-        self.history.final_time = self.time
-        if eval_fn and (not self.history.evals
-                        or self.history.evals[-1]["step"] != self.server.t):
-            self.history.evals.append(eval_fn(self.server.state.params,
-                                              self.server.t, self.time))
-        return self.history
-
-    def _run_sync(self, eval_every, eval_fn, ckpt_every, ckpt_dir) -> History:
-        target = self.cfg.outer_steps
-        while self.server.t < target:
-            deltas = []
-            round_time = 0.0
-            for w in self.workers.values():
-                if not w.alive:
-                    continue
-                w.params = jax.tree.map(jnp.copy, self.server.worker_init())
-                w.s_i = self.server.t
-                w.h_steps = self._h_steps(w)
-                w.cur_lang = self._pick_lang(w)
-                deltas.append(self._compute_round(w))
-                round_time = max(round_time, w.h_steps * w.pace)
-            self.time += round_time  # barrier: slowest worker gates the round
-            rec = self.server.on_sync_round(deltas, sim_time=self.time)
-            self.history.arrivals.append(rec.__dict__)
-            t = self.server.t
-            if eval_every and eval_fn and t % eval_every == 0:
-                self.history.evals.append(eval_fn(self.server.state.params,
-                                                  t, self.time))
-            if ckpt_every and ckpt_dir and t % ckpt_every == 0:
-                self.checkpoint(ckpt_dir)
-        self.history.final_time = self.time
-        if eval_fn and (not self.history.evals
-                        or self.history.evals[-1]["step"] != self.server.t):
-            self.history.evals.append(eval_fn(self.server.state.params,
-                                              self.server.t, self.time))
-        return self.history
-
-    # ------------------------------------------------------- fault tolerance
-    def _handle_failure(self, ev: FailureEvent):
-        w = self.workers.get(ev.wid)
-        if w is None:
-            return
-        w.alive = False
-        w.generation += 1           # in-flight round is lost
-        w.ef = None
-        self._push(ev.time + ev.restart_delay, "restart", w.wid, w.generation)
-
-    def _handle_elastic(self, ev: ElasticEvent):
-        if ev.action == "join":
-            w = WorkerSim(wid=ev.wid, pace=ev.pace, lang=ev.lang,
-                          opt=init_adam(self.server.state.params))
-            self.workers[ev.wid] = w
-            self.server.set_n_workers(
-                sum(1 for x in self.workers.values() if x.alive) )
-            self._dispatch(w)
-        elif ev.action == "leave":
-            w = self.workers.pop(ev.wid, None)
-            if w is not None:
-                w.generation += 1
-            self.server.set_n_workers(
-                sum(1 for x in self.workers.values() if x.alive))
-        self._min_pace = min((x.pace for x in self.workers.values()
-                              if x.alive), default=1.0)
-
-    # ---------------------------------------------------------- checkpointing
-    def server_tree(self) -> Dict:
-        return {"params": self.server.state.params,
-                "momentum": self.server.state.momentum,
-                "step": self.server.state.step}
-
-    def checkpoint(self, ckpt_dir: str) -> str:
-        path = os.path.join(ckpt_dir, f"step_{self.server.t}.npz")
-        meta = {"time": self.time, "tokens": int(self.history.tokens)}
-        ckpt.save(path, self.server_tree(), meta)
-        return path
-
-    def restore(self, path: str):
-        tree, meta = ckpt.restore(path, self.server_tree())
-        self.server.state = self.server.state._replace(
-            params=tree["params"],
-            momentum=tree["momentum"],
-            step=jnp.asarray(tree["step"]))
-        self.time = float(meta.get("time", 0.0))
-        self.history.tokens = int(meta.get("tokens", 0))
-        # in-flight worker rounds are lost on restart (real-world semantics)
-        self._heap.clear()
-        for w in self.workers.values():
-            w.generation += 1
-            if w.alive:
-                self._dispatch(w)
-
-
-def make_eval_fn(sim: AsyncSimulator, batch: int = 16, seq: int = None):
-    """Per-language + mean validation loss (Fig. 2/3 protocol)."""
-    seq = seq or sim.cfg.seq_len
-    batches = eval_batches(sim.specs, batch, seq, seed=sim.cfg.seed + 4242)
-    model = sim.model
-
-    @jax.jit
-    def loss_of(params, tokens, labels):
-        return model.loss(params, {"tokens": tokens, "labels": labels})[0]
-
-    def eval_fn(params, step, time):
-        per = {}
-        for b in batches:
-            per[b["lang"]] = float(loss_of(params, jnp.asarray(b["tokens"]),
-                                           jnp.asarray(b["labels"])))
-        mean = float(np.mean(list(per.values())))
-        return {"step": step, "time": time, "mean": mean, "per_lang": per}
-
-    return eval_fn
+    def _obtain(self, w: Worker) -> RoundResult:
+        res = self._execute(self._pending.pop(w.pending_task_id))
+        if len(self._pending) > len(self.workers):      # orphaned crash tasks
+            live = {x.pending_task_id for x in self.workers.values()}
+            self._pending = {k: v for k, v in self._pending.items()
+                             if k in live}
+        return res

@@ -1,0 +1,100 @@
+"""Transport abstraction for worker -> server pseudo-gradient traffic.
+
+The concurrent runtime never touches ``queue`` directly: workers push
+``RoundResult`` messages through a ``Transport`` and the server drains
+them. The only backend today is ``InProcTransport`` — a bounded
+in-process MPSC queue whose blocking ``send`` gives natural backpressure
+(a worker that outruns the server parks on the channel instead of piling
+up pseudo-gradients in memory). The interface is deliberately small and
+byte-agnostic so a socket/RPC backend (serialize the packed (R, 128)
+buffer, ship int8 + per-block scales) can slot in without touching the
+runtime: ``send`` / ``recv`` / ``close`` / ``depth``.
+
+``close`` wakes every blocked producer and consumer with
+``TransportClosed`` — that is how the runtime tears worker threads down
+without draining in-flight rounds (they are lost, exactly like a real
+disconnect; generation counters on the server make that safe).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from abc import ABC, abstractmethod
+from typing import Any, Optional
+
+_POLL_S = 0.02       # how often blocked send/recv re-checks for close()
+
+
+class TransportClosed(Exception):
+    """The channel was torn down while a send/recv was in progress."""
+
+
+class TransportTimeout(Exception):
+    """No progress within the caller-supplied timeout."""
+
+
+class Transport(ABC):
+    """One-directional message channel: many producers, one consumer."""
+
+    @abstractmethod
+    def send(self, msg: Any, timeout: Optional[float] = None) -> None:
+        """Enqueue ``msg``; BLOCKS while the channel is full (backpressure).
+        Raises ``TransportClosed`` if the channel is (or becomes) closed,
+        ``TransportTimeout`` after ``timeout`` seconds without space."""
+
+    @abstractmethod
+    def recv(self, timeout: Optional[float] = None) -> Any:
+        """Dequeue the oldest message (FIFO). Raises ``TransportClosed``
+        when closed and drained, ``TransportTimeout`` on timeout."""
+
+    @abstractmethod
+    def close(self) -> None:
+        """Tear the channel down; wakes all blocked senders/receivers."""
+
+    @abstractmethod
+    def depth(self) -> int:
+        """Messages currently queued (approximate under concurrency)."""
+
+
+class InProcTransport(Transport):
+    """Bounded in-process queue. ``capacity`` is the backpressure knob:
+    once full, producers block in ``send`` until the server drains an
+    arrival — no message is ever dropped."""
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=capacity)
+        self._closed = threading.Event()
+
+    def send(self, msg: Any, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self._closed.is_set():
+                raise TransportClosed("send on closed transport")
+            try:
+                self._q.put(msg, timeout=_POLL_S)
+                return
+            except queue.Full:
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TransportTimeout(
+                        f"send blocked > {timeout}s (capacity {self.capacity})")
+
+    def recv(self, timeout: Optional[float] = None) -> Any:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            try:
+                return self._q.get(timeout=_POLL_S)
+            except queue.Empty:
+                if self._closed.is_set():
+                    raise TransportClosed("recv on closed, drained transport")
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TransportTimeout(f"recv idle > {timeout}s")
+
+    def close(self) -> None:
+        self._closed.set()
+
+    def depth(self) -> int:
+        return self._q.qsize()

@@ -1,0 +1,6 @@
+"""Distribution layer: sharding rules (PartitionSpecs for params, batches,
+KV caches) and jit-able train/prefill/decode/outer-exchange steps for the
+production meshes in ``repro.launch.mesh``."""
+from repro.dist import sharding, steps  # noqa: F401
+
+__all__ = ["sharding", "steps"]

@@ -1,0 +1,189 @@
+"""Sharding rules for the production meshes.
+
+One function per artifact class:
+
+  spec_for            one parameter leaf -> PartitionSpec (name + shape
+                      heuristics; every rule degrades to replication when
+                      an axis is not divisible by the mesh axis size)
+  param_specs         whole parameter pytree
+  batch_specs         input batches (leading batch dim over the data axes)
+  cache_specs         KV caches (batch- or sequence-sharded decode)
+  stacked_axes_tree   leading layer-axis count per leaf (scanned stacks)
+  shardings_of        PartitionSpec pytree -> NamedSharding pytree
+
+The layout strategy is FSDP over ``data`` + tensor parallelism over
+``model``: weights shard their d_model (or expert-input) dimension over
+the data axis and their heads / experts / head_dim dimension over the
+model axis; norms and biases are tiny and stay replicated. The ``pod``
+axis never appears here — it is the DiLoCo worker boundary and carries
+only the outer exchange (see ``repro.dist.steps.make_outer_exchange``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+AxisName = Union[str, Tuple[str, ...]]
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _leaf_path(path) -> str:
+    parts = []
+    for k in path:
+        key = getattr(k, "key", None)
+        if key is None:
+            key = getattr(k, "name", None)
+        if key is None:
+            key = getattr(k, "idx", k)
+        parts.append(str(key))
+    return "/".join(parts)
+
+
+def n_layer_axes(name: str) -> int:
+    """Leading scanned-layer axes of a leaf (1 for stacked block params)."""
+    return 1 if name.split("/", 1)[0] == "blocks" else 0
+
+
+def stacked_axes_tree(params: PyTree) -> PyTree:
+    """Pytree of ints (same structure as ``params``): how many leading
+    axes of each leaf are scanned layer axes — the granularity contract
+    of ``repro.core.heloco.block_correct`` / ``repro.core.packing``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [n_layer_axes(_leaf_path(p)) for p, _ in flat])
+
+
+def spec_for(name: str, shape: Sequence[int], *,
+             data_axis: AxisName = "data", model_axis: str = "model",
+             axis_sizes: Dict[str, int],
+             attn_style: str = "tp") -> P:
+    """PartitionSpec for one parameter leaf.
+
+    Rules (first match wins, every assignment requires divisibility):
+      - norms / biases / rank<=1 payloads: fully replicated
+      - embeddings: vocab axis over model, d_model over data
+      - MoE expert stacks: expert axis over model, expert-input over data
+      - attention projections: heads over model, falling back to head_dim
+        when the head count does not divide the model axis (e.g. qwen2's
+        28 heads on a 16-way axis); d_model over data
+      - everything else: last axis over model, first remaining over data
+
+    attn_style="dp" drops the tensor-parallel (model) assignment and
+    keeps only the FSDP data-axis sharding.
+    """
+    shape = tuple(int(s) for s in shape)
+    rank = len(shape)
+    dsz = (axis_sizes.get(data_axis, 1) if isinstance(data_axis, str)
+           else 1)  # tuple data axes: divisibility checked against product
+    if not isinstance(data_axis, str):
+        dsz = 1
+        for a in data_axis:
+            dsz *= axis_sizes.get(a, 1)
+    msz = axis_sizes.get(model_axis, 1)
+    parts = name.split("/")
+    leaf = parts[-1]
+    spec = [None] * rank
+    n_layer = n_layer_axes(name)
+
+    # tiny / vector-like leaves stay replicated
+    if ("norm" in name or leaf in ("scale", "bias")
+            or leaf in ("bq", "bk", "bv", "bo", "b_up", "b_gate", "b_down")
+            or rank - n_layer <= 1):
+        return P(*spec)
+
+    # --- model (tensor-parallel) axis ------------------------------------
+    model_idx: Optional[int] = None
+    if attn_style != "dp":
+        if "embed" in parts[0]:
+            vocab = max(range(rank), key=lambda i: shape[i])
+            candidates = [vocab]
+        elif "moe" in parts:
+            candidates = [n_layer]               # expert axis
+        elif "attn" in parts and rank - n_layer >= 2:
+            candidates = [rank - 2, rank - 1]    # heads, then head_dim
+        else:
+            candidates = [rank - 1]
+        for i in candidates:
+            if i >= n_layer and _divisible(shape[i], msz):
+                model_idx = i
+                spec[i] = model_axis
+                break
+
+    # --- data (FSDP) axis ------------------------------------------------
+    for i in range(n_layer, rank):
+        if i != model_idx and _divisible(shape[i], dsz):
+            spec[i] = data_axis
+            break
+
+    return P(*spec)
+
+
+def param_specs(params: PyTree, *, axis_sizes: Dict[str, int],
+                data_axis: AxisName = "data", model_axis: str = "model",
+                attn_style: str = "tp") -> PyTree:
+    """PartitionSpec pytree for a whole parameter tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [spec_for(_leaf_path(p), leaf.shape, data_axis=data_axis,
+                      model_axis=model_axis, axis_sizes=axis_sizes,
+                      attn_style=attn_style)
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch: PyTree, *, batch_axes: Tuple[str, ...] = ("data",)
+                ) -> PyTree:
+    """Leading (batch) dim over ``batch_axes``; everything else replicated."""
+    axes = tuple(batch_axes)
+    entry = axes if len(axes) > 1 else axes[0]
+
+    def one(x):
+        return P(*([entry] + [None] * (len(x.shape) - 1)))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_specs(caches: PyTree, *, batch_sharded: bool,
+                axis_sizes: Dict[str, int],
+                data_axis: AxisName = "data",
+                model_axis: str = "model") -> PyTree:
+    """KV-cache PartitionSpecs for decode: layout (L, B, S, kv_heads, hd).
+
+    batch_sharded=True  -> batch over the data axis (throughput decode)
+    batch_sharded=False -> sequence over the data axis (context-parallel
+                           long decode, batch too small to split)
+    kv heads shard over the model axis only when there are at least as
+    many heads as devices; GQA's few kv heads fall back to head_dim TP.
+    """
+    msz = axis_sizes.get(model_axis, 1)
+    dsz = 1
+    for a in ([data_axis] if isinstance(data_axis, str) else data_axis):
+        dsz *= axis_sizes.get(a, 1)
+
+    def one(x):
+        L, B, S, KV, HD = x.shape
+        spec = [None] * 5
+        if _divisible(KV, msz):
+            spec[3] = model_axis
+        elif _divisible(HD, msz):
+            spec[4] = model_axis
+        if batch_sharded:
+            if B % dsz == 0:
+                spec[1] = data_axis
+        elif S % dsz == 0:
+            spec[2] = data_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, caches)
+
+
+def shardings_of(specs: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

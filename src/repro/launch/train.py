@@ -1,15 +1,20 @@
 """Training launcher.
 
-Two modes:
-  - simulator (default): the asynchronous HeLoCo training engine with
+Engines (--engine):
+  - sim (default): the asynchronous HeLoCo training engine with
     heterogeneous virtual-clock workers — the paper's experiment runtime.
     Any --arch is accepted; pass --smoke to use its reduced config on CPU.
-  - dryrun: defer to repro.launch.dryrun for the production-mesh
-    lower/compile pass (see that module's CLI).
+  - wallclock: the threaded concurrent runtime — one thread per worker,
+    pseudo-gradients through a bounded transport, genuine compute/update
+    overlap. Deterministic (simulator-equivalent) by default; add --free
+    for true arrival order with --pace-scale wall-clock throttling.
+
+For the production-mesh lower/compile pass defer to repro.launch.dryrun
+(see that module's CLI).
 
     PYTHONPATH=src python -m repro.launch.train --arch tinygpt-15m --smoke \
         --method heloco --paces 1,1,6,6,6 --outer 50 --inner 10 \
-        --ckpt-dir /tmp/ck --resume
+        --engine wallclock --ckpt-dir /tmp/ck --resume
 """
 from __future__ import annotations
 
@@ -19,7 +24,7 @@ import os
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs import get_config, reduced
 from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
-from repro.async_engine.simulator import AsyncSimulator, make_eval_fn
+from repro.async_engine.engine import make_engine, make_eval_fn
 
 
 def main():
@@ -50,6 +55,13 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="sim", choices=["sim", "wallclock"])
+    ap.add_argument("--free", action="store_true",
+                    help="wallclock engine: free-running arrival order "
+                         "instead of the deterministic simulator schedule")
+    ap.add_argument("--pace-scale", type=float, default=0.0,
+                    help="wallclock+free: wall seconds per virtual second "
+                         "of worker pace (0 = no throttling)")
     args = ap.parse_args()
 
     model = get_config(args.arch)
@@ -75,15 +87,19 @@ def main():
         worker_paces=paces, non_iid=not args.iid, dylu=args.dylu,
         shard_assignment=args.shard_assignment, seed=args.seed)
 
-    sim = AsyncSimulator(rc)
+    engine_kw = {}
+    if args.engine == "wallclock":
+        engine_kw = dict(mode="free" if args.free else "deterministic",
+                         pace_scale=args.pace_scale)
+    eng = make_engine(rc, args.engine, **engine_kw)
     if args.resume and args.ckpt_dir:
         latest = ckpt_lib.latest(args.ckpt_dir)
         if latest:
-            sim.restore(latest)
-            print(f"resumed from {latest} (outer step {sim.server.t})")
+            eng.restore(latest)
+            print(f"resumed from {latest} (outer step {eng.server.t})")
 
-    eval_fn = make_eval_fn(sim, batch=8)
-    hist = sim.run(eval_every=args.eval_every, eval_fn=eval_fn,
+    eval_fn = make_eval_fn(eng, batch=8)
+    hist = eng.run(eval_every=args.eval_every, eval_fn=eval_fn,
                    ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
                    ckpt_dir=args.ckpt_dir)
     for e in hist.evals:
@@ -93,6 +109,12 @@ def main():
     print(f"done: arrivals={len(hist.arrivals)} tokens={hist.tokens} "
           f"mean_staleness={sum(taus) / len(taus):.2f} "
           f"comm={hist.comm_bytes / 1e6:.1f}MB")
+    if hasattr(eng, "stats_summary"):
+        s = eng.stats_summary()
+        print(f"runtime[{s['mode']}]: {s['arrivals_per_sec']:.2f} arrivals/s "
+              f"occupancy={s['server_occupancy']:.2f} "
+              f"parallelism={s['compute_parallelism']:.2f} "
+              f"overlap_max={s['overlap_max']}")
 
 
 if __name__ == "__main__":

