@@ -1,18 +1,38 @@
-# Developer entry points. `make verify` is the tier-1 gate: the full test
+# Developer entry points. `make verify` is the tier-1 gate: the fast test
 # suite on CPU with interpret-mode Pallas kernels (auto-selected on CPU),
-# so kernel regressions are caught without a TPU.
+# so kernel regressions are caught without a TPU. Long-running lanes are
+# marker-split (pytest.ini): `slow` and `wallclock` tests plus the
+# golden-trace scenario gates run in the CI matrix (`make scenarios`,
+# `make bench-check`).
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test bench bench-full bench-runtime smoke-wallclock
+.PHONY: verify verify-ci test test-slow test-wallclock bench bench-full \
+	bench-runtime bench-check bench-check-arrival bench-check-runtime \
+	smoke-wallclock scenarios scenarios-sim scenarios-wallclock \
+	record-goldens
 
 verify:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
 
+# CI variant: no -x (a red run reports ALL failures) + junit artifact
+verify-ci:
+	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -q --junitxml=results/junit/tier1.xml
+
 test: verify
 
-# micro-benchmarks only; persists arrival-path rows to BENCH_arrival.json
+# the marker-split lanes CI runs in the scenarios-* jobs
+test-slow:
+	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -q -m "slow and not wallclock" \
+		--junitxml=results/junit/slow.xml
+
+test-wallclock:
+	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -q -m wallclock \
+		--junitxml=results/junit/wallclock.xml
+
+# micro-benchmarks only; persists arrival-path rows to
+# results/bench/BENCH_arrival.json
 bench:
 	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.run --skip-training
 
@@ -21,11 +41,49 @@ bench-full:
 
 # simulator vs threaded concurrent runtime (deterministic + free-running);
 # persists arrivals/sec, server occupancy, queue depth, overlap evidence
-# to BENCH_runtime.json
+# to results/bench/BENCH_runtime.json
 bench-runtime:
 	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.run --runtime
 
-# tiny end-to-end wallclock-engine training run (the CI smoke job)
+# regression gate: fresh bench rows vs committed benchmarks/baselines/
+# (per-metric tolerance bands; exact for launch-count/HBM contracts).
+# BENCH_SLACK widens the timing band on slow/noisy hosts (CI sets 25).
+# CI splits the families across lanes: tier1 gates the arrival path,
+# scenarios-wallclock gates the runtime benches it runs anyway.
+BENCH_SLACK ?= 4.0
+bench-check: bench bench-runtime
+	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.check_regression \
+		--timing-slack $(BENCH_SLACK)
+
+bench-check-arrival: bench
+	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.check_regression \
+		--which arrival --timing-slack $(BENCH_SLACK)
+
+bench-check-runtime: bench-runtime
+	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.check_regression \
+		--which runtime --timing-slack $(BENCH_SLACK)
+
+# golden-trace gates: verify every registered scenario against
+# results/golden/ (sim fp32-exact, deterministic wallclock trace-identical,
+# free-running tolerance-banded). This is what the CI matrix gates on.
+scenarios:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all
+
+scenarios-sim:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all \
+		--engine-filter sim
+
+scenarios-wallclock:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all \
+		--engine-filter wallclock
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all \
+		--engine-filter sim --cross-only
+
+# (re)generate the committed golden traces after an intentional change
+record-goldens:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run record --all
+
+# tiny end-to-end wallclock-engine training run (CI smoke)
 smoke-wallclock:
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.launch.train --arch tinygpt-15m \
 		--smoke --engine wallclock --free --pace-scale 0.02 \

@@ -1,0 +1,157 @@
+"""Benchmark regression gate: compare the latest BENCH_arrival.json /
+BENCH_runtime.json entries against committed baselines.
+
+Per-metric discipline:
+
+  - deterministic rows (kernel-launch counts, HBM-byte accounting — names
+    matching EXACT_PATTERNS): ``us_per_call`` and ``derived`` must match
+    the baseline exactly; these encode the packed arrival-path contract
+    (2 launches per arrival, fused-sweep traffic), not machine speed.
+  - timing rows: ``us_per_call`` may not exceed ``baseline *
+    --timing-slack`` (default 4.0 — CI machines are slow and noisy; the
+    gate catches order-of-magnitude regressions, the committed history
+    catches slow creep).
+  - runtime rows additionally: ``arrivals`` exact, and the qualitative
+    concurrency evidence must not evaporate — if the baseline showed
+    genuine overlap (compute_parallelism > 1, overlap_max >= 1), the
+    fresh run must too.
+
+``--update`` refreshes the committed baselines from the latest fresh
+entries. A machine-readable report lands in results/bench/ either way
+(the CI failure artifact). Wired in as ``make bench-check``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+from benchmarks.run import BENCH_JSON, BENCH_RUNTIME_JSON, _load_history
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE_DIR = os.path.join(_HERE, "baselines")
+REPORT_PATH = os.path.join(os.path.dirname(BENCH_JSON),
+                           "regression_report.json")
+
+# Rows whose numbers are deterministic contracts, not timings.
+EXACT_PATTERNS = ("launches", "hbm", "traffic")
+TIMING_SLACK = 4.0
+
+
+def _is_exact_row(name: str) -> bool:
+    return any(p in name for p in EXACT_PATTERNS)
+
+
+def baseline_path(fresh_path: str) -> str:
+    return os.path.join(BASELINE_DIR, os.path.basename(fresh_path))
+
+
+def latest_rows(path: str) -> Optional[List[Dict]]:
+    history = _load_history(path)
+    return history[-1]["rows"] if history else None
+
+
+def check_rows(fresh: List[Dict], base: List[Dict],
+               timing_slack: float = TIMING_SLACK) -> List[str]:
+    """Compare one benchmark family; returns human-readable failures."""
+    fails: List[str] = []
+    fresh_by = {r["name"]: r for r in fresh}
+    for b in base:
+        name = b["name"]
+        f = fresh_by.get(name)
+        if f is None:
+            fails.append(f"{name}: present in baseline, missing from "
+                         f"fresh run")
+            continue
+        if _is_exact_row(name):
+            if f["us_per_call"] != b["us_per_call"]:
+                fails.append(f"{name}: exact metric drifted — "
+                             f"got {f['us_per_call']!r}, baseline "
+                             f"{b['us_per_call']!r}")
+            if f.get("derived") != b.get("derived"):
+                fails.append(f"{name}: derived contract drifted — "
+                             f"got {f.get('derived')!r}, baseline "
+                             f"{b.get('derived')!r}")
+            continue
+        if b["us_per_call"] > 0 and \
+                f["us_per_call"] > b["us_per_call"] * timing_slack:
+            fails.append(f"{name}: {f['us_per_call']:.1f}us > "
+                         f"{timing_slack:g}x baseline "
+                         f"{b['us_per_call']:.1f}us")
+        # runtime-bench rows carry structural/concurrency metrics too
+        if "arrivals" in b and f.get("arrivals") != b["arrivals"]:
+            fails.append(f"{name}: arrivals {f.get('arrivals')} != "
+                         f"baseline {b['arrivals']}")
+        par = f.get("compute_parallelism") or 0
+        if b.get("compute_parallelism", 0) > 1.0 and par <= 1.0:
+            fails.append(f"{name}: compute_parallelism {par!r} lost "
+                         f"genuine concurrency (baseline "
+                         f"{b['compute_parallelism']:.2f})")
+        ov = f.get("overlap_max") or 0
+        if b.get("overlap_max", 0) >= 1 and ov < 1:
+            fails.append(f"{name}: overlap_max {ov!r} — no compute/update "
+                         f"overlap (baseline {b['overlap_max']})")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.check_regression")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh committed baselines from the latest "
+                         "fresh entries")
+    ap.add_argument("--timing-slack", type=float, default=TIMING_SLACK)
+    ap.add_argument("--which", default="arrival,runtime",
+                    help="comma-set of {arrival, runtime}")
+    args = ap.parse_args(argv)
+
+    which = {w.strip() for w in args.which.split(",") if w.strip()}
+    paths = {"arrival": BENCH_JSON, "runtime": BENCH_RUNTIME_JSON}
+    report = {"ok": True, "families": {}}
+    rc = 0
+    for fam, fresh_path in paths.items():
+        if fam not in which:
+            continue
+        fresh = latest_rows(fresh_path)
+        bpath = baseline_path(fresh_path)
+        if fresh is None:
+            print(f"[SKIP] {fam}: no fresh rows at {fresh_path} "
+                  f"(run `make bench` / `make bench-runtime` first)")
+            rc = max(rc, 2)
+            continue
+        if args.update:
+            os.makedirs(BASELINE_DIR, exist_ok=True)
+            with open(bpath, "w") as f:
+                json.dump(fresh, f, indent=1)
+            print(f"[UPDATE] {fam}: baseline <- {len(fresh)} rows "
+                  f"-> {bpath}")
+            continue
+        if not os.path.exists(bpath):
+            print(f"[FAIL] {fam}: no committed baseline {bpath} "
+                  f"(record one with --update)")
+            report["families"][fam] = ["missing baseline"]
+            rc = 1
+            continue
+        with open(bpath) as f:
+            base = json.load(f)
+        fails = check_rows(fresh, base, args.timing_slack)
+        report["families"][fam] = fails
+        if fails:
+            print(f"[FAIL] {fam}: {len(fails)} metric(s) drifted")
+            for msg in fails:
+                print(f"    - {msg}")
+            rc = 1
+        else:
+            print(f"[PASS] {fam}: {len(base)} baseline rows within bands")
+    report["ok"] = rc == 0
+    if not args.update:
+        os.makedirs(os.path.dirname(REPORT_PATH), exist_ok=True)
+        with open(REPORT_PATH, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# report -> {REPORT_PATH}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,11 @@
 """Shared harness for the paper-reproduction benchmarks.
 
-Each benchmark builds RunConfigs for the paper's methods, runs a training
-engine (the event-driven simulator by default; pass engine="wallclock"
-for the threaded concurrent runtime — same Engine API, real overlap), and
-caches results as JSON under results/experiments/ so EXPERIMENTS.md
-assembly and reruns are cheap.
+Each benchmark names a scenario (a ``repro.scenarios.Scenario`` — the
+single source of truth the launcher and tests also build from), runs a
+training engine (the event-driven simulator by default; pass
+engine="wallclock" for the threaded concurrent runtime — same Engine API,
+real overlap), and caches results as JSON under results/experiments/ so
+EXPERIMENTS.md assembly and reruns are cheap.
 """
 from __future__ import annotations
 
@@ -15,23 +16,38 @@ import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.configs import get_config, reduced
-from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
+from repro.configs.base import RunConfig
 from repro.async_engine.engine import make_engine, make_eval_fn
+from repro.scenarios.spec import METHOD_PRESETS, METHOD_TABLE, Scenario
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/experiments")
 
-# paper Table 3 (Appendix A.5): outer lr / momentum / weight factor
-METHODS = {
-    "async-heloco": dict(method="heloco", outer_lr=0.7, momentum=0.9,
-                         weight_factor="base", lookahead_init=True),
-    "async-mla": dict(method="mla", outer_lr=0.7, momentum=0.9,
-                      weight_factor="base", lookahead_init=True),
-    "async-nesterov": dict(method="nesterov", outer_lr=0.07, momentum=0.9,
-                           weight_factor="base", lookahead_init=False),
-    "sync-nesterov": dict(method="sync_nesterov", outer_lr=0.7, momentum=0.9,
-                          weight_factor="average", lookahead_init=False),
-}
+# paper Table 3 (Appendix A.5), derived from the scenario layer's method
+# table — benchmark-dialect names ("async-heloco") map onto raw methods.
+METHODS = {preset: dict(method=raw, **METHOD_TABLE[raw])
+           for preset, raw in METHOD_PRESETS.items()}
+
+
+def scenario_for(paces: Sequence[float], *, method: str, non_iid: bool,
+                 outer_steps: int, inner_steps: int, dylu: bool = False,
+                 seed: int = 0, compression: str = "none",
+                 drop_stale_after: Optional[int] = None,
+                 shard_assignment: str = "fixed",
+                 mixture_alpha: Optional[float] = None,
+                 batch_size: int = 4, seq_len: int = 64,
+                 name: str = "bench", **scenario_kw) -> Scenario:
+    """The benchmark dialect, compiled to a Scenario: `method` accepts the
+    benchmark preset names ("async-heloco", ...) or raw method names."""
+    return Scenario(
+        name=name, method=METHOD_PRESETS.get(method, method),
+        n_workers=len(paces),
+        worker_paces=tuple(float(p) for p in paces),
+        outer_steps=outer_steps, inner_steps=inner_steps,
+        batch_size=batch_size, seq_len=seq_len,
+        non_iid=non_iid, dylu=dylu, seed=seed,
+        compression=compression, drop_stale_after=drop_stale_after,
+        shard_assignment=shard_assignment, mixture_alpha=mixture_alpha,
+        **scenario_kw)
 
 
 def base_run(paces: Sequence[float], *, method: str, non_iid: bool,
@@ -39,44 +55,37 @@ def base_run(paces: Sequence[float], *, method: str, non_iid: bool,
              seed: int = 0, compression: str = "none",
              drop_stale_after: Optional[int] = None,
              shard_assignment: str = "fixed") -> RunConfig:
-    model = reduced(get_config("tinygpt-15m"))
-    outer = OuterOptConfig(compression=compression,
-                           drop_stale_after=drop_stale_after,
-                           **METHODS[method])
-    total = outer_steps * inner_steps
-    return RunConfig(
-        model=model,
-        inner=InnerOptConfig(lr=3e-3, warmup_steps=max(total // 20, 2),
-                             total_steps=total),
-        outer=outer,
-        n_workers=len(paces), inner_steps=inner_steps,
-        outer_steps=outer_steps, batch_size=4, seq_len=64,
-        worker_paces=tuple(float(p) for p in paces),
-        non_iid=non_iid, dylu=dylu, seed=seed,
-        shard_assignment=shard_assignment)
+    return scenario_for(
+        paces, method=method, non_iid=non_iid, outer_steps=outer_steps,
+        inner_steps=inner_steps, dylu=dylu, seed=seed,
+        compression=compression, drop_stale_after=drop_stale_after,
+        shard_assignment=shard_assignment).run_config()
 
 
 def _key(rc: RunConfig, eval_every: int, engine: str = "sim",
-         engine_kw: Optional[Dict] = None) -> str:
+         engine_kw: Optional[Dict] = None, eval_batch: int = 8) -> str:
     blob = json.dumps(dataclasses.asdict(rc), sort_keys=True, default=str)
-    # keep pre-engine cache keys stable for the default simulator
+    # keep pre-engine cache keys stable for the default simulator/eval
     tag = ("" if engine == "sim"
            else engine + json.dumps(engine_kw or {}, sort_keys=True,
                                     default=str))
+    if eval_batch != 8:
+        tag += f"eb{eval_batch}"
     return hashlib.sha1((blob + str(eval_every) + tag).encode()
                         ).hexdigest()[:16]
 
 
 def run_cached(name: str, rc: RunConfig, eval_every: int = 0,
                force: bool = False, engine: str = "sim",
-               **engine_kw) -> Dict:
+               eval_batch: int = 8, **engine_kw) -> Dict:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(
-        RESULTS_DIR, f"{name}__{_key(rc, eval_every, engine, engine_kw)}.json")
+        RESULTS_DIR,
+        f"{name}__{_key(rc, eval_every, engine, engine_kw, eval_batch)}.json")
     if os.path.exists(path) and not force:
         return json.load(open(path))
     eng = make_engine(rc, engine, **engine_kw)
-    eval_fn = make_eval_fn(eng, batch=8, seq=rc.seq_len)
+    eval_fn = make_eval_fn(eng, batch=eval_batch, seq=rc.seq_len)
     t0 = time.time()
     hist = eng.run(eval_every=eval_every or max(rc.outer_steps // 8, 1),
                    eval_fn=eval_fn)
@@ -104,6 +113,21 @@ def run_cached(name: str, rc: RunConfig, eval_every: int = 0,
         out["runtime_stats"] = eng.stats_summary()
     json.dump(out, open(path, "w"), indent=1)
     return out
+
+
+def run_cached_scenario(name: str, scn: Scenario, eval_every: int = 0,
+                        force: bool = False) -> Dict:
+    """run_cached driven entirely by a Scenario: engine choice, runtime
+    options, and the eval cadence/batch all come from the spec, so the
+    curve is comparable with the scenario's golden trace."""
+    m = scn.materialize()
+    if m.failures or m.elastic:
+        raise ValueError("run_cached_scenario does not cache runs with "
+                         "failure/elastic schedules; use scn.build()")
+    return run_cached(name, m.run_cfg,
+                      eval_every=eval_every or scn.eval_cadence,
+                      force=force, engine=m.engine,
+                      eval_batch=scn.eval_batch, **m.engine_kw)
 
 
 def loss_at_time(result: Dict, t: float) -> Optional[float]:

@@ -2,10 +2,13 @@
 ``name,us_per_call,derived`` CSV rows (plus per-benchmark summary blocks).
 
 Fast benches (overhead, kernels) always run and their rows are persisted
-to BENCH_arrival.json at the repo root (appending one entry per run, so
-the arrival-path perf trajectory accumulates across PRs); the
+to results/bench/BENCH_arrival.json (appending one entry per run, so the
+arrival-path perf trajectory accumulates across PRs; histories from the
+legacy repo-root location are carried forward automatically); the
 paper-reproduction training benches run with reduced budgets by default
 (pass --full for the paper-scale budgets used in EXPERIMENTS.md).
+``benchmarks.check_regression`` gates the latest entries against
+committed baselines (``make bench-check``).
 """
 from __future__ import annotations
 
@@ -16,19 +19,32 @@ import sys
 import time
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BENCH_JSON = os.path.join(_ROOT, "BENCH_arrival.json")
-BENCH_RUNTIME_JSON = os.path.join(_ROOT, "BENCH_runtime.json")
+# Canonical location: results/ (one place for CI artifacts + local runs).
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR",
+                           os.path.join(_ROOT, "results", "bench"))
+BENCH_JSON = os.path.join(BENCH_DIR, "BENCH_arrival.json")
+BENCH_RUNTIME_JSON = os.path.join(BENCH_DIR, "BENCH_runtime.json")
+# Pre-PR-3 location (repo root): read-only fallback so accumulated
+# histories carry forward without symlinks.
+_LEGACY = {BENCH_JSON: os.path.join(_ROOT, "BENCH_arrival.json"),
+           BENCH_RUNTIME_JSON: os.path.join(_ROOT, "BENCH_runtime.json")}
+
+
+def _load_history(path) -> list:
+    for candidate in (path, _LEGACY.get(path, "")):
+        if candidate and os.path.exists(candidate):
+            try:
+                with open(candidate) as f:
+                    return json.load(f)
+            except (json.JSONDecodeError, OSError):
+                return []
+    return []
 
 
 def _persist(rows, path=BENCH_JSON) -> None:
-    history = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                history = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            history = []
+    history = _load_history(path)
     history.append({"unix_time": time.time(), "rows": rows})
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(history, f, indent=1)

@@ -48,7 +48,9 @@ from repro.checkpoint import ckpt
 from repro.configs.base import RunConfig
 from repro.core.compression import roundtrip_with_error_feedback
 from repro.async_engine.server import Synchronizer
-from repro.data.synthetic import ShardSampler, eval_batches, make_language_specs
+from repro.data.synthetic import (
+    ShardSampler, eval_batches, make_language_specs, mixture_weights,
+)
 from repro.models import build_model
 from repro.optim.adamw import init_adam
 from repro.train.inner import pseudo_gradient, run_inner
@@ -65,6 +67,7 @@ class Worker:
     wid: int
     pace: float                      # seconds per inner step (virtual)
     lang: Optional[int]              # shard index (None = IID mixture)
+    mixture: Optional[Tuple[float, ...]] = None  # Dirichlet language weights
     params: PyTree = None            # in-flight initialization (captured)
     opt: Any = None                  # persistent AdamW state
     ef: PyTree = None                # compression error-feedback buffer
@@ -132,6 +135,7 @@ class RoundTask:
     h_steps: int
     lang: Optional[int]
     inner_step_offset: int
+    mixture: Optional[Tuple[float, ...]] = None
     dispatch_time: float = 0.0
     sleep_per_step: float = 0.0      # free-running pace throttle (wall sec)
     device: Any = None
@@ -188,9 +192,14 @@ class EngineBase:
         self.workers: Dict[int, Worker] = {}
         for wid in range(run_cfg.n_workers):
             pace = run_cfg.worker_paces[wid % len(run_cfg.worker_paces)]
-            lang = (wid % len(self.specs)) if run_cfg.non_iid else None
+            mixture = self._mixture_for(wid)
+            if mixture is not None:
+                lang = int(np.argmax(mixture))   # dominant shard (accounting)
+            else:
+                lang = (wid % len(self.specs)) if run_cfg.non_iid else None
             self.workers[wid] = Worker(
-                wid=wid, pace=pace, lang=lang, opt=init_adam(init_params))
+                wid=wid, pace=pace, lang=lang, mixture=mixture,
+                opt=init_adam(init_params))
         self.failures = sorted(failures or [], key=lambda f: f.time)
         self.elastic = sorted(elastic or [], key=lambda e: e.time)
         self.lang_tokens = np.zeros(len(self.specs), np.int64)
@@ -222,6 +231,14 @@ class EngineBase:
         heapq.heappush(self._heap, (time, self._seq, kind, wid, gen))
         self._seq += 1
 
+    def _mixture_for(self, wid: int) -> Optional[Tuple[float, ...]]:
+        """Per-worker Dirichlet language mixture (deterministic in
+        (seed, wid), stable across crash/rejoin and elastic join)."""
+        if not (self.cfg.non_iid and self.cfg.mixture_alpha):
+            return None
+        return tuple(mixture_weights(len(self.specs), self.cfg.mixture_alpha,
+                                     wid, seed=self.cfg.seed))
+
     def _h_steps(self, w: Worker) -> int:
         if self.cfg.dylu:
             return max(1, int(round(self.cfg.inner_steps *
@@ -231,6 +248,8 @@ class EngineBase:
     def _pick_lang(self, w: Worker) -> Optional[int]:
         if not self.cfg.non_iid:
             return None
+        if w.mixture is not None:        # Dirichlet mixture: lang is the
+            return w.lang                # dominant shard (accounting only)
         if self.cfg.shard_assignment == "flexible":
             return int(np.argmin(self.lang_tokens))
         return w.lang
@@ -252,7 +271,7 @@ class EngineBase:
             task_id=self._task_counter,
             wid=w.wid, generation=w.generation, round_seq=w.round_seq,
             params=w.params, opt=w.opt, ef=w.ef, s_i=w.s_i,
-            h_steps=w.h_steps, lang=w.cur_lang,
+            h_steps=w.h_steps, lang=w.cur_lang, mixture=w.mixture,
             inner_step_offset=w.inner_step_count,
             dispatch_time=self.time,
             sleep_per_step=self._sleep_per_step(w), device=w.device)
@@ -276,7 +295,8 @@ class EngineBase:
         t0 = _time.perf_counter()
         sampler = ShardSampler(self.specs, task.lang, self.cfg.batch_size,
                                self.cfg.seq_len,
-                               seed=self.cfg.seed * 977 + task.wid)
+                               seed=self.cfg.seed * 977 + task.wid,
+                               mixture=task.mixture)
         result = run_inner(self.model, self.cfg.inner, task.params, task.opt,
                            sampler, task.h_steps,
                            step_offset=task.inner_step_offset)
@@ -422,7 +442,10 @@ class EngineBase:
 
     def _handle_elastic(self, ev: ElasticEvent):
         if ev.action == "join":
-            w = Worker(wid=ev.wid, pace=ev.pace, lang=ev.lang,
+            mixture = self._mixture_for(ev.wid)
+            lang = (int(np.argmax(mixture)) if mixture is not None
+                    else ev.lang)
+            w = Worker(wid=ev.wid, pace=ev.pace, lang=lang, mixture=mixture,
                        opt=init_adam(self.server.state.params))
             self.workers[ev.wid] = w
             self.server.set_n_workers(
@@ -475,13 +498,26 @@ class EngineBase:
 ENGINES = ("sim", "wallclock")
 
 
-def make_engine(run_cfg: RunConfig, engine: str = "sim", *,
+def make_engine(run_cfg: RunConfig, engine: Optional[str] = None, *,
                 failures: Optional[List[FailureEvent]] = None,
                 elastic: Optional[List[ElasticEvent]] = None,
                 **runtime_kw) -> Engine:
-    """Build a training engine. ``engine``: "sim" (virtual clock) or
-    "wallclock" (threaded ``ConcurrentRuntime``; extra keywords — ``mode``,
-    ``pace_scale``, ``transport``, ... — are forwarded to it)."""
+    """Build a training engine. ``engine``: "sim" (default, virtual clock)
+    or "wallclock" (threaded ``ConcurrentRuntime``; extra keywords —
+    ``mode``, ``pace_scale``, ``transport``, ... — are forwarded to it).
+
+    Also accepts a ``repro.scenarios`` ``Scenario`` as the first argument:
+    its ``materialize()`` then supplies the run config, engine choice,
+    runtime options, and failure/elastic schedules — the declarative
+    single-source-of-truth entry point."""
+    if hasattr(run_cfg, "materialize"):          # Scenario (duck-typed to
+        if engine is not None or failures or elastic or runtime_kw:
+            raise TypeError("pass the engine choice, schedules, and "
+                            "options inside the Scenario, not alongside it")
+        m = run_cfg.materialize()                # avoids a circular import
+        return make_engine(m.run_cfg, m.engine, failures=m.failures,
+                           elastic=m.elastic, **m.engine_kw)
+    engine = engine or "sim"
     if engine in ("sim", "simulator", "virtual"):
         if runtime_kw:
             raise TypeError(f"simulator takes no runtime options: {runtime_kw}")

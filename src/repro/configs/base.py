@@ -210,6 +210,11 @@ class RunConfig:
     # heterogeneity:
     worker_paces: Tuple[float, ...] = (1.0, 1.0, 1.0, 1.0, 1.0)  # sec/step
     non_iid: bool = True
+    # Dirichlet language mixtures: when set (and non_iid), each worker
+    # samples its batches from a per-worker mixture over languages drawn
+    # once from Dirichlet(alpha) — alpha -> 0 recovers one-shard-per-worker
+    # severity, alpha -> inf the IID mixture (the paper's non-IID axis).
+    mixture_alpha: Optional[float] = None
     shard_assignment: str = "fixed"  # "fixed" | "flexible" (App. A.6)
     dylu: bool = False               # Dynamic Local Updates
     # fault tolerance:

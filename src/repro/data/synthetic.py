@@ -74,27 +74,46 @@ def sample_tokens(spec: LanguageSpec, batch: int, seq: int,
     return out.astype(np.int32)
 
 
+def mixture_weights(n_langs: int, alpha: float, wid: int,
+                    seed: int = 0) -> np.ndarray:
+    """Per-worker language mixture ~ Dirichlet(alpha): the paper's
+    data-heterogeneity axis between one-shard-per-worker (alpha -> 0) and
+    the IID global mixture (alpha -> inf). Deterministic in (seed, wid)."""
+    rng = np.random.default_rng([seed, 7919, wid])
+    return rng.dirichlet(np.full(n_langs, float(alpha)))
+
+
 class ShardSampler:
     """Deterministic batch stream for one worker.
 
-    non-IID: the worker draws from a single language.
+    non-IID: the worker draws from a single language, or — when `mixture`
+    is given — each sequence from its per-worker language mixture
+    (Dirichlet non-IID, see `mixture_weights`).
     IID: the worker draws each sequence from a uniformly random language
     (the global mixture), so all workers share one distribution.
     """
 
     def __init__(self, specs: Sequence[LanguageSpec], lang_index: Optional[int],
-                 batch: int, seq: int, seed: int):
+                 batch: int, seq: int, seed: int,
+                 mixture: Optional[Sequence[float]] = None):
         self.specs = list(specs)
         self.lang_index = lang_index
         self.batch = batch
         self.seq = seq
         self.seed = seed
+        self.mixture = None if mixture is None else np.asarray(mixture, float)
 
     def sample(self, step: int) -> dict:
         rng = np.random.default_rng(
             (self.seed * 1_000_003 + (self.lang_index or 0) * 101 + step)
             % (2 ** 63))
-        if self.lang_index is None:  # IID mixture
+        if self.mixture is not None:
+            langs = rng.choice(len(self.specs), size=self.batch,
+                               p=self.mixture / self.mixture.sum())
+            toks = np.concatenate([
+                sample_tokens(self.specs[li], 1, self.seq, rng)
+                for li in langs], axis=0)
+        elif self.lang_index is None:  # IID mixture
             langs = rng.integers(0, len(self.specs), size=self.batch)
             toks = np.concatenate([
                 sample_tokens(self.specs[li], 1, self.seq, rng)

@@ -1,5 +1,13 @@
 """Training launcher.
 
+Two ways to describe a run:
+
+  - ``--scenario NAME``: a registered ``repro.scenarios`` spec — the same
+    single source of truth the benchmarks, examples, and golden-trace CI
+    gate build from (``--list-scenarios`` enumerates them).
+  - ad-hoc flags: compiled into an anonymous ``Scenario`` first, so both
+    paths construct the run identically.
+
 Engines (--engine):
   - sim (default): the asynchronous HeLoCo training engine with
     heterogeneous virtual-clock workers — the paper's experiment runtime.
@@ -15,20 +23,47 @@ For the production-mesh lower/compile pass defer to repro.launch.dryrun
     PYTHONPATH=src python -m repro.launch.train --arch tinygpt-15m --smoke \
         --method heloco --paces 1,1,6,6,6 --outer 50 --inner 10 \
         --engine wallclock --ckpt-dir /tmp/ck --resume
+    PYTHONPATH=src python -m repro.launch.train --scenario paper_hetero_severe
 """
 from __future__ import annotations
 
 import argparse
-import os
 
 from repro.checkpoint import ckpt as ckpt_lib
-from repro.configs import get_config, reduced
-from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
 from repro.async_engine.engine import make_engine, make_eval_fn
+from repro.scenarios import registry
+from repro.scenarios.spec import Scenario
+
+
+def scenario_from_args(args) -> Scenario:
+    """Compile the launcher's flag dialect into a Scenario."""
+    paces = tuple(float(p) for p in args.paces.split(","))
+    outer_lr = args.outer_lr
+    if outer_lr is not None and args.method == "nesterov":
+        outer_lr = min(outer_lr, 0.07)
+    return Scenario(
+        name="cli",
+        arch=args.arch, smoke=args.smoke,
+        engine=args.engine,
+        mode="free" if args.free else "deterministic",
+        pace_scale=args.pace_scale,
+        n_workers=args.workers, worker_paces=paces,
+        inner_steps=args.inner, outer_steps=args.outer,
+        batch_size=args.batch, seq_len=args.seq,
+        non_iid=not args.iid, mixture_alpha=args.mixture_alpha,
+        shard_assignment=args.shard_assignment, dylu=args.dylu,
+        method=args.method, outer_lr=outer_lr, momentum=args.momentum,
+        compression=args.compression,
+        drop_stale_after=args.drop_stale_after,
+        inner_lr=args.inner_lr, seed=args.seed)
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="",
+                    help="run a registered scenario by name (overrides the "
+                         "ad-hoc config flags)")
+    ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--arch", default="tinygpt-15m")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-friendly)")
@@ -41,8 +76,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--iid", action="store_true")
+    ap.add_argument("--mixture-alpha", type=float, default=None,
+                    help="per-worker Dirichlet(alpha) language mixtures "
+                         "instead of one shard per worker")
     ap.add_argument("--dylu", action="store_true")
-    ap.add_argument("--outer-lr", type=float, default=0.7)
+    ap.add_argument("--outer-lr", type=float, default=None,
+                    help="default: the method's paper value (Table 3)")
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--inner-lr", type=float, default=3e-3)
     ap.add_argument("--compression", default="none",
@@ -53,7 +92,9 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--eval-every", type=int, default=None,
+                    help="default: 10, or the scenario's golden-trace "
+                         "cadence when --scenario is given")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", default="sim", choices=["sim", "wallclock"])
     ap.add_argument("--free", action="store_true",
@@ -64,42 +105,30 @@ def main():
                          "of worker pace (0 = no throttling)")
     args = ap.parse_args()
 
-    model = get_config(args.arch)
-    if args.smoke:
-        model = reduced(model)
-    paces = tuple(float(p) for p in args.paces.split(","))
-    if len(paces) < args.workers:
-        paces = tuple(paces[i % len(paces)] for i in range(args.workers))
+    if args.list_scenarios:
+        for s in registry.all_scenarios():
+            print(f"{s.name:24s} engine={s.engine}/{s.mode}  "
+                  f"{s.description}")
+        return
 
-    outer_lr = args.outer_lr if args.method != "nesterov" else min(
-        args.outer_lr, 0.07)
-    rc = RunConfig(
-        model=model,
-        inner=InnerOptConfig(lr=args.inner_lr,
-                             warmup_steps=max(args.outer * args.inner // 20, 2),
-                             total_steps=args.outer * args.inner),
-        outer=OuterOptConfig(method=args.method, outer_lr=outer_lr,
-                             momentum=args.momentum,
-                             compression=args.compression,
-                             drop_stale_after=args.drop_stale_after),
-        n_workers=args.workers, inner_steps=args.inner,
-        outer_steps=args.outer, batch_size=args.batch, seq_len=args.seq,
-        worker_paces=paces, non_iid=not args.iid, dylu=args.dylu,
-        shard_assignment=args.shard_assignment, seed=args.seed)
-
-    engine_kw = {}
-    if args.engine == "wallclock":
-        engine_kw = dict(mode="free" if args.free else "deterministic",
-                         pace_scale=args.pace_scale)
-    eng = make_engine(rc, args.engine, **engine_kw)
+    if args.scenario:
+        scn = registry.get_scenario(args.scenario)
+        print(f"scenario {scn.name}: {scn.description}")
+    else:
+        scn = scenario_from_args(args)
+    # match the golden-trace eval cadence so a --scenario run is
+    # comparable with its committed results/golden/<name>.json artifact
+    eval_every = (args.eval_every if args.eval_every is not None
+                  else (scn.eval_cadence if args.scenario else 10))
+    eng = make_engine(scn)
     if args.resume and args.ckpt_dir:
         latest = ckpt_lib.latest(args.ckpt_dir)
         if latest:
             eng.restore(latest)
             print(f"resumed from {latest} (outer step {eng.server.t})")
 
-    eval_fn = make_eval_fn(eng, batch=8)
-    hist = eng.run(eval_every=args.eval_every, eval_fn=eval_fn,
+    eval_fn = make_eval_fn(eng, batch=scn.eval_batch)
+    hist = eng.run(eval_every=eval_every, eval_fn=eval_fn,
                    ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
                    ckpt_dir=args.ckpt_dir)
     for e in hist.evals:

@@ -1,0 +1,17 @@
+"""Declarative scenario layer: specs, named registry, golden traces.
+
+    from repro.scenarios import Scenario, get_scenario, registry, trace
+
+    eng = get_scenario("paper_hetero_severe").build()
+    hist = eng.run()
+
+See docs/scenarios.md for the spec schema and the golden-trace workflow.
+"""
+from repro.scenarios.spec import (            # noqa: F401
+    ElasticSpec, FailureSpec, Materialized, METHOD_PRESETS, METHOD_TABLE,
+    Scenario,
+)
+from repro.scenarios.registry import (        # noqa: F401
+    all_scenarios, get_scenario, names, register,
+)
+from repro.scenarios import registry, trace   # noqa: F401

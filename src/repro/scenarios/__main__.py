@@ -1,0 +1,5 @@
+import sys
+
+from repro.scenarios.run import main
+
+sys.exit(main())

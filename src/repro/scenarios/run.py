@@ -1,0 +1,107 @@
+"""Scenario runner CLI: list, record, and verify golden traces.
+
+    PYTHONPATH=src python -m repro.scenarios.run list
+    PYTHONPATH=src python -m repro.scenarios.run record --all
+    PYTHONPATH=src python -m repro.scenarios.run verify --all
+    PYTHONPATH=src python -m repro.scenarios.run verify --engine-filter sim
+    PYTHONPATH=src python -m repro.scenarios.run verify --all --cross
+
+``verify`` exits non-zero on any mismatch and writes a machine-readable
+diff per failing scenario under ``--diff-dir`` (uploaded as a CI
+artifact). ``--cross`` additionally replays every sim scenario on the
+deterministic wall-clock engine and demands the identical trace.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro.scenarios import registry, trace
+from repro.scenarios.spec import Scenario
+
+
+def _select(args) -> List[Scenario]:
+    if args.all or not args.names:
+        scns = registry.all_scenarios()
+    else:
+        scns = [registry.get_scenario(n) for n in args.names]
+    if args.engine_filter:
+        scns = [s for s in scns if s.engine == args.engine_filter]
+    return scns
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.scenarios.run")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_list = sub.add_parser("list", help="registered scenarios")
+    p_list.add_argument("--engine-filter", choices=["sim", "wallclock"])
+
+    for name, hlp in (("record", "(re)write golden traces"),
+                      ("verify", "re-run + compare against goldens")):
+        p = sub.add_parser(name, help=hlp)
+        p.add_argument("names", nargs="*", help="scenario names "
+                       "(default: all)")
+        p.add_argument("--all", action="store_true")
+        p.add_argument("--dir", default=trace.GOLDEN_DIR,
+                       help="golden trace directory")
+        p.add_argument("--engine-filter", choices=["sim", "wallclock"])
+        if name == "verify":
+            p.add_argument("--cross", action="store_true",
+                           help="also replay sim scenarios on the "
+                                "deterministic wall-clock engine")
+            p.add_argument("--cross-only", action="store_true",
+                           help="run ONLY the cross-engine replays (skips "
+                                "the plain verification the scenarios-sim "
+                                "CI lane already runs)")
+            p.add_argument("--diff-dir", default="results/golden_diffs",
+                           help="where failure diffs are written")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "list":
+        scns = registry.all_scenarios()
+        if args.engine_filter:
+            scns = [s for s in scns if s.engine == args.engine_filter]
+        for s in scns:
+            exact = "exact" if s.exact else "banded"
+            print(f"{s.name:24s} engine={s.engine}/{s.mode:13s} "
+                  f"[{exact}]  {s.description}")
+        return 0
+
+    scns = _select(args)
+    if not scns:
+        print("no scenarios selected", file=sys.stderr)
+        return 2
+
+    if args.cmd == "record":
+        for s in scns:
+            path = trace.record(s, args.dir)
+            print(f"recorded {s.name} -> {path}")
+        return 0
+
+    def checks_for(s) -> List[bool]:
+        cross = ([True] if (args.cross or args.cross_only)
+                 and s.engine == "sim" else [])
+        return ([] if args.cross_only else [False]) + cross
+
+    failed = total = 0
+    for s in scns:
+        for cross in checks_for(s):
+            total += 1
+            res = trace.verify(s, args.dir, cross_engine=cross)
+            print(res.report())
+            if not res.ok:
+                failed += 1
+                diff = trace.write_diff(res, args.diff_dir)
+                print(f"    diff -> {diff}")
+    if not total:
+        print("no applicable golden-trace checks for this selection "
+              "(--cross-only applies to sim scenarios)", file=sys.stderr)
+        return 2
+    print(f"\n{total - failed}/{total} golden-trace checks passed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,243 @@
+"""Declarative scenario specs: one frozen dataclass is the single source
+of truth for how a run is constructed.
+
+Before this layer, the launcher (``repro.launch.train``), the benchmark
+harness (``benchmarks.common``), and individual tests each spoke their own
+flag dialect for the same grid of paper scenarios — worker speed profiles,
+non-IID language mixtures, staleness regimes, compression, crash/elastic
+membership. A ``Scenario`` names one cell of that grid; ``materialize()``
+compiles it into the engine/runtime/data keyword sets every entry point
+consumes, and ``build()`` hands back a ready engine.
+
+The named instances live in ``repro.scenarios.registry``; golden-trace
+recording/verification on top of them in ``repro.scenarios.trace``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.configs import get_config, reduced
+from repro.configs.base import (
+    HeLoCoConfig, InnerOptConfig, OuterOptConfig, RunConfig,
+)
+
+# Paper Table 3 (Appendix A.5): per-method outer-optimizer defaults.
+# ``benchmarks.common.METHODS`` is derived from this table.
+METHOD_TABLE: Dict[str, Dict[str, Any]] = {
+    "heloco": dict(outer_lr=0.7, momentum=0.9, weight_factor="base",
+                   lookahead_init=True),
+    "mla": dict(outer_lr=0.7, momentum=0.9, weight_factor="base",
+                lookahead_init=True),
+    "nesterov": dict(outer_lr=0.07, momentum=0.9, weight_factor="base",
+                     lookahead_init=False),
+    "sync_nesterov": dict(outer_lr=0.7, momentum=0.9,
+                          weight_factor="average", lookahead_init=False),
+}
+
+# Benchmark-dialect method names ("async-heloco", ...) -> raw method.
+METHOD_PRESETS: Dict[str, str] = {
+    "async-heloco": "heloco",
+    "async-mla": "mla",
+    "async-nesterov": "nesterov",
+    "sync-nesterov": "sync_nesterov",
+}
+
+ENGINES = ("sim", "wallclock")
+MODES = ("deterministic", "free")
+
+
+@dataclass(frozen=True)
+class FailureSpec:
+    """A worker crash (in-flight round lost) with a scheduled rejoin."""
+    time: float
+    wid: int
+    restart_delay: float = 60.0
+
+
+@dataclass(frozen=True)
+class ElasticSpec:
+    """Elastic membership change: a worker joins or leaves at `time`."""
+    time: float
+    action: str                      # "join" | "leave"
+    wid: int
+    pace: float = 1.0
+    lang: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.action in ("join", "leave"), self.action
+
+
+@dataclass(frozen=True)
+class Materialized:
+    """What ``Scenario.materialize()`` compiles a spec into: the exact
+    keyword sets the engine factory consumes."""
+    run_cfg: RunConfig
+    engine: str
+    engine_kw: Dict[str, Any]
+    failures: List[Any]              # engine FailureEvent list
+    elastic: List[Any]               # engine ElasticEvent list
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named cell of the paper's scenario grid."""
+    name: str
+    description: str = ""
+    # -- model -------------------------------------------------------------
+    arch: str = "tinygpt-15m"
+    smoke: bool = True               # reduced() CPU-friendly variant
+    # -- engine ------------------------------------------------------------
+    engine: str = "sim"              # "sim" | "wallclock"
+    mode: str = "deterministic"      # wallclock commit order
+    pace_scale: float = 0.0          # wallclock free-running throttle
+    # -- schedule / heterogeneity -------------------------------------------
+    n_workers: int = 4
+    worker_paces: Tuple[float, ...] = (1.0,)     # cycled to n_workers
+    inner_steps: int = 2
+    outer_steps: int = 12
+    batch_size: int = 2
+    seq_len: int = 16
+    non_iid: bool = True
+    mixture_alpha: Optional[float] = None        # Dirichlet language mixture
+    shard_assignment: str = "fixed"              # "fixed" | "flexible"
+    dylu: bool = False
+    # -- outer optimizer -----------------------------------------------------
+    method: str = "heloco"
+    outer_lr: Optional[float] = None             # None -> METHOD_TABLE default
+    momentum: Optional[float] = None
+    weight_factor: Optional[str] = None
+    lookahead_init: Optional[bool] = None
+    heloco: HeLoCoConfig = field(default_factory=HeLoCoConfig)
+    compression: str = "none"                    # none | int8 | topk
+    topk_ratio: float = 0.1
+    error_feedback: bool = True
+    drop_stale_after: Optional[int] = None
+    delay_weighting: bool = False
+    # -- inner optimizer -----------------------------------------------------
+    inner_lr: float = 3e-3
+    # -- failure / elastic schedules ------------------------------------------
+    failures: Tuple[FailureSpec, ...] = ()
+    elastic: Tuple[ElasticSpec, ...] = ()
+    # -- eval / reproducibility ----------------------------------------------
+    eval_every: int = 0              # 0 -> outer_steps // 4 (min 1)
+    eval_batch: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.engine in ENGINES, self.engine
+        assert self.mode in MODES, self.mode
+        assert self.method in METHOD_TABLE, self.method
+        assert self.n_workers >= 1 and self.worker_paces
+
+    # ------------------------------------------------------------ properties
+    @property
+    def exact(self) -> bool:
+        """Whether a golden trace of this scenario is fp32-exact
+        reproducible (sim and deterministic wallclock) or only
+        tolerance-banded (free-running wallclock)."""
+        return self.engine == "sim" or self.mode == "deterministic"
+
+    @property
+    def paces(self) -> Tuple[float, ...]:
+        return tuple(self.worker_paces[i % len(self.worker_paces)]
+                     for i in range(self.n_workers))
+
+    @property
+    def eval_cadence(self) -> int:
+        return self.eval_every or max(self.outer_steps // 4, 1)
+
+    # --------------------------------------------------------------- configs
+    def model_config(self):
+        model = get_config(self.arch)
+        return reduced(model) if self.smoke else model
+
+    def outer_config(self) -> OuterOptConfig:
+        preset = METHOD_TABLE[self.method]
+        return OuterOptConfig(
+            method=self.method,
+            outer_lr=(self.outer_lr if self.outer_lr is not None
+                      else preset["outer_lr"]),
+            momentum=(self.momentum if self.momentum is not None
+                      else preset["momentum"]),
+            weight_factor=self.weight_factor or preset["weight_factor"],
+            lookahead_init=(self.lookahead_init
+                            if self.lookahead_init is not None
+                            else preset["lookahead_init"]),
+            heloco=self.heloco,
+            compression=self.compression,
+            topk_ratio=self.topk_ratio,
+            error_feedback=self.error_feedback,
+            drop_stale_after=self.drop_stale_after,
+            delay_weighting=self.delay_weighting)
+
+    def inner_config(self) -> InnerOptConfig:
+        total = self.outer_steps * self.inner_steps
+        return InnerOptConfig(lr=self.inner_lr,
+                              warmup_steps=max(total // 20, 2),
+                              total_steps=total)
+
+    def run_config(self) -> RunConfig:
+        return RunConfig(
+            model=self.model_config(),
+            inner=self.inner_config(),
+            outer=self.outer_config(),
+            n_workers=self.n_workers,
+            inner_steps=self.inner_steps,
+            outer_steps=self.outer_steps,
+            batch_size=self.batch_size,
+            seq_len=self.seq_len,
+            worker_paces=self.paces,
+            non_iid=self.non_iid,
+            mixture_alpha=self.mixture_alpha,
+            shard_assignment=self.shard_assignment,
+            dylu=self.dylu,
+            seed=self.seed)
+
+    # ----------------------------------------------------------- materialize
+    def materialize(self) -> Materialized:
+        """Compile the spec into the engine/runtime kwargs every entry
+        point (launcher, benchmarks, examples, tests) consumes."""
+        from repro.async_engine.engine import ElasticEvent, FailureEvent
+        engine_kw: Dict[str, Any] = {}
+        if self.engine == "wallclock":
+            engine_kw = dict(mode=self.mode, pace_scale=self.pace_scale)
+        failures = [FailureEvent(time=f.time, wid=f.wid,
+                                 restart_delay=f.restart_delay)
+                    for f in self.failures]
+        elastic = [ElasticEvent(time=e.time, action=e.action, wid=e.wid,
+                                pace=e.pace, lang=e.lang)
+                   for e in self.elastic]
+        return Materialized(run_cfg=self.run_config(), engine=self.engine,
+                            engine_kw=engine_kw, failures=failures,
+                            elastic=elastic)
+
+    def build(self):
+        """Ready-to-run engine for this scenario."""
+        from repro.async_engine.engine import make_engine
+        m = self.materialize()
+        return make_engine(m.run_cfg, m.engine, failures=m.failures,
+                           elastic=m.elastic, **m.engine_kw)
+
+    # ------------------------------------------------------------- overrides
+    def overridden(self, **kw) -> "Scenario":
+        """Derived scenario (dataclasses.replace with nested spec support)."""
+        if "failures" in kw:
+            kw["failures"] = tuple(kw["failures"])
+        if "elastic" in kw:
+            kw["elastic"] = tuple(kw["elastic"])
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------ json
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Scenario":
+        d = dict(d)
+        d["worker_paces"] = tuple(d.get("worker_paces", (1.0,)))
+        d["heloco"] = HeLoCoConfig(**d.get("heloco", {}))
+        d["failures"] = tuple(FailureSpec(**f) for f in d.get("failures", ()))
+        d["elastic"] = tuple(ElasticSpec(**e) for e in d.get("elastic", ()))
+        return cls(**d)

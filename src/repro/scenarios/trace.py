@@ -1,0 +1,335 @@
+"""Golden-trace recording and verification for registered scenarios.
+
+A trace is everything a scenario run promises to reproduce:
+
+  - the arrival sequence ``(outer_step, wid, s_i, staleness, lang, rho,
+    sim_time, dropped)`` — the scheduling semantics;
+  - the eval-loss curve (mean + per-language) — the learning dynamics;
+  - a SHA-256 digest of the final parameters (canonical leaf order,
+    fp32 bytes) plus a per-leaf ``[sum, l2]`` fingerprint — the numerics.
+
+``record()`` writes ``<dir>/<name>.json``; ``verify()`` re-runs the
+scenario and compares. Comparison discipline follows the engine
+contracts: fp32-EXACT for the simulator and the deterministic wall-clock
+runtime (same jitted programs, same inputs, virtual-deadline commit
+order), tolerance-BANDED for the free-running runtime (true arrival
+order is scheduler-dependent). ``verify(cross_engine=True)`` additionally
+replays a sim scenario on the deterministic wall-clock engine and demands
+the identical trace — the determinism contract of docs/runtime.md as a
+CI-gated artifact.
+
+Exactness is a same-binary, same-machine statement: XLA CPU codegen may
+vectorize differently across microarchitectures. ``REPRO_GOLDEN_RTOL``
+loosens the numeric comparison for such environments (traces stay exact).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.scenarios.spec import Scenario
+
+SCHEMA_VERSION = 1
+GOLDEN_DIR = os.environ.get("REPRO_GOLDEN", "results/golden")
+
+# Numeric slack for "exact" comparisons (0.0 = bitwise via JSON round-trip).
+_RTOL = float(os.environ.get("REPRO_GOLDEN_RTOL", "0") or 0)
+
+# Tolerance bands for free-running (non-exact) scenarios.
+FREE_BANDS = {
+    "final_mean_abs": 0.75,          # final eval mean loss, absolute
+    "tokens_rel": 0.5,
+    "comm_bytes_rel": 0.5,
+    "staleness_mean_abs": 3.0,
+}
+
+
+# ---------------------------------------------------------------------------
+# Canonical parameter digests
+# ---------------------------------------------------------------------------
+
+def _canonical_leaves(params) -> List[Any]:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return sorted(((jax.tree_util.keystr(path), leaf) for path, leaf in flat),
+                  key=lambda kv: kv[0])
+
+def param_digest(params) -> str:
+    """SHA-256 over fp32 bytes of every leaf in canonical (path-sorted)
+    order; shapes are part of the digest."""
+    h = hashlib.sha256()
+    for path, leaf in _canonical_leaves(params):
+        arr = np.asarray(leaf, dtype=np.float32)
+        h.update(path.encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def param_fingerprint(params) -> Dict[str, List[float]]:
+    """Low-dimensional per-leaf [sum, l2] view — lets cross-engine checks
+    compare numerics within fp32 tolerance where the digest is all-or-
+    nothing."""
+    out = {}
+    for path, leaf in _canonical_leaves(params):
+        arr = np.asarray(leaf, dtype=np.float64)
+        out[path] = [float(arr.sum()), float(np.sqrt((arr ** 2).sum()))]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Running a scenario into a trace document
+# ---------------------------------------------------------------------------
+
+def run_trace(scn: Scenario) -> Dict[str, Any]:
+    """Execute the scenario and collect its full replayable trace."""
+    from repro.async_engine.engine import make_eval_fn
+    eng = scn.build()
+    hist = eng.run(eval_every=scn.eval_cadence,
+                   eval_fn=make_eval_fn(eng, batch=scn.eval_batch))
+    arrivals = [[a["outer_step"], a["worker_id"],
+                 a["outer_step"] - 1 - a["staleness"], a["staleness"],
+                 a["lang"], a["rho"], a["sim_time"], bool(a["dropped"])]
+                for a in hist.arrivals]
+    params = eng.server.state.params
+    return {
+        "schema": SCHEMA_VERSION,
+        "scenario": scn.to_dict(),
+        "engine": scn.engine,
+        "mode": scn.mode,
+        "exact": scn.exact,
+        "arrivals": arrivals,
+        "evals": hist.evals,
+        "tokens": int(hist.tokens),
+        "comm_bytes": int(hist.comm_bytes),
+        "final_time": float(hist.final_time),
+        "param_digest": param_digest(params),
+        "param_fingerprint": param_fingerprint(params),
+    }
+
+
+def golden_path(name: str, golden_dir: str = GOLDEN_DIR) -> str:
+    return os.path.join(golden_dir, f"{name}.json")
+
+
+def record(scn: Scenario, golden_dir: str = GOLDEN_DIR) -> str:
+    os.makedirs(golden_dir, exist_ok=True)
+    path = golden_path(scn.name, golden_dir)
+    doc = run_trace(scn)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Verification
+# ---------------------------------------------------------------------------
+
+@dataclass
+class VerifyResult:
+    name: str
+    ok: bool
+    failures: List[str] = field(default_factory=list)
+    details: Dict[str, Any] = field(default_factory=dict)
+
+    def report(self) -> str:
+        status = "PASS" if self.ok else "FAIL"
+        lines = [f"[{status}] {self.name}"]
+        lines += [f"    - {f}" for f in self.failures]
+        return "\n".join(lines)
+
+
+def _close(a: float, b: float) -> bool:
+    if _RTOL <= 0:
+        return a == b
+    return bool(np.isclose(a, b, rtol=_RTOL, atol=_RTOL))
+
+
+def _cmp_arrivals(fails: List[str], got: List[List[Any]],
+                  want: List[List[Any]]):
+    if len(got) != len(want):
+        fails.append(f"arrival count: got {len(got)}, golden {len(want)}")
+        return
+    labels = ("outer_step", "wid", "s_i", "staleness", "lang", "rho",
+              "sim_time", "dropped")
+    for i, (g, w) in enumerate(zip(got, want)):
+        for lab, gv, wv in zip(labels, g, w):
+            equal = (_close(gv, wv) if isinstance(wv, float) else gv == wv)
+            if not equal:
+                fails.append(f"arrival[{i}].{lab}: got {gv!r}, "
+                             f"golden {wv!r}")
+                if len(fails) > 12:
+                    fails.append("... (diff truncated)")
+                    return
+
+
+def _cmp_evals(fails: List[str], got: List[Dict], want: List[Dict],
+               close) -> None:
+    """Eval-curve comparison under a float comparator: `_close` on the
+    exact path, an fp32-tolerance isclose for cross-engine replays."""
+    if len(got) != len(want):
+        fails.append(f"eval count: got {len(got)}, golden {len(want)}")
+        return
+    for i, (g, w) in enumerate(zip(got, want)):
+        if g["step"] != w["step"] or not close(g["mean"], w["mean"]):
+            fails.append(f"eval[{i}]: got step={g['step']} "
+                         f"mean={g['mean']!r}, golden step={w['step']} "
+                         f"mean={w['mean']!r}")
+            continue
+        gp, wp = g.get("per_lang", {}), w.get("per_lang", {})
+        if set(gp) != set(wp) or any(not close(gp[k], wp[k]) for k in wp):
+            fails.append(f"eval[{i}].per_lang: got {gp!r}, golden {wp!r}")
+
+
+def _close_f32(a: float, b: float, rtol: float = 1e-4,
+               atol: float = 1e-4) -> bool:
+    return bool(np.isclose(a, b, rtol=rtol, atol=atol))
+
+
+def _verify_exact(fails: List[str], got: Dict, want: Dict,
+                  require_digest: bool = True):
+    _cmp_arrivals(fails, got["arrivals"], want["arrivals"])
+    _cmp_evals(fails, got["evals"], want["evals"], _close)
+    for key in ("tokens", "comm_bytes"):
+        if got[key] != want[key]:
+            fails.append(f"{key}: got {got[key]}, golden {want[key]}")
+    if not _close(got["final_time"], want["final_time"]):
+        fails.append(f"final_time: got {got['final_time']!r}, "
+                     f"golden {want['final_time']!r}")
+    if require_digest:
+        if _RTOL <= 0 and got["param_digest"] != want["param_digest"]:
+            fails.append(f"param_digest: got {got['param_digest'][:16]}..., "
+                         f"golden {want['param_digest'][:16]}...")
+        _cmp_fingerprint(fails, got["param_fingerprint"],
+                         want["param_fingerprint"],
+                         rtol=max(_RTOL, 0.0), atol=max(_RTOL, 1e-6),
+                         exact=_RTOL <= 0)
+
+
+def _cmp_fingerprint(fails: List[str], got: Dict, want: Dict,
+                     rtol: float = 1e-5, atol: float = 1e-6,
+                     exact: bool = False):
+    if set(got) != set(want):
+        fails.append(f"fingerprint leaves differ: "
+                     f"{sorted(set(got) ^ set(want))[:4]}")
+        return
+    bad = []
+    for path, wv in want.items():
+        gv = got[path]
+        if exact:
+            ok = gv == wv
+        else:
+            ok = np.allclose(gv, wv, rtol=rtol, atol=atol)
+        if not ok:
+            bad.append((path, gv, wv))
+    for path, gv, wv in bad[:4]:
+        fails.append(f"fingerprint[{path}]: got {gv}, golden {wv}")
+    if len(bad) > 4:
+        fails.append(f"... {len(bad) - 4} more fingerprint mismatches")
+
+
+def _verify_banded(fails: List[str], got: Dict, want: Dict,
+                   bands: Dict[str, float]):
+    if len(got["arrivals"]) != len(want["arrivals"]):
+        fails.append(f"arrival count: got {len(got['arrivals'])}, "
+                     f"golden {len(want['arrivals'])}")
+    gm = got["evals"][-1]["mean"] if got["evals"] else float("nan")
+    wm = want["evals"][-1]["mean"] if want["evals"] else float("nan")
+    if not abs(gm - wm) <= bands["final_mean_abs"]:
+        fails.append(f"final eval mean drifted: got {gm:.4f}, golden "
+                     f"{wm:.4f} (band +-{bands['final_mean_abs']})")
+    for key, band_key in (("tokens", "tokens_rel"),
+                          ("comm_bytes", "comm_bytes_rel")):
+        g, w = got[key], want[key]
+        if w and abs(g - w) > bands[band_key] * w:
+            fails.append(f"{key}: got {g}, golden {w} "
+                         f"(rel band {bands[band_key]})")
+    g_tau = float(np.mean([a[3] for a in got["arrivals"]]) if
+                  got["arrivals"] else 0.0)
+    w_tau = float(np.mean([a[3] for a in want["arrivals"]]) if
+                  want["arrivals"] else 0.0)
+    if abs(g_tau - w_tau) > bands["staleness_mean_abs"]:
+        fails.append(f"mean staleness: got {g_tau:.2f}, golden {w_tau:.2f} "
+                     f"(band +-{bands['staleness_mean_abs']})")
+
+
+def verify(scn: Scenario, golden_dir: str = GOLDEN_DIR, *,
+           cross_engine: bool = False,
+           fresh: Optional[Dict[str, Any]] = None) -> VerifyResult:
+    """Re-run `scn` and compare against its committed golden trace.
+
+    ``cross_engine=True`` (sim scenarios only) replays the scenario on the
+    deterministic wall-clock engine instead and demands the identical
+    arrival trace + fp32-close numerics versus the *sim-recorded* golden.
+    ``fresh`` injects a pre-computed trace document (testing hook).
+    """
+    path = golden_path(scn.name, golden_dir)
+    res = VerifyResult(name=scn.name +
+                       (" [cross-engine wallclock]" if cross_engine else ""),
+                       ok=True)
+    if not os.path.exists(path):
+        res.ok = False
+        res.failures.append(f"missing golden trace {path} "
+                            f"(run: python -m repro.scenarios.run record "
+                            f"{scn.name})")
+        return res
+    with open(path) as f:
+        want = json.load(f)
+    if want.get("schema") != SCHEMA_VERSION:
+        res.failures.append(f"golden schema {want.get('schema')} != "
+                            f"{SCHEMA_VERSION}; re-record")
+    spec_now = json.loads(json.dumps(scn.to_dict()))
+    if want.get("scenario") != spec_now:
+        res.failures.append("registered scenario spec changed since the "
+                            "golden was recorded; re-record the golden")
+    if res.failures:
+        res.ok = False
+        return res
+
+    if cross_engine:
+        if scn.engine != "sim":
+            res.ok = False
+            res.failures.append("cross-engine verify only applies to sim "
+                                "scenarios")
+            return res
+        replay = scn.overridden(engine="wallclock", mode="deterministic")
+        got = fresh or run_trace(replay)
+        _cmp_arrivals(res.failures, got["arrivals"], want["arrivals"])
+        _cmp_evals(res.failures, got["evals"], want["evals"], _close_f32)
+        for key in ("tokens", "comm_bytes"):
+            if got[key] != want[key]:
+                res.failures.append(f"{key}: got {got[key]}, "
+                                    f"golden {want[key]}")
+        _cmp_fingerprint(res.failures, got["param_fingerprint"],
+                         want["param_fingerprint"])
+    else:
+        got = fresh or run_trace(scn)
+        if scn.exact:
+            _verify_exact(res.failures, got, want)
+        else:
+            _verify_banded(res.failures, got, want, FREE_BANDS)
+    res.ok = not res.failures
+    res.details = {"golden": path,
+                   "got_digest": got.get("param_digest"),
+                   "want_digest": want.get("param_digest")}
+    return res
+
+
+def write_diff(res: VerifyResult, diff_dir: str) -> str:
+    """Persist a machine-readable failure report (the CI artifact)."""
+    os.makedirs(diff_dir, exist_ok=True)
+    slug = re.sub(r"[^\w.-]+", "_", res.name).strip("_")
+    path = os.path.join(diff_dir, f"{slug}.diff.json")
+    with open(path, "w") as f:
+        json.dump({"name": res.name, "ok": res.ok,
+                   "failures": res.failures, "details": res.details},
+                  f, indent=1)
+    return path

@@ -1,13 +1,17 @@
 """Wall-clock concurrent runtime: transport backpressure, determinism
 contract (sim <-> wallclock arrival-sequence + final-params equivalence),
 fault tolerance / elastic membership on the threaded path, and genuine
-compute/update overlap in free-running mode."""
+compute/update overlap in free-running mode.
+
+Whole module runs in CI's scenarios-wallclock lane (see pytest.ini)."""
 import threading
 import time
 
 import jax
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.wallclock
 
 from repro.configs import get_config, reduced
 from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig

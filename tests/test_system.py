@@ -56,6 +56,7 @@ def test_reduced_configs_are_small():
         assert r.d_model <= 64 and r.n_layers <= 4 and r.vocab_size <= 128
 
 
+@pytest.mark.slow
 def test_heloco_beats_async_nesterov_under_staleness():
     """Paper's central claim, minimal form: with heterogeneous paces and
     non-IID data, async HeLoCo reaches lower validation loss than plain
@@ -74,6 +75,7 @@ def test_heloco_beats_async_nesterov_under_staleness():
     assert rh["final_loss"] < rh["evals"][0]["mean"]
 
 
+@pytest.mark.slow
 def test_lookahead_init_helps_or_neutral():
     """Eq. 5 look-ahead init should not hurt under staleness (sanity)."""
     import dataclasses
