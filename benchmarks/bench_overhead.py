@@ -110,6 +110,43 @@ def _arrival_timing_rows(d: int, reps: int, note: str) -> List[Dict]:
     ]
 
 
+def per_method_launch_rows(d: int = 1 << 13) -> List[Dict]:
+    """Launch-count contract for EVERY registered outer method: the packed
+    arrival path must stay <= 2 pallas_calls (one optional stats sweep +
+    one fused correct+outer sweep) no matter which method is configured —
+    including the buffered delayed-Nesterov schedule and the DC-ASGD
+    quadratic compensation. Rows are exact-match gated (name contains
+    "launches") so a method silently falling off the fused path fails
+    ``make bench-check``."""
+    from repro.core import methods as outer_methods
+    from repro.core.heloco import apply_arrival_packed
+
+    params = _blocks(d, 0)
+    delta = _blocks(d, 2)
+    layout = packing.build_layout(params)
+    pbuf = packing.pack(layout, params)
+    mbuf = packing.zeros(layout)
+    abuf = packing.zeros(layout)
+    rows = []
+    for m in outer_methods.all_methods():
+        def arrival(p, mm, g, b=None, name=m.name):
+            return apply_arrival_packed(p, mm, g, layout, method=name,
+                                        outer_lr=0.7, mu=0.9, h=H, tau=3.0,
+                                        abuf=b, phase=2)
+        if m.uses_buffer:
+            n = count_launches(jax.jit(arrival), pbuf, mbuf, delta, abuf)
+        else:
+            n = count_launches(jax.jit(arrival), pbuf, mbuf, delta)
+        extra = "4R+3W (accumulator)" if m.uses_buffer else "3R+2W"
+        rows.append({
+            "name": f"arrival_launches_packed_{m.name}",
+            "us_per_call": float(n),
+            "derived": (f"pallas_calls={n} (<= 2 per arrival); fused "
+                        f"sweep hbm={extra} of d floats")})
+        assert n <= 2, (m.name, n)
+    return rows
+
+
 def arrival_rows(reps: int = 30) -> List[Dict]:
     """Full-arrival comparison on the 8-block synthetic model.
 
@@ -154,6 +191,7 @@ def arrival_rows(reps: int = 30) -> List[Dict]:
                      f"at d={d_large}; fused sweep alone is 3R+2W, the "
                      "roofline minimum")},
     ]
+    rows += per_method_launch_rows(d_small)
     rows += _arrival_timing_rows(d_small, reps, "launch-bound regime")
     rows += _arrival_timing_rows(d_large, max(reps // 6, 5),
                                  "bandwidth-bound regime")

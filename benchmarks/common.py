@@ -17,15 +17,18 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import RunConfig
+from repro.core import methods as outer_methods
 from repro.async_engine.engine import make_engine, make_eval_fn
-from repro.scenarios.spec import METHOD_PRESETS, METHOD_TABLE, Scenario
+from repro.scenarios.spec import Scenario
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/experiments")
 
-# paper Table 3 (Appendix A.5), derived from the scenario layer's method
-# table — benchmark-dialect names ("async-heloco") map onto raw methods.
-METHODS = {preset: dict(method=raw, **METHOD_TABLE[raw])
-           for preset, raw in METHOD_PRESETS.items()}
+# paper Table 3 (Appendix A.5): benchmark-dialect names ("async-heloco")
+# -> raw method + defaults, straight from the ``repro.core.methods``
+# registry (the aliases live ON the method definitions; the duplicated
+# alias table this module used to keep is gone).
+METHODS = {alias: dict(method=raw, **outer_methods.get(raw).defaults())
+           for alias, raw in outer_methods.alias_table().items()}
 
 
 def scenario_for(paces: Sequence[float], *, method: str, non_iid: bool,
@@ -37,9 +40,10 @@ def scenario_for(paces: Sequence[float], *, method: str, non_iid: bool,
                  batch_size: int = 4, seq_len: int = 64,
                  name: str = "bench", **scenario_kw) -> Scenario:
     """The benchmark dialect, compiled to a Scenario: `method` accepts the
-    benchmark preset names ("async-heloco", ...) or raw method names."""
+    benchmark preset names ("async-heloco", ...) or raw method names
+    (``Scenario`` canonicalizes through the method registry)."""
     return Scenario(
-        name=name, method=METHOD_PRESETS.get(method, method),
+        name=name, method=method,
         n_workers=len(paces),
         worker_paces=tuple(float(p) for p in paces),
         outer_steps=outer_steps, inner_steps=inner_steps,

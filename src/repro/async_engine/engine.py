@@ -360,7 +360,7 @@ class EngineBase:
     def run(self, eval_every: int = 0,
             eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
             ckpt_every: int = 0, ckpt_dir: str = "") -> History:
-        if self.cfg.outer.method == "sync_nesterov":
+        if self.server.method.sync:
             return self._run_sync(eval_every, eval_fn, ckpt_every, ckpt_dir)
         return self._run_async(eval_every, eval_fn, ckpt_every, ckpt_dir)
 
@@ -463,9 +463,12 @@ class EngineBase:
 
     # ---------------------------------------------------------- checkpointing
     def server_tree(self) -> Dict:
-        return {"params": self.server.state.params,
-                "momentum": self.server.state.momentum,
-                "step": self.server.state.step}
+        state = self.server.state
+        tree = {"params": state.params, "momentum": state.momentum,
+                "step": state.step}
+        if state.aux is not None:        # per-method auxiliary state
+            tree["aux"] = state.aux      # (e.g. delayed-Nesterov buffer)
+        return tree
 
     def checkpoint(self, ckpt_dir: str) -> str:
         path = os.path.join(ckpt_dir, f"step_{self.server.t}.npz")
@@ -478,7 +481,8 @@ class EngineBase:
         self.server.state = self.server.state._replace(
             params=tree["params"],
             momentum=tree["momentum"],
-            step=jnp.asarray(tree["step"]))
+            step=jnp.asarray(tree["step"]),
+            aux=tree.get("aux", self.server.state.aux))
         self.time = float(meta.get("time", 0.0))
         self.history.tokens = int(meta.get("tokens", 0))
         # in-flight worker rounds are lost on restart (real-world semantics)

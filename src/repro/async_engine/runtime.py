@@ -255,8 +255,7 @@ class ConcurrentRuntime(EngineBase):
             ckpt_every: int = 0, ckpt_dir: str = "") -> History:
         t0 = time.monotonic()
         try:
-            if (self.mode == "free"
-                    and self.cfg.outer.method != "sync_nesterov"):
+            if self.mode == "free" and not self.server.method.sync:
                 hist = self._run_free(eval_every, eval_fn, ckpt_every,
                                       ckpt_dir)
             else:

@@ -1,11 +1,12 @@
 """The synchronizer (outer-optimizer server) for asynchronous
 low-communication training.
 
-Owns the outer state (theta, momentum, step counter), hands out worker
-initializations (look-ahead model for HeLoCo/MLA, Eq. 5), and processes
-arriving pseudo-gradients through the configured method (HeLoCo per-block
-correction / MLA / Nesterov), including staleness bookkeeping, arrival
-weighting, and optional stale-update dropping (App. A.6).
+Owns the outer state (theta, momentum, step counter, optional per-method
+auxiliary buffer), hands out worker initializations (Eq. 5 look-ahead for
+methods that participate), and processes arriving pseudo-gradients
+through the configured ``repro.core.methods`` definition — correction,
+staleness bookkeeping, arrival weighting, and optional stale-update
+dropping (App. A.6) are all method-agnostic here.
 
 Arrival fast path (default): the outer state lives PACKED — params and
 momentum are flattened once at init into fp32 (R, 128) buffers (see
@@ -27,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OuterOptConfig
+from repro.core import methods as outer_methods
 from repro.core import packing
 from repro.core.heloco import (
     OuterState, apply_arrival, apply_arrival_packed, init_outer_state,
@@ -52,28 +54,45 @@ class Synchronizer:
                  n_workers: int, stacked_axes: Optional[PyTree] = None,
                  use_kernel: bool = False, packed: bool = True):
         self.cfg = cfg
+        self.method = outer_methods.resolve(cfg.method)
         self.n_workers = n_workers
         self.stacked_axes = stacked_axes
         self.use_kernel = use_kernel
         self.packed = packed
         self.records: List[ArrivalRecord] = []
+        buffered = self.method.uses_buffer
         if packed:
             self.layout = packing.build_layout(init_params, stacked_axes)
             self._pbuf = packing.pack(self.layout, init_params)
             self._mbuf = packing.zeros(self.layout)
+            self._abuf = packing.zeros(self.layout) if buffered else None
             self._step = 0
             self._state_cache: Optional[OuterState] = None
-            self._apply_packed = jax.jit(
-                lambda p, m, delta, rho, tau: apply_arrival_packed(
-                    p, m, delta, self.layout, method=cfg.method,
-                    outer_lr=cfg.outer_lr, mu=cfg.momentum, h=cfg.heloco,
-                    rho=rho, tau=tau),
-                donate_argnums=(0, 1))
-            self._decay_packed = jax.jit(
-                lambda p, m, rho, tau: momentum_decay_packed(
-                    p, m, cfg.outer_lr, cfg.momentum, method=cfg.method,
-                    rho=rho, tau=tau),
-                donate_argnums=(0, 1))
+            if buffered:
+                self._apply_packed = jax.jit(
+                    lambda p, m, b, delta, rho, tau, phase:
+                    apply_arrival_packed(
+                        p, m, delta, self.layout, method=self.method,
+                        outer_lr=cfg.outer_lr, mu=cfg.momentum, h=cfg.heloco,
+                        rho=rho, tau=tau, abuf=b, phase=phase),
+                    donate_argnums=(0, 1, 2))
+                self._decay_packed = jax.jit(
+                    lambda p, m, b, rho, tau, phase: momentum_decay_packed(
+                        p, m, cfg.outer_lr, cfg.momentum, method=self.method,
+                        rho=rho, tau=tau, abuf=b, phase=phase),
+                    donate_argnums=(0, 1, 2))
+            else:
+                self._apply_packed = jax.jit(
+                    lambda p, m, delta, rho, tau: apply_arrival_packed(
+                        p, m, delta, self.layout, method=self.method,
+                        outer_lr=cfg.outer_lr, mu=cfg.momentum, h=cfg.heloco,
+                        rho=rho, tau=tau),
+                    donate_argnums=(0, 1))
+                self._decay_packed = jax.jit(
+                    lambda p, m, rho, tau: momentum_decay_packed(
+                        p, m, cfg.outer_lr, cfg.momentum, method=self.method,
+                        rho=rho, tau=tau),
+                    donate_argnums=(0, 1))
             self._unpack_p = jax.jit(
                 lambda b: packing.unpack(self.layout, b))
             self._unpack_m = jax.jit(
@@ -83,17 +102,18 @@ class Synchronizer:
                     self.layout, p - cfg.outer_lr * cfg.momentum * m))
         else:
             self.layout = None
-            self._state = init_outer_state(init_params)
+            self._state = init_outer_state(init_params, with_aux=buffered)
             self._apply = jax.jit(
-                lambda state, delta, rho, tau: apply_arrival(
-                    state, delta, method=cfg.method, outer_lr=cfg.outer_lr,
+                lambda state, delta, rho, tau, phase: apply_arrival(
+                    state, delta, method=self.method, outer_lr=cfg.outer_lr,
                     mu=cfg.momentum, h=cfg.heloco, rho=rho, tau=tau,
-                    stacked_axes=stacked_axes, use_kernel=use_kernel),
+                    stacked_axes=stacked_axes, use_kernel=use_kernel,
+                    phase=phase),
                 donate_argnums=(0,))
             self._decay = jax.jit(
-                lambda state, rho, tau: momentum_decay_update(
-                    state, cfg.outer_lr, cfg.momentum, method=cfg.method,
-                    rho=rho, tau=tau),
+                lambda state, rho, tau, phase: momentum_decay_update(
+                    state, cfg.outer_lr, cfg.momentum, method=self.method,
+                    rho=rho, tau=tau, phase=phase),
                 donate_argnums=(0,))
 
     # -- outer state view -----------------------------------------------------
@@ -106,7 +126,9 @@ class Synchronizer:
             self._state_cache = OuterState(
                 params=self._unpack_p(self._pbuf),
                 momentum=self._unpack_m(self._mbuf),
-                step=jnp.asarray(self._step, jnp.int32))
+                step=jnp.asarray(self._step, jnp.int32),
+                aux=(self._unpack_m(self._abuf)
+                     if self._abuf is not None else None))
         return self._state_cache
 
     @state.setter
@@ -116,6 +138,10 @@ class Synchronizer:
             return
         self._pbuf = packing.pack(self.layout, value.params)
         self._mbuf = packing.pack(self.layout, value.momentum)
+        if self.method.uses_buffer:
+            self._abuf = (packing.pack(self.layout, value.aux)
+                          if value.aux is not None
+                          else packing.zeros(self.layout))
         self._step = int(value.step)
         self._state_cache = None
 
@@ -126,8 +152,9 @@ class Synchronizer:
     # -- worker initialization ------------------------------------------------
     def worker_init(self) -> PyTree:
         """Model state handed to a newly-available worker (Eq. 5 look-ahead
-        for HeLoCo/MLA; plain theta_t for the Nesterov baselines)."""
-        if self.cfg.lookahead_init and self.cfg.method in ("heloco", "mla"):
+        for methods that participate in it — ``OuterMethod.lookahead_init``
+        — plain theta_t for the Nesterov baselines)."""
+        if self.cfg.lookahead_init and self.method.lookahead_init:
             if self.packed:
                 return self._lookahead_packed(self._pbuf, self._mbuf)
             return lookahead_init(self._state, self.cfg.outer_lr,
@@ -150,14 +177,21 @@ class Synchronizer:
     # -- outer-step drivers ---------------------------------------------------
     def _step_update(self, delta: PyTree, rho: float, tau: float):
         if self.packed:
-            self._pbuf, self._mbuf = self._apply_packed(
-                self._pbuf, self._mbuf, delta, jnp.asarray(rho),
-                jnp.asarray(tau, jnp.float32))
+            if self.method.uses_buffer:
+                self._pbuf, self._mbuf, self._abuf = self._apply_packed(
+                    self._pbuf, self._mbuf, self._abuf, delta,
+                    jnp.asarray(rho), jnp.asarray(tau, jnp.float32),
+                    jnp.asarray(self._step, jnp.int32))
+            else:
+                self._pbuf, self._mbuf = self._apply_packed(
+                    self._pbuf, self._mbuf, delta, jnp.asarray(rho),
+                    jnp.asarray(tau, jnp.float32))
             self._step += 1
             self._state_cache = None
         else:
             self._state = self._apply(self._state, delta, jnp.asarray(rho),
-                                      jnp.asarray(tau, jnp.float32))
+                                      jnp.asarray(tau, jnp.float32),
+                                      jnp.asarray(self.t, jnp.int32))
 
     def _step_decay(self, rho: float, tau: float):
         """Dropped arrival (App. A.6): momentum-decay-only outer step —
@@ -166,12 +200,18 @@ class Synchronizer:
         rho = jnp.asarray(rho)
         tau = jnp.asarray(tau, jnp.float32)
         if self.packed:
-            self._pbuf, self._mbuf = self._decay_packed(
-                self._pbuf, self._mbuf, rho, tau)
+            if self.method.uses_buffer:
+                self._pbuf, self._mbuf, self._abuf = self._decay_packed(
+                    self._pbuf, self._mbuf, self._abuf, rho, tau,
+                    jnp.asarray(self._step, jnp.int32))
+            else:
+                self._pbuf, self._mbuf = self._decay_packed(
+                    self._pbuf, self._mbuf, rho, tau)
             self._step += 1
             self._state_cache = None
         else:
-            self._state = self._decay(self._state, rho, tau)
+            self._state = self._decay(self._state, rho, tau,
+                                      jnp.asarray(self.t, jnp.int32))
 
     # -- arrival processing ---------------------------------------------------
     def on_arrival(self, delta: PyTree, s_i: int, worker_id: int,

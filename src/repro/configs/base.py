@@ -167,7 +167,9 @@ class HeLoCoConfig:
 
 @dataclass(frozen=True)
 class OuterOptConfig:
-    method: str = "heloco"           # heloco | mla | nesterov | sync_nesterov
+    method: str = "heloco"           # any registered repro.core.methods
+    # name or alias (heloco | mla | nesterov | sync_nesterov |
+    # delayed_nesterov | dcasgd | ...)
     outer_lr: float = 0.7            # paper: 0.7 (0.07 for async nesterov)
     momentum: float = 0.9
     weight_factor: str = "base"      # "base" sqrt(k)/k | "average" 1/k | "one"

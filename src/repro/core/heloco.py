@@ -31,16 +31,23 @@ PyTree = Any
 
 
 class OuterState(NamedTuple):
-    """Synchronizer state: outer params + Nesterov momentum buffer."""
+    """Synchronizer state: outer params + Nesterov momentum buffer.
+
+    ``aux`` is per-method auxiliary state (``None`` for the standard
+    Nesterov schedule; a gradient-accumulator pytree for buffered methods
+    such as delayed-Nesterov — see ``repro.core.methods``)."""
     params: PyTree
     momentum: PyTree
     step: jnp.ndarray          # outer step t (int32)
+    aux: Optional[PyTree] = None
 
 
-def init_outer_state(params: PyTree) -> OuterState:
+def init_outer_state(params: PyTree, with_aux: bool = False) -> OuterState:
     zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    aux = (jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                        params) if with_aux else None)
     return OuterState(params=params, momentum=zeros,
-                      step=jnp.zeros((), jnp.int32))
+                      step=jnp.zeros((), jnp.int32), aux=aux)
 
 
 # ---------------------------------------------------------------------------
@@ -138,86 +145,84 @@ def outer_update(state: OuterState, g: PyTree, outer_lr: float,
 
     momentum = jax.tree.map(m_upd, state.momentum, g)
     params = jax.tree.map(p_upd, state.params, momentum, g)
-    return OuterState(params=params, momentum=momentum, step=state.step + 1)
+    return OuterState(params=params, momentum=momentum, step=state.step + 1,
+                      aux=state.aux)
 
 
 # ---------------------------------------------------------------------------
-# Method dispatch: what happens when a pseudo-gradient arrives
+# Method dispatch: what happens when a pseudo-gradient arrives.
+# All per-method behaviour lives in the ``repro.core.methods`` registry;
+# the drivers below are method-agnostic.
 # ---------------------------------------------------------------------------
 
 def mla_correct(delta: PyTree, momentum: PyTree, outer_lr: float,
-                mu: float, tau: jnp.ndarray) -> PyTree:
+                mu: float, tau: jnp.ndarray,
+                tau_clip: float = 10.0) -> PyTree:
     """Momentum Look-Ahead (Ajanthan et al. 2025): uniform extrapolation of
     the whole pseudo-gradient along the negative momentum direction,
-    proportional to staleness: Delta' = Delta + eta * mu * tau_norm * m.
+    proportional to staleness: Delta' = Delta + eta * mu * tau_norm * m,
+    with tau_norm = min(tau, tau_clip)/tau_clip (the paper's clip lives on
+    the method definition in ``repro.core.methods``).
 
     (The original MLA applies a single uniform momentum-based shift to the
     entire update; per-block geometry is exactly what it lacks.)
     """
-    scale = outer_lr * mu * jnp.minimum(tau.astype(jnp.float32), 10.0) / 10.0
+    scale = (outer_lr * mu
+             * jnp.minimum(tau.astype(jnp.float32), tau_clip) / tau_clip)
     return jax.tree.map(
         lambda d, m: (d.astype(jnp.float32) + scale * m).astype(d.dtype),
         delta, momentum)
 
 
-def _decay_coeffs(method: str, outer_lr: float, mu: float, rho, tau):
-    """Scalar coefficients of the dropped-arrival outer step.
-
-    With the pseudo-gradient suppressed (Delta = 0), every method's
-    corrected gradient collapses to a scalar multiple of the momentum:
-    heloco/nesterov give G = 0; MLA gives G = eta mu tau_norm m
-    (``mla_correct`` of a zero delta). Either way the outer step is
-      m' = c_m m;  theta' = theta - eta c_p m
-    so no zero pytree and no O(d) correction sweep is ever needed.
-    """
-    tau = jnp.asarray(tau, jnp.float32)
-    scale = (outer_lr * mu * jnp.minimum(tau, 10.0) / 10.0
-             if method == "mla" else 0.0)
-    g = rho * scale                       # G = g * m
-    c_m = mu + (1.0 - mu) * g
-    c_p = g + mu * c_m
-    return c_m, c_p
-
-
 def momentum_decay_update(state: OuterState, outer_lr: float, mu: float,
-                          method: str = "heloco",
+                          method="heloco",
                           rho: jnp.ndarray | float = 1.0,
-                          tau: jnp.ndarray | float = 0.0) -> OuterState:
+                          tau: jnp.ndarray | float = 0.0,
+                          phase=None) -> OuterState:
     """Outer step for a DROPPED stale arrival (App. A.6). Equivalent to
-    ``apply_arrival`` with a zero pseudo-gradient (for every method, incl.
-    MLA's momentum extrapolation of the zero delta) but skips
-    materialising the zero pytree and the O(d) correction entirely.
+    ``apply_arrival`` with a zero pseudo-gradient (for every registered
+    method, incl. MLA's momentum extrapolation of the zero delta) but
+    skips materialising the zero pytree and the O(d) correction entirely.
     """
-    c_m, c_p = _decay_coeffs(method, outer_lr, mu, rho, tau)
-    momentum = jax.tree.map(lambda m: c_m * m, state.momentum)
+    from repro.core import methods as _methods
+    m = _methods.resolve(method)
+    ctx = _methods.ArrivalCtx(outer_lr=outer_lr, mu=mu, rho=rho,
+                              tau=jnp.asarray(tau, jnp.float32), phase=phase)
+    if m.custom_update:
+        return _methods.scheduled_decay_update(m, ctx, state)
+    c_m, c_p = _methods.decay_coeffs(m, ctx)
+    momentum = jax.tree.map(lambda mm: c_m * mm, state.momentum)
     params = jax.tree.map(
-        lambda p, m: (p.astype(jnp.float32) - outer_lr * c_p * m
-                      ).astype(p.dtype),
+        lambda p, mm: (p.astype(jnp.float32) - outer_lr * c_p * mm
+                       ).astype(p.dtype),
         state.params, state.momentum)
-    return OuterState(params=params, momentum=momentum, step=state.step + 1)
+    return OuterState(params=params, momentum=momentum, step=state.step + 1,
+                      aux=state.aux)
 
 
-def apply_arrival(state: OuterState, delta: PyTree, *, method: str,
+def apply_arrival(state: OuterState, delta: PyTree, *, method,
                   outer_lr: float, mu: float, h: HeLoCoConfig,
                   rho: jnp.ndarray | float = 1.0,
                   tau: jnp.ndarray | float = 0.0,
                   stacked_axes: Optional[PyTree] = None,
-                  use_kernel: bool = False) -> OuterState:
+                  use_kernel: bool = False, phase=None) -> OuterState:
     """Process one arriving pseudo-gradient through the chosen method.
 
-    method: "heloco" | "mla" | "nesterov" (async) | "sync_nesterov"
-    (for sync, `delta` is already the worker-averaged pseudo-gradient).
+    method: any registered ``repro.core.methods`` name/alias or an
+    ``OuterMethod`` instance (for sync methods, `delta` is already the
+    worker-averaged pseudo-gradient). ``phase`` is the outer-step index at
+    arrival — only buffered schedules (delayed-Nesterov) read it.
     """
+    from repro.core import methods as _methods
+    m = _methods.resolve(method)
     tau = jnp.asarray(tau)
-    if method == "heloco":
-        g = block_correct(delta, state.momentum, h, stacked_axes=stacked_axes,
-                          use_kernel=use_kernel)
-    elif method == "mla":
-        g = mla_correct(delta, state.momentum, outer_lr, mu, tau)
-    elif method in ("nesterov", "sync_nesterov"):
-        g = delta
-    else:
-        raise ValueError(method)
+    ctx = _methods.ArrivalCtx(outer_lr=outer_lr, mu=mu, h=h, rho=rho,
+                              tau=tau, phase=phase,
+                              stacked_axes=stacked_axes,
+                              use_kernel=use_kernel)
+    g = m.correct(m, ctx, delta, state.momentum)
+    if m.custom_update:
+        return _methods.scheduled_outer_update(m, ctx, state, g)
     return outer_update(state, g, outer_lr, mu, rho=rho)
 
 
@@ -226,58 +231,79 @@ def apply_arrival(state: OuterState, delta: PyTree, *, method: str,
 # ---------------------------------------------------------------------------
 
 def apply_arrival_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
-                         delta: PyTree, layout, *, method: str,
+                         delta: PyTree, layout, *, method,
                          outer_lr: float, mu: float, h: HeLoCoConfig,
                          rho: jnp.ndarray | float = 1.0,
                          tau: jnp.ndarray | float = 0.0,
+                         abuf: jnp.ndarray | None = None, phase=None,
                          interpret: bool | None = None):
     """Process one arrival on the packed (R, 128) outer state.
 
-    pbuf/mbuf: packed fp32 params / momentum (see ``repro.core.packing``).
+    pbuf/mbuf: packed fp32 params / momentum (see ``repro.core.packing``);
+    abuf: the method's packed auxiliary buffer (buffered methods only).
     delta: the arriving pseudo-gradient pytree (packed here — one fused
-    XLA gather/concat, no kernel launches). Returns (pbuf', mbuf').
+    XLA gather/concat, no kernel launches). Returns (pbuf', mbuf') or
+    (pbuf', mbuf', abuf') for buffered methods.
 
     Numerically equivalent to ``apply_arrival`` on fp32 pytrees: every
-    method reduces to per-block scalars (cu, cv) with g = cu*delta + cv*m,
-    so the whole arrival is ONE statistics sweep (HeLoCo only) plus ONE
-    fused correct+outer sweep — 2 pallas_calls regardless of #leaves,
-    vs 2 per leaf + a second full tree sweep on the per-leaf path.
+    registered method reduces to per-block scalars (cu, cv, cq) with
+    g = cu*delta + cv*m + cq*delta^2*m (see ``repro.core.methods``), so
+    the whole arrival is at most ONE statistics sweep (methods that need
+    segment stats, e.g. HeLoCo) plus ONE fused correct+outer sweep —
+    <= 2 pallas_calls regardless of #leaves, vs 2 per leaf + a second
+    full tree sweep on the per-leaf path.
     """
+    from repro.core import methods as _methods
     from repro.core import packing
     from repro.kernels import packed as pk
     from repro.kernels.ops import _auto_interpret
 
+    m = _methods.resolve(method)
     interpret = _auto_interpret(interpret)
     tau = jnp.asarray(tau)
     row_block = jnp.asarray(layout.row_block)
     dbuf = packing.pack(layout, delta)
-    if method == "heloco":
-        stats = pk.packed_stats(dbuf, mbuf, row_block, layout.n_blocks,
-                                interpret=interpret,
-                                ranges=layout.block_row_ranges)
-        cu, cv = pk.branch_scalars(stats, h)
-    elif method == "mla":
-        scale = outer_lr * mu * jnp.minimum(tau.astype(jnp.float32),
-                                            10.0) / 10.0
-        cu = jnp.ones((layout.n_blocks,), jnp.float32)
-        cv = jnp.broadcast_to(scale, (layout.n_blocks,))
-    elif method in ("nesterov", "sync_nesterov"):
-        cu = jnp.ones((layout.n_blocks,), jnp.float32)
-        cv = jnp.zeros((layout.n_blocks,), jnp.float32)
-    else:
-        raise ValueError(method)
+    ctx = _methods.ArrivalCtx(outer_lr=outer_lr, mu=mu, h=h, rho=rho,
+                              tau=tau, phase=phase, layout=layout,
+                              interpret=interpret)
+    cu, cv, cq = m.packed_coeffs(m, ctx, dbuf, mbuf)
     cu_rows = cu[row_block][:, None]
     cv_rows = cv[row_block][:, None]
+    if m.custom_update:          # same dispatch as the per-leaf driver
+        if cq is not None:
+            raise NotImplementedError(
+                f"method {m.name!r}: a quadratic (cq) term combined with "
+                "a custom schedule is not supported on the packed path")
+        am, bm, ab, cg, cm = m.outer_coeffs(m, ctx) if m.outer_coeffs \
+            else _methods.standard_coeffs(mu)
+        if abuf is None:
+            abuf = packing.zeros(layout)
+        p2, m2, b2 = pk.packed_correct_outer_acc(
+            pbuf, mbuf, abuf, dbuf, cu_rows, cv_rows, outer_lr, rho,
+            am, bm, ab, cg, cm, interpret=interpret)
+        return (p2, m2, b2) if m.uses_buffer else (p2, m2)
+    if cq is not None:
+        cq_rows = cq[row_block][:, None]
+        return pk.packed_correct_outer_quad(
+            pbuf, mbuf, dbuf, cu_rows, cv_rows, cq_rows, outer_lr, mu,
+            rho, interpret=interpret)
     return pk.packed_correct_outer(pbuf, mbuf, dbuf, cu_rows, cv_rows,
                                    outer_lr, mu, rho, interpret=interpret)
 
 
 def momentum_decay_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
                           outer_lr: float, mu: float,
-                          method: str = "heloco",
+                          method="heloco",
                           rho: jnp.ndarray | float = 1.0,
-                          tau: jnp.ndarray | float = 0.0):
-    """Dropped-arrival step on packed state (see ``_decay_coeffs``).
+                          tau: jnp.ndarray | float = 0.0,
+                          abuf: jnp.ndarray | None = None, phase=None):
+    """Dropped-arrival step on packed state (see ``methods.decay_coeffs``).
     Pure elementwise buffer math (XLA fuses it into one pass)."""
-    c_m, c_p = _decay_coeffs(method, outer_lr, mu, rho, tau)
+    from repro.core import methods as _methods
+    m = _methods.resolve(method)
+    ctx = _methods.ArrivalCtx(outer_lr=outer_lr, mu=mu, rho=rho,
+                              tau=jnp.asarray(tau, jnp.float32), phase=phase)
+    if m.custom_update:
+        return _methods.scheduled_decay_packed(m, ctx, pbuf, mbuf, abuf)
+    c_m, c_p = _methods.decay_coeffs(m, ctx)
     return pbuf - outer_lr * c_p * mbuf, c_m * mbuf

@@ -28,9 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import HeLoCoConfig, InnerOptConfig, ModelConfig
-from repro.core.heloco import (
-    OuterState, block_correct, lookahead_init, mla_correct, outer_update,
-)
+from repro.core import methods as outer_methods
+from repro.core.heloco import OuterState, lookahead_init, outer_update
 from repro.models import build_model
 from repro.optim.adamw import AdamState, adamw_update, init_adam
 
@@ -182,6 +181,15 @@ def make_outer_exchange(cfg: ModelConfig, mesh, *, h: HeLoCoConfig,
     paper's communication cost — everything else in training is pod-local.
     """
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    m = outer_methods.resolve(method)
+    if m.custom_update:
+        raise NotImplementedError(
+            f"outer method {m.name!r} needs per-method auxiliary state; "
+            "the multi-pod outer exchange only supports methods on the "
+            "standard Nesterov schedule")
+    ctx = outer_methods.ArrivalCtx(outer_lr=outer_lr, mu=mu, h=h,
+                                   tau=jnp.zeros((), jnp.float32),
+                                   stacked_axes=stacked_axes)
 
     def fn(params: PyTree, momentum: PyTree, worker_params: PyTree):
         delta = jax.tree_util.tree_map(
@@ -190,15 +198,7 @@ def make_outer_exchange(cfg: ModelConfig, mesh, *, h: HeLoCoConfig,
             params, worker_params)
         if compress_int8:
             delta = jax.tree_util.tree_map(_int8_roundtrip_leaf, delta)
-        if method == "heloco":
-            g = block_correct(delta, momentum, h, stacked_axes=stacked_axes)
-        elif method == "mla":
-            g = mla_correct(delta, momentum, outer_lr, mu,
-                            jnp.zeros((), jnp.float32))
-        elif method in ("nesterov", "sync_nesterov"):
-            g = delta
-        else:
-            raise ValueError(method)
+        g = m.correct(m, ctx, delta, momentum)
         state = outer_update(
             OuterState(params=params, momentum=momentum,
                        step=jnp.zeros((), jnp.int32)),

@@ -179,6 +179,138 @@ def packed_correct_outer(p2d: jnp.ndarray, m2d: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Sweep 2 variants for the generalized method layer (repro.core.methods).
+# Same contract as packed_correct_outer — ONE fused launch, one read of
+# each input tile, one write of each output tile — but with the extra
+# per-method terms: a quadratic delay-compensation coefficient (cq) and/or
+# a gradient-accumulator buffer with schedule scalars (am, bm, ab, cg, cm).
+# Methods pick their variant through their packed hook; this module never
+# branches on method names.
+# ---------------------------------------------------------------------------
+
+def _correct_outer_quad_kernel(p_ref, m_ref, d_ref, cu_ref, cv_ref, cq_ref,
+                               hp_ref, p_out, m_out):
+    eta = hp_ref[0, 0]
+    mu = hp_ref[0, 1]
+    rho = hp_ref[0, 2]
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    g = (cu_ref[...] * d + cv_ref[...] * m
+         + cq_ref[...] * d * d * m) * rho       # Taylor-compensated, weighted
+    m_new = mu * m + (1.0 - mu) * g
+    p_out[...] = (p - eta * (g + mu * m_new)).astype(p_out.dtype)
+    m_out[...] = m_new
+
+
+def packed_correct_outer_quad(p2d: jnp.ndarray, m2d: jnp.ndarray,
+                              d2d: jnp.ndarray, cu_rows: jnp.ndarray,
+                              cv_rows: jnp.ndarray, cq_rows: jnp.ndarray,
+                              eta: float, mu: float, rho,
+                              interpret: bool = True,
+                              rows: int | None = None):
+    """One fused sweep with a quadratic compensation term per row:
+    g = cu*delta + cv*m + cq*delta^2*m, then Eqs. 17-19. Returns (p', m')."""
+    r = p2d.shape[0]
+    rows, grid = _grid(r, interpret, rows)
+    hp = jnp.stack([jnp.asarray(eta, jnp.float32),
+                    jnp.asarray(mu, jnp.float32),
+                    jnp.asarray(rho, jnp.float32)]).reshape(1, 3)
+    return pl.pallas_call(
+        _correct_outer_quad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+            jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(p2d, m2d, d2d, cu_rows, cv_rows, cq_rows, hp)
+
+
+def _correct_outer_acc_kernel(p_ref, m_ref, b_ref, d_ref, cu_ref, cv_ref,
+                              hp_ref, p_out, m_out, b_out):
+    eta = hp_ref[0, 0]
+    rho = hp_ref[0, 1]
+    am = hp_ref[0, 2]
+    bm = hp_ref[0, 3]
+    ab = hp_ref[0, 4]
+    cg = hp_ref[0, 5]
+    cm = hp_ref[0, 6]
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    g = (cu_ref[...] * d + cv_ref[...] * m) * rho
+    acc = b + g
+    m_new = am * m + bm * acc
+    p_out[...] = (p - eta * (cg * g + cm * m_new)).astype(p_out.dtype)
+    m_out[...] = m_new
+    b_out[...] = ab * acc
+
+
+def packed_correct_outer_acc(p2d: jnp.ndarray, m2d: jnp.ndarray,
+                             b2d: jnp.ndarray, d2d: jnp.ndarray,
+                             cu_rows: jnp.ndarray, cv_rows: jnp.ndarray,
+                             eta: float, rho, am, bm, ab, cg, cm,
+                             interpret: bool = True,
+                             rows: int | None = None):
+    """One fused sweep of the generalized schedule with a gradient
+    accumulator (delayed-Nesterov family):
+
+      g = (cu*delta + cv*m)*rho;  acc = b + g
+      m' = am*m + bm*acc;  b' = ab*acc;  p' = p - eta*(cg*g + cm*m')
+
+    Schedule scalars may be traced (boundary arrivals toggle them).
+    Returns (p', m', b')."""
+    r = p2d.shape[0]
+    rows, grid = _grid(r, interpret, rows)
+    hp = jnp.stack([jnp.asarray(eta, jnp.float32),
+                    jnp.asarray(rho, jnp.float32),
+                    jnp.asarray(am, jnp.float32),
+                    jnp.asarray(bm, jnp.float32),
+                    jnp.asarray(ab, jnp.float32),
+                    jnp.asarray(cg, jnp.float32),
+                    jnp.asarray(cm, jnp.float32)]).reshape(1, 7)
+    return pl.pallas_call(
+        _correct_outer_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 7), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+            jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+            jax.ShapeDtypeStruct(b2d.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(p2d, m2d, b2d, d2d, cu_rows, cv_rows, hp)
+
+
+# ---------------------------------------------------------------------------
 # Per-row-scale int8 quantization (packed compression path)
 # ---------------------------------------------------------------------------
 

@@ -30,6 +30,7 @@ from __future__ import annotations
 import argparse
 
 from repro.checkpoint import ckpt as ckpt_lib
+from repro.core import methods as outer_methods
 from repro.async_engine.engine import make_engine, make_eval_fn
 from repro.scenarios import registry
 from repro.scenarios.spec import Scenario
@@ -39,8 +40,9 @@ def scenario_from_args(args) -> Scenario:
     """Compile the launcher's flag dialect into a Scenario."""
     paces = tuple(float(p) for p in args.paces.split(","))
     outer_lr = args.outer_lr
-    if outer_lr is not None and args.method == "nesterov":
-        outer_lr = min(outer_lr, 0.07)
+    cap = outer_methods.get(args.method).outer_lr_cap
+    if outer_lr is not None and cap is not None:
+        outer_lr = min(outer_lr, cap)
     return Scenario(
         name="cli",
         arch=args.arch, smoke=args.smoke,
@@ -68,7 +70,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-friendly)")
     ap.add_argument("--method", default="heloco",
-                    choices=["heloco", "mla", "nesterov", "sync_nesterov"])
+                    choices=outer_methods.cli_names(),
+                    help="any registered repro.core.methods name or "
+                         "benchmark-dialect alias")
     ap.add_argument("--workers", type=int, default=5)
     ap.add_argument("--paces", default="1,1,1,1,1")
     ap.add_argument("--outer", type=int, default=50)

@@ -8,8 +8,7 @@
 See docs/scenarios.md for the spec schema and the golden-trace workflow.
 """
 from repro.scenarios.spec import (            # noqa: F401
-    ElasticSpec, FailureSpec, Materialized, METHOD_PRESETS, METHOD_TABLE,
-    Scenario,
+    ElasticSpec, FailureSpec, Materialized, METHOD_TABLE, Scenario,
 )
 from repro.scenarios.registry import (        # noqa: F401
     all_scenarios, get_scenario, names, register,

@@ -9,7 +9,8 @@ et al. 2024): worker speed profiles (1, 2, 6, 15), non-IID language
 assignment and Dirichlet mixtures, staleness regimes (drop / delay
 weighting), DyLU, int8 compression with error feedback, crash/rejoin,
 elastic membership, flexible shard assignment, the synchronous barrier
-baseline, and both wall-clock commit orders.
+baseline, the delayed-Nesterov and DC-ASGD outer-method baselines (sim +
+wall-clock), and both wall-clock commit orders.
 """
 from __future__ import annotations
 
@@ -102,6 +103,20 @@ register(Scenario(
     outer_steps=12, inner_steps=2, shard_assignment="flexible"))
 
 register(Scenario(
+    name="delayed_nesterov",
+    description="Delayed-Nesterov baseline (Liu et al. 2024): buffered "
+                "pseudo-gradients, momentum refresh every N arrivals.",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=12, inner_steps=2, method="delayed_nesterov"))
+
+register(Scenario(
+    name="dcasgd",
+    description="DC-ASGD-style delay compensation: stale pseudo-gradients "
+                "Taylor-corrected along the momentum, scaled by tau.",
+    n_workers=4, worker_paces=(1.0, 1.0, 6.0, 15.0),
+    outer_steps=12, inner_steps=2, method="dcasgd"))
+
+register(Scenario(
     name="sync_baseline",
     description="Synchronous DiLoCo/Nesterov barrier baseline: the "
                 "slowest worker gates every round.",
@@ -114,6 +129,24 @@ register(Scenario(
                 "FIFO-forced commits): trace-identical to the simulator.",
     engine="wallclock", mode="deterministic",
     n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=10, inner_steps=2))
+
+register(Scenario(
+    name="delayed_nesterov_wallclock",
+    description="Delayed-Nesterov on the deterministic wall-clock "
+                "runtime: the buffered schedule commits trace-identically "
+                "to the simulator.",
+    engine="wallclock", mode="deterministic", method="delayed_nesterov",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=10, inner_steps=2))
+
+register(Scenario(
+    name="dcasgd_wallclock",
+    description="DC-ASGD delay compensation on the deterministic "
+                "wall-clock runtime (threaded workers, FIFO-forced "
+                "commits).",
+    engine="wallclock", mode="deterministic", method="dcasgd",
+    n_workers=4, worker_paces=(1.0, 1.0, 6.0, 15.0),
     outer_steps=10, inner_steps=2))
 
 register(Scenario(

@@ -22,27 +22,14 @@ from repro.configs import get_config, reduced
 from repro.configs.base import (
     HeLoCoConfig, InnerOptConfig, OuterOptConfig, RunConfig,
 )
+from repro.core import methods as outer_methods
 
 # Paper Table 3 (Appendix A.5): per-method outer-optimizer defaults.
-# ``benchmarks.common.METHODS`` is derived from this table.
-METHOD_TABLE: Dict[str, Dict[str, Any]] = {
-    "heloco": dict(outer_lr=0.7, momentum=0.9, weight_factor="base",
-                   lookahead_init=True),
-    "mla": dict(outer_lr=0.7, momentum=0.9, weight_factor="base",
-                lookahead_init=True),
-    "nesterov": dict(outer_lr=0.07, momentum=0.9, weight_factor="base",
-                     lookahead_init=False),
-    "sync_nesterov": dict(outer_lr=0.7, momentum=0.9,
-                          weight_factor="average", lookahead_init=False),
-}
-
-# Benchmark-dialect method names ("async-heloco", ...) -> raw method.
-METHOD_PRESETS: Dict[str, str] = {
-    "async-heloco": "heloco",
-    "async-mla": "mla",
-    "async-nesterov": "nesterov",
-    "sync-nesterov": "sync_nesterov",
-}
+# A VIEW over the ``repro.core.methods`` registry — the single source of
+# truth; the old hand-maintained dict (and the METHOD_PRESETS alias table
+# it dragged along) are gone. Benchmark-dialect names ("async-heloco")
+# resolve through ``outer_methods.canonical``.
+METHOD_TABLE: Dict[str, Dict[str, Any]] = outer_methods.method_table()
 
 ENGINES = ("sim", "wallclock")
 MODES = ("deterministic", "free")
@@ -128,7 +115,10 @@ class Scenario:
     def __post_init__(self):
         assert self.engine in ENGINES, self.engine
         assert self.mode in MODES, self.mode
-        assert self.method in METHOD_TABLE, self.method
+        # canonicalize benchmark-dialect aliases ("async-heloco" -> heloco);
+        # raises KeyError for unknown methods
+        object.__setattr__(self, "method",
+                           outer_methods.canonical(self.method))
         assert self.n_workers >= 1 and self.worker_paces
 
     # ------------------------------------------------------------ properties
@@ -154,17 +144,17 @@ class Scenario:
         return reduced(model) if self.smoke else model
 
     def outer_config(self) -> OuterOptConfig:
-        preset = METHOD_TABLE[self.method]
+        preset = outer_methods.get(self.method)
         return OuterOptConfig(
             method=self.method,
             outer_lr=(self.outer_lr if self.outer_lr is not None
-                      else preset["outer_lr"]),
+                      else preset.outer_lr),
             momentum=(self.momentum if self.momentum is not None
-                      else preset["momentum"]),
-            weight_factor=self.weight_factor or preset["weight_factor"],
+                      else preset.momentum),
+            weight_factor=self.weight_factor or preset.weight_factor,
             lookahead_init=(self.lookahead_init
                             if self.lookahead_init is not None
-                            else preset["lookahead_init"]),
+                            else preset.lookahead_init),
             heloco=self.heloco,
             compression=self.compression,
             topk_ratio=self.topk_ratio,

@@ -118,7 +118,7 @@ def test_pack_unpack_preserves_bf16_leaf_dtypes():
 # Numerical equivalence: packed pipeline vs per-leaf reference
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("method", ["heloco", "mla", "nesterov"])
+@pytest.mark.parametrize("method", ["heloco", "mla", "nesterov", "dcasgd"])
 def test_packed_arrival_equals_per_leaf(method):
     key = jax.random.PRNGKey(0)
     params = _tree(key)
@@ -168,7 +168,8 @@ def test_packed_synchronizer_trajectory_matches_per_leaf():
                    rtol=3e-5, atol=3e-5)
 
 
-@pytest.mark.parametrize("method", ["heloco", "mla", "nesterov"])
+@pytest.mark.parametrize("method", ["heloco", "mla", "nesterov", "dcasgd",
+                                    "delayed_nesterov"])
 def test_momentum_decay_equals_zero_gradient_arrival(method):
     """Dropped-arrival fast path == the method applied to a ZERO
     pseudo-gradient (the pre-fast-path semantics) — including MLA, whose
