@@ -10,8 +10,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify verify-ci test test-slow test-wallclock bench bench-full \
 	bench-runtime bench-check bench-check-arrival bench-check-runtime \
-	smoke-wallclock scenarios scenarios-sim scenarios-wallclock \
-	record-goldens
+	bench-report smoke-wallclock scenarios scenarios-sim \
+	scenarios-wallclock record-goldens sweep-smoke
 
 verify:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
@@ -62,6 +62,17 @@ bench-check-arrival: bench
 bench-check-runtime: bench-runtime
 	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.check_regression \
 		--which runtime --timing-slack $(BENCH_SLACK)
+
+# markdown trajectory of the accumulated bench histories
+# -> results/bench/BENCH_REPORT.md
+bench-report:
+	$(PYTHON) -m benchmarks.report
+
+# CI-sized budgeted ablation grid (2 methods x 2 scenarios x fixed-token
+# + fixed-wallclock budgets): comparison tables + staleness->alignment
+# artifact from real telemetry streams -> results/sweeps/smoke/
+sweep-smoke:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.sweeps run smoke --force
 
 # golden-trace gates: verify every registered scenario against
 # results/golden/ (sim fp32-exact, deterministic wallclock trace-identical,

@@ -12,6 +12,7 @@ accounting are the TPU-relevant quantities.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Dict, List
 
@@ -114,10 +115,13 @@ def per_method_launch_rows(d: int = 1 << 13) -> List[Dict]:
     """Launch-count contract for EVERY registered outer method: the packed
     arrival path must stay <= 2 pallas_calls (one optional stats sweep +
     one fused correct+outer sweep) no matter which method is configured —
-    including the buffered delayed-Nesterov schedule and the DC-ASGD
-    quadratic compensation. Rows are exact-match gated (name contains
-    "launches") so a method silently falling off the fused path fails
-    ``make bench-check``."""
+    including the buffered delayed-Nesterov/FedBuff schedules and the
+    DC-ASGD quadratic compensation. And the contract must HOLD WITH
+    TELEMETRY ON: the update-quality stats ride the fused sweep as an
+    extra output (``with_stats``), so the telemetry rows assert the SAME
+    count as the plain rows. Rows are exact-match gated (name contains
+    "launches") so a method silently falling off the fused path — or
+    telemetry sneaking in an extra sweep — fails ``make bench-check``."""
     from repro.core import methods as outer_methods
     from repro.core.heloco import apply_arrival_packed
 
@@ -129,21 +133,31 @@ def per_method_launch_rows(d: int = 1 << 13) -> List[Dict]:
     abuf = packing.zeros(layout)
     rows = []
     for m in outer_methods.all_methods():
-        def arrival(p, mm, g, b=None, name=m.name):
+        def arrival(p, mm, g, b=None, name=m.name, stats=False):
             return apply_arrival_packed(p, mm, g, layout, method=name,
                                         outer_lr=0.7, mu=0.9, h=H, tau=3.0,
-                                        abuf=b, phase=2)
-        if m.uses_buffer:
-            n = count_launches(jax.jit(arrival), pbuf, mbuf, delta, abuf)
-        else:
-            n = count_launches(jax.jit(arrival), pbuf, mbuf, delta)
+                                        abuf=b, phase=2, with_stats=stats)
+        counts = {}
+        for stats in (False, True):
+            fn = jax.jit(functools.partial(arrival, stats=stats))
+            if m.uses_buffer:
+                counts[stats] = count_launches(fn, pbuf, mbuf, delta, abuf)
+            else:
+                counts[stats] = count_launches(fn, pbuf, mbuf, delta)
+        n, nt = counts[False], counts[True]
         extra = "4R+3W (accumulator)" if m.uses_buffer else "3R+2W"
         rows.append({
             "name": f"arrival_launches_packed_{m.name}",
             "us_per_call": float(n),
             "derived": (f"pallas_calls={n} (<= 2 per arrival); fused "
                         f"sweep hbm={extra} of d floats")})
-        assert n <= 2, (m.name, n)
+        rows.append({
+            "name": f"arrival_launches_packed_telemetry_{m.name}",
+            "us_per_call": float(nt),
+            "derived": (f"pallas_calls={nt} == telemetry-off count "
+                        "(stats are an extra output of the fused sweep, "
+                        "zero added launches)")})
+        assert n <= 2 and nt == n, (m.name, n, nt)
     return rows
 
 

@@ -67,7 +67,8 @@ def base_run(paces: Sequence[float], *, method: str, non_iid: bool,
 
 
 def _key(rc: RunConfig, eval_every: int, engine: str = "sim",
-         engine_kw: Optional[Dict] = None, eval_batch: int = 8) -> str:
+         engine_kw: Optional[Dict] = None, eval_batch: int = 8,
+         budget=None, telemetry: bool = False) -> str:
     blob = json.dumps(dataclasses.asdict(rc), sort_keys=True, default=str)
     # keep pre-engine cache keys stable for the default simulator/eval
     tag = ("" if engine == "sim"
@@ -75,24 +76,46 @@ def _key(rc: RunConfig, eval_every: int, engine: str = "sim",
                                     default=str))
     if eval_batch != 8:
         tag += f"eb{eval_batch}"
+    if budget is not None:
+        tag += f"|budget:{budget.kind}:{budget.amount}"
+    if telemetry:
+        tag += "|telem"
     return hashlib.sha1((blob + str(eval_every) + tag).encode()
                         ).hexdigest()[:16]
 
 
 def run_cached(name: str, rc: RunConfig, eval_every: int = 0,
                force: bool = False, engine: str = "sim",
-               eval_batch: int = 8, **engine_kw) -> Dict:
+               eval_batch: int = 8, budget=None,
+               telemetry_path: Optional[str] = None, **engine_kw) -> Dict:
+    """Run (or reload) one cached training run.
+
+    budget: optional ``repro.async_engine.engine.Budget`` stopping rule —
+    part of the cache key, applied via ``eng.run(budget=...)``.
+    telemetry_path: when set, stream per-arrival update-quality telemetry
+    (``repro.telemetry``) to this JSONL path; the cache is only reused if
+    the stream file still exists alongside the result JSON.
+    """
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(
-        RESULTS_DIR,
-        f"{name}__{_key(rc, eval_every, engine, engine_kw, eval_batch)}.json")
-    if os.path.exists(path) and not force:
+    key = _key(rc, eval_every, engine, engine_kw, eval_batch, budget,
+               telemetry_path is not None)
+    path = os.path.join(RESULTS_DIR, f"{name}__{key}.json")
+    if os.path.exists(path) and not force and (
+            telemetry_path is None or os.path.exists(telemetry_path)):
         return json.load(open(path))
-    eng = make_engine(rc, engine, **engine_kw)
+    rec = None
+    if telemetry_path is not None:
+        from repro.telemetry import RunMeta, TelemetryRecorder
+        rec = TelemetryRecorder(meta=RunMeta(
+            method=rc.outer.method, engine=engine,
+            n_workers=rc.n_workers, outer_steps=rc.outer_steps,
+            seed=rc.seed, non_iid=rc.non_iid,
+            mixture_alpha=rc.mixture_alpha, scenario=name))
+    eng = make_engine(rc, engine, telemetry=rec, **engine_kw)
     eval_fn = make_eval_fn(eng, batch=eval_batch, seq=rc.seq_len)
     t0 = time.time()
     hist = eng.run(eval_every=eval_every or max(rc.outer_steps // 8, 1),
-                   eval_fn=eval_fn)
+                   eval_fn=eval_fn, budget=budget)
     out = {
         "name": name,
         "engine": engine,
@@ -113,6 +136,11 @@ def run_cached(name: str, rc: RunConfig, eval_every: int = 0,
         "n_dropped": sum(1 for a in hist.arrivals if a.get("dropped")),
         "wall_seconds": time.time() - t0,
     }
+    if budget is not None:
+        out["budget"] = {"kind": budget.kind, "amount": budget.amount}
+    if rec is not None:
+        out["telemetry"] = rec.write_jsonl(telemetry_path)
+        out["telemetry_summary"] = rec.summary()
     if hasattr(eng, "stats_summary"):
         out["runtime_stats"] = eng.stats_summary()
     json.dump(out, open(path, "w"), indent=1)
@@ -120,10 +148,13 @@ def run_cached(name: str, rc: RunConfig, eval_every: int = 0,
 
 
 def run_cached_scenario(name: str, scn: Scenario, eval_every: int = 0,
-                        force: bool = False) -> Dict:
+                        force: bool = False, budget=None,
+                        telemetry_path: Optional[str] = None) -> Dict:
     """run_cached driven entirely by a Scenario: engine choice, runtime
     options, and the eval cadence/batch all come from the spec, so the
-    curve is comparable with the scenario's golden trace."""
+    curve is comparable with the scenario's golden trace. ``budget`` and
+    ``telemetry_path`` forward to :func:`run_cached` (the sweep harness
+    entry point)."""
     m = scn.materialize()
     if m.failures or m.elastic:
         raise ValueError("run_cached_scenario does not cache runs with "
@@ -131,7 +162,8 @@ def run_cached_scenario(name: str, scn: Scenario, eval_every: int = 0,
     return run_cached(name, m.run_cfg,
                       eval_every=eval_every or scn.eval_cadence,
                       force=force, engine=m.engine,
-                      eval_batch=scn.eval_batch, **m.engine_kw)
+                      eval_batch=scn.eval_batch, budget=budget,
+                      telemetry_path=telemetry_path, **m.engine_kw)
 
 
 def loss_at_time(result: Dict, t: float) -> Optional[float]:

@@ -1,0 +1,123 @@
+"""Bench-history trajectory report: render the accumulated
+``results/bench/BENCH_*.json`` histories as markdown.
+
+Every ``make bench`` / ``make bench-runtime`` run APPENDS an entry to the
+history JSONs, so the per-PR perf trajectory is on disk — but nothing
+rendered it. ``make bench-report`` turns each family into a markdown
+table: one row per benchmark, one column per recorded entry (most recent
+last, capped), plus the latest-vs-oldest ratio for timing rows. Exact
+contract rows (launch counts / HBM bytes) are listed separately with
+their current values — their history is only interesting when it
+changes, which the regression gate already fails on.
+
+    PYTHONPATH=src python -m benchmarks.report [--last N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import os
+import sys
+from typing import Dict, List
+
+from benchmarks.check_regression import _is_exact_row
+from benchmarks.run import BENCH_JSON, BENCH_RUNTIME_JSON, _load_history
+
+REPORT_MD = os.path.join(os.path.dirname(BENCH_JSON), "BENCH_REPORT.md")
+
+
+def _stamp(entry: Dict) -> str:
+    t = entry.get("unix_time")
+    if not t:
+        return "?"
+    return datetime.datetime.fromtimestamp(t).strftime("%Y-%m-%d %H:%M")
+
+
+def _trajectory(history: List[Dict], last: int) -> List[str]:
+    entries = history[-last:]
+    names: List[str] = []
+    for e in entries:
+        for r in e["rows"]:
+            if r["name"] not in names:
+                names.append(r["name"])
+    by_entry = [{r["name"]: r for r in e["rows"]} for e in entries]
+    stamps = [_stamp(e) for e in entries]
+
+    timing = [n for n in names if not _is_exact_row(n)]
+    exact = [n for n in names if _is_exact_row(n)]
+    lines: List[str] = []
+
+    lines.append(f"### Timing trajectory (us/call, {len(entries)} most "
+                 "recent entries)")
+    lines.append("")
+    lines.append("| benchmark | " + " | ".join(stamps) + " | last/first |")
+    lines.append("|---" * (len(entries) + 2) + "|")
+    for n in timing:
+        cells, seen = [], []
+        for be in by_entry:
+            r = be.get(n)
+            if r is None:
+                cells.append("—")
+            else:
+                cells.append(f"{r['us_per_call']:.1f}")
+                seen.append(r["us_per_call"])
+        ratio = (f"{seen[-1] / seen[0]:.2f}x"
+                 if len(seen) >= 2 and seen[0] > 0 else "—")
+        lines.append(f"| {n} | " + " | ".join(cells) + f" | {ratio} |")
+    lines.append("")
+
+    lines.append("### Exact contracts (current values; drift fails "
+                 "`make bench-check`)")
+    lines.append("")
+    lines.append("| contract | value | meaning |")
+    lines.append("|---|---|---|")
+    latest = by_entry[-1] if by_entry else {}
+    for n in exact:
+        r = latest.get(n)
+        if r is None:
+            continue
+        lines.append(f"| {n} | {r['us_per_call']:g} | {r['derived']} |")
+    lines.append("")
+    return lines
+
+
+def render(last: int = 8) -> str:
+    out = ["# Benchmark trajectory", ""]
+    out.append("Rendered from the accumulated bench histories "
+               "(`results/bench/BENCH_*.json`); regenerate with "
+               "`make bench-report`.")
+    out.append("")
+    for title, path in (("Arrival path (`make bench`)", BENCH_JSON),
+                        ("Runtime (`make bench-runtime`)",
+                         BENCH_RUNTIME_JSON)):
+        history = _load_history(path)
+        out.append(f"## {title}")
+        out.append("")
+        if not history:
+            out.append(f"(no history at {path})")
+            out.append("")
+            continue
+        out.append(f"{len(history)} recorded entries, "
+                   f"{_stamp(history[0])} -> {_stamp(history[-1])}.")
+        out.append("")
+        out += _trajectory(history, last)
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.report")
+    ap.add_argument("--last", type=int, default=8,
+                    help="columns: N most recent history entries")
+    ap.add_argument("--out", default=REPORT_MD)
+    args = ap.parse_args(argv)
+    md = render(args.last)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(md)
+    print(md)
+    print(f"\n# report -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -118,6 +118,38 @@ class History:
         }
 
 
+@dataclass(frozen=True)
+class Budget:
+    """Stopping rule for budgeted comparisons (paper Table 2): train to a
+    fixed token count or a fixed (virtual/wall) clock horizon instead of a
+    fixed number of outer steps. Both engines honour it within ONE outer
+    round of the target:
+
+      fixed_tokens     stop at the first commit whose cumulative token
+                       count reaches ``amount``;
+      fixed_wallclock  never commit an arrival past ``amount`` seconds of
+                       engine time (sim: virtual; free-running: scaled
+                       wall clock) — the run stops at the last arrival
+                       inside the horizon.
+
+    The configured ``outer_steps`` remains a hard cap on top.
+    """
+    kind: str                        # "fixed_tokens" | "fixed_wallclock"
+    amount: float
+
+    KINDS = ("fixed_tokens", "fixed_wallclock")
+
+    def __post_init__(self):
+        assert self.kind in self.KINDS, self.kind
+        assert self.amount > 0, self.amount
+
+    def over_time(self, t: float) -> bool:
+        return self.kind == "fixed_wallclock" and t > self.amount + 1e-9
+
+    def over_tokens(self, tokens: int) -> bool:
+        return self.kind == "fixed_tokens" and tokens >= self.amount
+
+
 @dataclass
 class RoundTask:
     """Snapshot of one dispatched inner round. Captured on the server
@@ -167,7 +199,8 @@ class Engine(Protocol):
 
     def run(self, eval_every: int = 0,
             eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
-            ckpt_every: int = 0, ckpt_dir: str = "") -> History: ...
+            ckpt_every: int = 0, ckpt_dir: str = "",
+            budget: Optional[Budget] = None) -> History: ...
     def checkpoint(self, ckpt_dir: str) -> str: ...
     def restore(self, path: str) -> None: ...
 
@@ -177,9 +210,13 @@ class Engine(Protocol):
 # ---------------------------------------------------------------------------
 
 class EngineBase:
+    ENGINE_NAME = "sim"              # telemetry RunMeta.engine vocabulary:
+    # the make_engine dialect ("sim" | "wallclock"), one value per engine
+
     def __init__(self, run_cfg: RunConfig, *,
                  failures: Optional[List[FailureEvent]] = None,
-                 elastic: Optional[List[ElasticEvent]] = None):
+                 elastic: Optional[List[ElasticEvent]] = None,
+                 telemetry=None):
         self.cfg = run_cfg
         self.model = build_model(run_cfg.model)
         self.specs = make_language_specs(run_cfg.model.vocab_size,
@@ -187,8 +224,14 @@ class EngineBase:
                                          seed=run_cfg.seed)
         key = jax.random.PRNGKey(run_cfg.seed)
         init_params = self.model.init(key)
+        # telemetry: a repro.telemetry.TelemetryRecorder (or None). The
+        # synchronizer then emits update-quality stats from the same fused
+        # sweeps (zero extra launches); the engine streams arrival/eval
+        # records into the recorder at commit time.
+        self.telemetry = telemetry
         self.server = Synchronizer(init_params, run_cfg.outer,
-                                   run_cfg.n_workers)
+                                   run_cfg.n_workers,
+                                   telemetry=telemetry is not None)
         self.workers: Dict[int, Worker] = {}
         for wid in range(run_cfg.n_workers):
             pace = run_cfg.worker_paces[wid % len(run_cfg.worker_paces)]
@@ -338,13 +381,18 @@ class EngineBase:
             lang=(self.specs[res.lang].lang
                   if res.lang is not None else "iid"))
         self.history.arrivals.append(rec.__dict__)
+        if self.telemetry is not None:
+            self.telemetry.record_arrival(rec, mixture=w.mixture,
+                                          tokens_total=self.history.tokens)
         return rec
 
     def _post_commit(self, eval_every, eval_fn, ckpt_every, ckpt_dir):
         t = self.server.t
         if eval_every and eval_fn and t % eval_every == 0:
-            self.history.evals.append(eval_fn(self.server.state.params,
-                                              t, self.time))
+            ev = eval_fn(self.server.state.params, t, self.time)
+            self.history.evals.append(ev)
+            if self.telemetry is not None:
+                self.telemetry.record_eval(ev)
         if ckpt_every and ckpt_dir and t % ckpt_every == 0:
             self.checkpoint(ckpt_dir)
 
@@ -352,19 +400,37 @@ class EngineBase:
         self.history.final_time = self.time
         if eval_fn and (not self.history.evals
                         or self.history.evals[-1]["step"] != self.server.t):
-            self.history.evals.append(eval_fn(self.server.state.params,
-                                              self.server.t, self.time))
+            ev = eval_fn(self.server.state.params, self.server.t, self.time)
+            self.history.evals.append(ev)
+            if self.telemetry is not None:
+                self.telemetry.record_eval(ev)
         return self.history
 
     # -------------------------------------------------------------- main loop
+    def _ensure_telemetry_meta(self):
+        if self.telemetry is not None:
+            self.telemetry.ensure_meta(
+                method=self.server.method.name,
+                engine=self.ENGINE_NAME,
+                n_workers=self.cfg.n_workers,
+                outer_steps=self.cfg.outer_steps,
+                seed=self.cfg.seed,
+                non_iid=self.cfg.non_iid,
+                mixture_alpha=self.cfg.mixture_alpha)
+
     def run(self, eval_every: int = 0,
             eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
-            ckpt_every: int = 0, ckpt_dir: str = "") -> History:
+            ckpt_every: int = 0, ckpt_dir: str = "",
+            budget: Optional[Budget] = None) -> History:
+        self._ensure_telemetry_meta()
         if self.server.method.sync:
-            return self._run_sync(eval_every, eval_fn, ckpt_every, ckpt_dir)
-        return self._run_async(eval_every, eval_fn, ckpt_every, ckpt_dir)
+            return self._run_sync(eval_every, eval_fn, ckpt_every, ckpt_dir,
+                                  budget)
+        return self._run_async(eval_every, eval_fn, ckpt_every, ckpt_dir,
+                               budget)
 
-    def _run_async(self, eval_every, eval_fn, ckpt_every, ckpt_dir) -> History:
+    def _run_async(self, eval_every, eval_fn, ckpt_every, ckpt_dir,
+                   budget: Optional[Budget] = None) -> History:
         """Virtual-clock event loop. Used by the simulator AND by the
         deterministic wall-clock runtime (which overlaps compute but
         commits in exactly this event order)."""
@@ -375,6 +441,8 @@ class EngineBase:
         target = self.cfg.outer_steps
         while self.server.t < target and self._heap:
             time, _, kind, wid, gen = heapq.heappop(self._heap)
+            if budget is not None and budget.over_time(time):
+                break   # fixed clock horizon: never commit past it
             # interleave failure / elastic events that occur first
             while (fail_idx < len(self.failures)
                    and self.failures[fail_idx].time <= time):
@@ -397,6 +465,8 @@ class EngineBase:
             res = self._obtain(w)
             self._commit(w, res)
             self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
+            if budget is not None and budget.over_tokens(self.history.tokens):
+                break   # token budget reached at this commit
             if self.server.t < target:
                 self._dispatch(w)
         return self._finalize(eval_fn)
@@ -407,21 +477,28 @@ class EngineBase:
         to compute all workers in parallel threads."""
         return [self._execute(t) for t in tasks]
 
-    def _run_sync(self, eval_every, eval_fn, ckpt_every, ckpt_dir) -> History:
+    def _run_sync(self, eval_every, eval_fn, ckpt_every, ckpt_dir,
+                  budget: Optional[Budget] = None) -> History:
         target = self.cfg.outer_steps
         while self.server.t < target:
             alive = [w for w in self.workers.values() if w.alive]
+            round_time = max(self._h_steps(w) * w.pace for w in alive)
+            if budget is not None and budget.over_time(self.time + round_time):
+                break   # the next barrier round would cross the horizon
             tasks = [self._make_task(w) for w in alive]
             results = self._execute_sync(tasks)
-            round_time = 0.0
             for w, res in zip(alive, results):
                 self._commit_worker(w, res)
-                round_time = max(round_time, w.h_steps * w.pace)
             self.time += round_time  # barrier: slowest worker gates the round
             rec = self.server.on_sync_round([r.delta for r in results],
                                             sim_time=self.time)
             self.history.arrivals.append(rec.__dict__)
+            if self.telemetry is not None:
+                self.telemetry.record_arrival(
+                    rec, tokens_total=self.history.tokens)
             self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
+            if budget is not None and budget.over_tokens(self.history.tokens):
+                break
         return self._finalize(eval_fn)
 
     # ------------------------------------------------------- fault tolerance
@@ -505,10 +582,13 @@ ENGINES = ("sim", "wallclock")
 def make_engine(run_cfg: RunConfig, engine: Optional[str] = None, *,
                 failures: Optional[List[FailureEvent]] = None,
                 elastic: Optional[List[ElasticEvent]] = None,
-                **runtime_kw) -> Engine:
+                telemetry=None, **runtime_kw) -> Engine:
     """Build a training engine. ``engine``: "sim" (default, virtual clock)
     or "wallclock" (threaded ``ConcurrentRuntime``; extra keywords —
     ``mode``, ``pace_scale``, ``transport``, ... — are forwarded to it).
+    ``telemetry``: optional ``repro.telemetry.TelemetryRecorder`` the run
+    streams arrival/eval diagnostics into (valid alongside a Scenario —
+    observation, not configuration).
 
     Also accepts a ``repro.scenarios`` ``Scenario`` as the first argument:
     its ``materialize()`` then supplies the run config, engine choice,
@@ -518,19 +598,29 @@ def make_engine(run_cfg: RunConfig, engine: Optional[str] = None, *,
         if engine is not None or failures or elastic or runtime_kw:
             raise TypeError("pass the engine choice, schedules, and "
                             "options inside the Scenario, not alongside it")
+        if telemetry is not None:
+            telemetry.ensure_meta(
+                method=run_cfg.method, engine=run_cfg.engine,
+                n_workers=run_cfg.n_workers,
+                outer_steps=run_cfg.outer_steps, seed=run_cfg.seed,
+                non_iid=run_cfg.non_iid,
+                mixture_alpha=run_cfg.mixture_alpha,
+                scenario=run_cfg.name)
         m = run_cfg.materialize()                # avoids a circular import
         return make_engine(m.run_cfg, m.engine, failures=m.failures,
-                           elastic=m.elastic, **m.engine_kw)
+                           elastic=m.elastic, telemetry=telemetry,
+                           **m.engine_kw)
     engine = engine or "sim"
     if engine in ("sim", "simulator", "virtual"):
         if runtime_kw:
             raise TypeError(f"simulator takes no runtime options: {runtime_kw}")
         from repro.async_engine.simulator import AsyncSimulator
-        return AsyncSimulator(run_cfg, failures=failures, elastic=elastic)
+        return AsyncSimulator(run_cfg, failures=failures, elastic=elastic,
+                              telemetry=telemetry)
     if engine in ("wallclock", "concurrent", "runtime"):
         from repro.async_engine.runtime import ConcurrentRuntime
         return ConcurrentRuntime(run_cfg, failures=failures, elastic=elastic,
-                                 **runtime_kw)
+                                 telemetry=telemetry, **runtime_kw)
     raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
 
 

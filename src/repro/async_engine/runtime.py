@@ -70,6 +70,8 @@ class RoundError:
 
 
 class ConcurrentRuntime(EngineBase):
+    ENGINE_NAME = "wallclock"
+
     def __init__(self, run_cfg: RunConfig, *,
                  failures: Optional[List[FailureEvent]] = None,
                  elastic: Optional[List[ElasticEvent]] = None,
@@ -78,10 +80,12 @@ class ConcurrentRuntime(EngineBase):
                  pace_scale: float = 0.0,
                  pin_devices: bool = True,
                  queue_capacity: Optional[int] = None,
-                 result_timeout: float = 600.0):
+                 result_timeout: float = 600.0,
+                 telemetry=None):
         if mode not in ("deterministic", "free"):
             raise ValueError(f"mode must be 'deterministic' or 'free': {mode}")
-        super().__init__(run_cfg, failures=failures, elastic=elastic)
+        super().__init__(run_cfg, failures=failures, elastic=elastic,
+                         telemetry=telemetry)
         self.mode = mode
         self.pace_scale = pace_scale
         self.result_timeout = result_timeout
@@ -252,25 +256,31 @@ class ConcurrentRuntime(EngineBase):
     # -------------------------------------------------------------- run
     def run(self, eval_every: int = 0,
             eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
-            ckpt_every: int = 0, ckpt_dir: str = "") -> History:
+            ckpt_every: int = 0, ckpt_dir: str = "",
+            budget=None) -> History:
         t0 = time.monotonic()
         try:
             if self.mode == "free" and not self.server.method.sync:
                 hist = self._run_free(eval_every, eval_fn, ckpt_every,
-                                      ckpt_dir)
+                                      ckpt_dir, budget)
             else:
-                hist = super().run(eval_every, eval_fn, ckpt_every, ckpt_dir)
+                hist = super().run(eval_every, eval_fn, ckpt_every, ckpt_dir,
+                                   budget)
         finally:
             self.stats["wall_seconds"] += time.monotonic() - t0
             self.shutdown()
         return hist
 
     # ------------------------------------------------------- free-run loop
-    def _run_free(self, eval_every, eval_fn, ckpt_every, ckpt_dir) -> History:
+    def _run_free(self, eval_every, eval_fn, ckpt_every, ckpt_dir,
+                  budget=None) -> History:
         """True arrival order on the wall clock. ``self.time`` is reported
         in virtual seconds (wall / pace_scale) so histories stay
         comparable with the simulator; with pace_scale == 0 it is raw wall
-        seconds. Failure / elastic / restart times live on that clock."""
+        seconds. Failure / elastic / restart times live on that clock.
+        A ``Budget`` is accounted on the same clock (fixed_wallclock) or
+        on committed tokens (fixed_tokens)."""
+        self._ensure_telemetry_meta()
         target = self.cfg.outer_steps
         t0 = time.monotonic()
         scale = self.pace_scale if self.pace_scale > 0 else 1.0
@@ -318,6 +328,8 @@ class ConcurrentRuntime(EngineBase):
             process_events(vnow())
             if not progress_possible():
                 break                   # every worker gone: starved run
+            if budget is not None and budget.over_time(vnow()):
+                break                   # clock horizon: stop committing
             try:
                 msg = self._recv_result(timeout=0.05)
             except TransportTimeout:
@@ -326,8 +338,12 @@ class ConcurrentRuntime(EngineBase):
                 continue                # stale: crashed / departed worker
             w = self.workers[msg.wid]
             self.time = vnow()
+            if budget is not None and budget.over_time(self.time):
+                break                   # arrived past the horizon: drop it
             self._commit(w, msg)
             self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
+            if budget is not None and budget.over_tokens(self.history.tokens):
+                break
             if self.server.t < target:
                 process_events(vnow())
                 if w.alive:

@@ -38,6 +38,12 @@ from repro.core.heloco import (
 PyTree = Any
 
 
+def _mbuf_moments(mbuf: jnp.ndarray):
+    """Telemetry moments of a suppressed arrival on the packed path."""
+    from repro.telemetry import stats as _ts
+    return _ts.momentum_only_moments(jnp.sum(mbuf * mbuf))
+
+
 @dataclass
 class ArrivalRecord:
     outer_step: int
@@ -47,18 +53,27 @@ class ArrivalRecord:
     sim_time: float
     lang: str = ""
     dropped: bool = False
+    # update-quality diagnostics (populated only when the synchronizer
+    # runs with telemetry=True; see repro.telemetry.stats)
+    cos_align: Optional[float] = None
+    corrected_frac: Optional[float] = None
+    delta_norm: Optional[float] = None
+    momentum_norm: Optional[float] = None
 
 
 class Synchronizer:
     def __init__(self, init_params: PyTree, cfg: OuterOptConfig,
                  n_workers: int, stacked_axes: Optional[PyTree] = None,
-                 use_kernel: bool = False, packed: bool = True):
+                 use_kernel: bool = False, packed: bool = True,
+                 telemetry: bool = False):
         self.cfg = cfg
         self.method = outer_methods.resolve(cfg.method)
         self.n_workers = n_workers
         self.stacked_axes = stacked_axes
         self.use_kernel = use_kernel
         self.packed = packed
+        self.telemetry = telemetry
+        self._last_moments = None      # (4,) device array, telemetry only
         self.records: List[ArrivalRecord] = []
         buffered = self.method.uses_buffer
         if packed:
@@ -68,31 +83,50 @@ class Synchronizer:
             self._abuf = packing.zeros(self.layout) if buffered else None
             self._step = 0
             self._state_cache: Optional[OuterState] = None
+            # telemetry moments are an extra output of the SAME fused
+            # sweep (with_stats) reduced to (4,) in-jit — the p'/m' math
+            # and the launch count are untouched.
             if buffered:
-                self._apply_packed = jax.jit(
-                    lambda p, m, b, delta, rho, tau, phase:
-                    apply_arrival_packed(
+                def _apply(p, m, b, delta, rho, tau, phase):
+                    out = apply_arrival_packed(
                         p, m, delta, self.layout, method=self.method,
                         outer_lr=cfg.outer_lr, mu=cfg.momentum, h=cfg.heloco,
-                        rho=rho, tau=tau, abuf=b, phase=phase),
-                    donate_argnums=(0, 1, 2))
-                self._decay_packed = jax.jit(
-                    lambda p, m, b, rho, tau, phase: momentum_decay_packed(
+                        rho=rho, tau=tau, abuf=b, phase=phase,
+                        with_stats=telemetry)
+                    if telemetry:
+                        return (*out[:3], jnp.sum(out[3], axis=0))
+                    return out
+
+                def _decay(p, m, b, rho, tau, phase):
+                    out = momentum_decay_packed(
                         p, m, cfg.outer_lr, cfg.momentum, method=self.method,
-                        rho=rho, tau=tau, abuf=b, phase=phase),
-                    donate_argnums=(0, 1, 2))
+                        rho=rho, tau=tau, abuf=b, phase=phase)
+                    if telemetry:
+                        return (*out, _mbuf_moments(m))
+                    return out
+
+                self._apply_packed = jax.jit(_apply, donate_argnums=(0, 1, 2))
+                self._decay_packed = jax.jit(_decay, donate_argnums=(0, 1, 2))
             else:
-                self._apply_packed = jax.jit(
-                    lambda p, m, delta, rho, tau: apply_arrival_packed(
+                def _apply(p, m, delta, rho, tau):
+                    out = apply_arrival_packed(
                         p, m, delta, self.layout, method=self.method,
                         outer_lr=cfg.outer_lr, mu=cfg.momentum, h=cfg.heloco,
-                        rho=rho, tau=tau),
-                    donate_argnums=(0, 1))
-                self._decay_packed = jax.jit(
-                    lambda p, m, rho, tau: momentum_decay_packed(
+                        rho=rho, tau=tau, with_stats=telemetry)
+                    if telemetry:
+                        return out[0], out[1], jnp.sum(out[2], axis=0)
+                    return out
+
+                def _decay(p, m, rho, tau):
+                    out = momentum_decay_packed(
                         p, m, cfg.outer_lr, cfg.momentum, method=self.method,
-                        rho=rho, tau=tau),
-                    donate_argnums=(0, 1))
+                        rho=rho, tau=tau)
+                    if telemetry:
+                        return (*out, _mbuf_moments(m))
+                    return out
+
+                self._apply_packed = jax.jit(_apply, donate_argnums=(0, 1))
+                self._decay_packed = jax.jit(_decay, donate_argnums=(0, 1))
             self._unpack_p = jax.jit(
                 lambda b: packing.unpack(self.layout, b))
             self._unpack_m = jax.jit(
@@ -115,6 +149,28 @@ class Synchronizer:
                     state, cfg.outer_lr, cfg.momentum, method=self.method,
                     rho=rho, tau=tau, phase=phase),
                 donate_argnums=(0,))
+            if telemetry:
+                # per-leaf path: stats via the reference implementation
+                # (this IS the correctness-reference engine)
+                def _moments(state, delta, rho, tau, phase):
+                    from repro.core import methods as _m
+                    from repro.telemetry import stats as _ts
+                    ctx = _m.ArrivalCtx(
+                        outer_lr=cfg.outer_lr, mu=cfg.momentum,
+                        h=cfg.heloco, rho=rho, tau=tau, phase=phase,
+                        stacked_axes=stacked_axes, use_kernel=use_kernel)
+                    g = self.method.correct(self.method, ctx, delta,
+                                            state.momentum)
+                    return _ts.reference_moments(delta, state.momentum, g)
+
+                def _decay_moments(state):
+                    from repro.telemetry import stats as _ts
+                    msq = sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                              for x in jax.tree.leaves(state.momentum))
+                    return _ts.momentum_only_moments(msq)
+
+                self._moments_ref = jax.jit(_moments)
+                self._decay_moments_ref = jax.jit(_decay_moments)
 
     # -- outer state view -----------------------------------------------------
     @property
@@ -178,17 +234,27 @@ class Synchronizer:
     def _step_update(self, delta: PyTree, rho: float, tau: float):
         if self.packed:
             if self.method.uses_buffer:
-                self._pbuf, self._mbuf, self._abuf = self._apply_packed(
+                out = self._apply_packed(
                     self._pbuf, self._mbuf, self._abuf, delta,
                     jnp.asarray(rho), jnp.asarray(tau, jnp.float32),
                     jnp.asarray(self._step, jnp.int32))
+                self._pbuf, self._mbuf, self._abuf = out[:3]
             else:
-                self._pbuf, self._mbuf = self._apply_packed(
+                out = self._apply_packed(
                     self._pbuf, self._mbuf, delta, jnp.asarray(rho),
                     jnp.asarray(tau, jnp.float32))
+                self._pbuf, self._mbuf = out[:2]
+            if self.telemetry:
+                self._last_moments = out[-1]
             self._step += 1
             self._state_cache = None
         else:
+            if self.telemetry:
+                # before _apply donates the state buffers
+                self._last_moments = self._moments_ref(
+                    self._state, delta, jnp.asarray(rho),
+                    jnp.asarray(tau, jnp.float32),
+                    jnp.asarray(self.t, jnp.int32))
             self._state = self._apply(self._state, delta, jnp.asarray(rho),
                                       jnp.asarray(tau, jnp.float32),
                                       jnp.asarray(self.t, jnp.int32))
@@ -201,17 +267,33 @@ class Synchronizer:
         tau = jnp.asarray(tau, jnp.float32)
         if self.packed:
             if self.method.uses_buffer:
-                self._pbuf, self._mbuf, self._abuf = self._decay_packed(
+                out = self._decay_packed(
                     self._pbuf, self._mbuf, self._abuf, rho, tau,
                     jnp.asarray(self._step, jnp.int32))
+                self._pbuf, self._mbuf, self._abuf = out[:3]
             else:
-                self._pbuf, self._mbuf = self._decay_packed(
-                    self._pbuf, self._mbuf, rho, tau)
+                out = self._decay_packed(self._pbuf, self._mbuf, rho, tau)
+                self._pbuf, self._mbuf = out[:2]
+            if self.telemetry:
+                self._last_moments = out[-1]
             self._step += 1
             self._state_cache = None
         else:
+            if self.telemetry:
+                self._last_moments = self._decay_moments_ref(self._state)
             self._state = self._decay(self._state, rho, tau,
                                       jnp.asarray(self.t, jnp.int32))
+
+    def _attach_stats(self, rec: ArrivalRecord) -> ArrivalRecord:
+        """Fold the last step's telemetry moments into the record."""
+        if self.telemetry and self._last_moments is not None:
+            from repro.telemetry import stats as _ts
+            s = _ts.stats_from_moments(self._last_moments)
+            rec.cos_align = s.cos_align
+            rec.corrected_frac = s.corrected_frac
+            rec.delta_norm = s.delta_norm
+            rec.momentum_norm = s.momentum_norm
+        return rec
 
     # -- arrival processing ---------------------------------------------------
     def on_arrival(self, delta: PyTree, s_i: int, worker_id: int,
@@ -224,9 +306,10 @@ class Synchronizer:
             self._step_decay(rho, tau)
         else:
             self._step_update(delta, rho, tau)
-        rec = ArrivalRecord(outer_step=self.t, worker_id=worker_id,
-                            staleness=tau, rho=rho, sim_time=sim_time,
-                            lang=lang, dropped=dropped)
+        rec = self._attach_stats(
+            ArrivalRecord(outer_step=self.t, worker_id=worker_id,
+                          staleness=tau, rho=rho, sim_time=sim_time,
+                          lang=lang, dropped=dropped))
         self.records.append(rec)
         return rec
 
@@ -239,8 +322,9 @@ class Synchronizer:
                            *deltas)
         # sync-nesterov in the paper uses average weighting: G = mean(Delta)
         self._step_update(avg, 1.0, 0.0)
-        rec = ArrivalRecord(outer_step=self.t, worker_id=-1, staleness=0,
-                            rho=1.0, sim_time=sim_time)
+        rec = self._attach_stats(
+            ArrivalRecord(outer_step=self.t, worker_id=-1, staleness=0,
+                          rho=1.0, sim_time=sim_time))
         self.records.append(rec)
         return rec
 

@@ -236,7 +236,8 @@ def apply_arrival_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
                          rho: jnp.ndarray | float = 1.0,
                          tau: jnp.ndarray | float = 0.0,
                          abuf: jnp.ndarray | None = None, phase=None,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         with_stats: bool = False):
     """Process one arrival on the packed (R, 128) outer state.
 
     pbuf/mbuf: packed fp32 params / momentum (see ``repro.core.packing``);
@@ -244,6 +245,11 @@ def apply_arrival_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
     delta: the arriving pseudo-gradient pytree (packed here — one fused
     XLA gather/concat, no kernel launches). Returns (pbuf', mbuf') or
     (pbuf', mbuf', abuf') for buffered methods.
+
+    with_stats: additionally return the (R, 4) per-row telemetry moments
+    ``[d.m, d.d, m.m, |g_unweighted - d|^2]`` as the LAST element — they
+    are an extra output of the same fused sweep, so the launch count and
+    the update bytes are unchanged (see ``repro.telemetry``).
 
     Numerically equivalent to ``apply_arrival`` on fp32 pytrees: every
     registered method reduces to per-block scalars (cu, cv, cq) with
@@ -274,21 +280,24 @@ def apply_arrival_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
             raise NotImplementedError(
                 f"method {m.name!r}: a quadratic (cq) term combined with "
                 "a custom schedule is not supported on the packed path")
-        am, bm, ab, cg, cm = m.outer_coeffs(m, ctx) if m.outer_coeffs \
-            else _methods.standard_coeffs(mu)
+        am, bm, ab, cg, cm, ca = _methods.schedule_coeffs(m, ctx)
         if abuf is None:
             abuf = packing.zeros(layout)
-        p2, m2, b2 = pk.packed_correct_outer_acc(
+        out = pk.packed_correct_outer_acc(
             pbuf, mbuf, abuf, dbuf, cu_rows, cv_rows, outer_lr, rho,
-            am, bm, ab, cg, cm, interpret=interpret)
-        return (p2, m2, b2) if m.uses_buffer else (p2, m2)
+            am, bm, ab, cg, cm, ca, interpret=interpret,
+            with_stats=with_stats)
+        if m.uses_buffer:
+            return out
+        return (out[0], out[1], out[3]) if with_stats else out[:2]
     if cq is not None:
         cq_rows = cq[row_block][:, None]
         return pk.packed_correct_outer_quad(
             pbuf, mbuf, dbuf, cu_rows, cv_rows, cq_rows, outer_lr, mu,
-            rho, interpret=interpret)
+            rho, interpret=interpret, with_stats=with_stats)
     return pk.packed_correct_outer(pbuf, mbuf, dbuf, cu_rows, cv_rows,
-                                   outer_lr, mu, rho, interpret=interpret)
+                                   outer_lr, mu, rho, interpret=interpret,
+                                   with_stats=with_stats)
 
 
 def momentum_decay_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,

@@ -36,8 +36,11 @@ Generalized update (one fused packed sweep, see ``kernels/packed.py``):
     acc  = b + G                                       # gradient buffer
     m'   = am*m + bm*acc
     b'   = ab*acc
-    p'   = p - eta*(cg*G + cm*m')
+    p'   = p - eta*(cg*G + ca*acc + cm*m')
 
+``outer_coeffs`` may return 5 coefficients ``(am, bm, ab, cg, cm)`` —
+``ca`` defaults to 0 — or all 6; ``ca`` lets buffered-aggregation methods
+(FedBuff) step the parameters with the accumulator average at a boundary.
 The standard Nesterov schedule is ``(am, bm, ab, cg, cm) = (mu, 1-mu, 0,
 1, mu)`` with ``b = 0``, which collapses to Eqs. 17-19 exactly.
 """
@@ -107,13 +110,14 @@ class OuterMethod:
     # -- method constants ---------------------------------------------------
     tau_clip: float = 0.0            # staleness normalization clip (0 = n/a)
     dc_lambda: float = 0.0           # delay-compensation strength (dcasgd)
+    stale_alpha: float = 0.0         # polynomial staleness exponent
     buffer_period: int = 0           # >0: gradient accumulator, momentum
-    # refresh every N arrivals (delayed-Nesterov)
+    # refresh every N arrivals (delayed-Nesterov / FedBuff)
     # -- hooks --------------------------------------------------------------
     correct: Callable = None         # (m, ctx, delta, momentum) -> g pytree
     packed_coeffs: Callable = None   # (m, ctx, dbuf, mbuf) -> (cu, cv, cq)
     decay_scale: Callable = None     # (m, ctx) -> scalar s (G = s*m, delta=0)
-    outer_coeffs: Callable = None    # (m, ctx) -> (am, bm, ab, cg, cm);
+    outer_coeffs: Callable = None    # (m, ctx) -> (am, bm, ab, cg, cm[, ca]);
     # None -> the standard Nesterov schedule (byte-identical legacy path)
 
     def __post_init__(self):
@@ -218,6 +222,13 @@ def standard_coeffs(mu):
     return mu, 1.0 - mu, 0.0, 1.0, mu
 
 
+def schedule_coeffs(m: OuterMethod, ctx: ArrivalCtx):
+    """The method's 6-tuple ``(am, bm, ab, cg, cm, ca)`` — pads legacy
+    5-tuple ``outer_coeffs`` hooks with ``ca = 0``."""
+    c = m.outer_coeffs(m, ctx) if m.outer_coeffs else standard_coeffs(ctx.mu)
+    return (*c, 0.0) if len(c) == 5 else c
+
+
 def decay_coeffs(m: OuterMethod, ctx: ArrivalCtx):
     """Scalar coefficients of the dropped-arrival outer step for methods on
     the STANDARD schedule. With the pseudo-gradient suppressed the
@@ -235,8 +246,7 @@ def scheduled_outer_update(m: OuterMethod, ctx: ArrivalCtx, state, g):
     whose schedule deviates from plain Nesterov (``custom_update``)."""
     from repro.core.heloco import OuterState
     eta, rho = ctx.outer_lr, ctx.rho
-    am, bm, ab, cg, cm = (m.outer_coeffs(m, ctx) if m.outer_coeffs
-                          else standard_coeffs(ctx.mu))
+    am, bm, ab, cg, cm, ca = schedule_coeffs(m, ctx)
     aux = state.aux
     if aux is None:
         aux = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
@@ -246,10 +256,11 @@ def scheduled_outer_update(m: OuterMethod, ctx: ArrivalCtx, state, g):
     momentum = jax.tree.map(lambda mm, a: am * mm + bm * a,
                             state.momentum, acc)
     params = jax.tree.map(
-        lambda p, mnew, gi: (p.astype(jnp.float32)
-                             - eta * (cg * rho * gi.astype(jnp.float32)
-                                      + cm * mnew)).astype(p.dtype),
-        state.params, momentum, g)
+        lambda p, mnew, a, gi: (p.astype(jnp.float32)
+                                - eta * (cg * rho * gi.astype(jnp.float32)
+                                         + ca * a + cm * mnew)
+                                ).astype(p.dtype),
+        state.params, momentum, acc, g)
     new_aux = jax.tree.map(lambda a: ab * a, acc)
     return OuterState(params=params, momentum=momentum,
                       step=state.step + 1,
@@ -272,15 +283,14 @@ def scheduled_decay_packed(m: OuterMethod, ctx: ArrivalCtx, pbuf, mbuf,
     """Packed dropped-arrival step for ``custom_update`` methods. Pure
     elementwise buffer math (XLA fuses it into one pass)."""
     eta, rho = ctx.outer_lr, ctx.rho
-    am, bm, ab, cg, cm = (m.outer_coeffs(m, ctx) if m.outer_coeffs
-                          else standard_coeffs(ctx.mu))
+    am, bm, ab, cg, cm, ca = schedule_coeffs(m, ctx)
     s = m.decay_scale(m, ctx)
     if abuf is None:
         abuf = jnp.zeros_like(mbuf)
     g = rho * s * mbuf
     acc = abuf + g
     m_new = am * mbuf + bm * acc
-    p_new = pbuf - eta * (cg * g + cm * m_new)
+    p_new = pbuf - eta * (cg * g + ca * acc + cm * m_new)
     if m.uses_buffer:
         return p_new, m_new, ab * acc
     return p_new, m_new
@@ -360,6 +370,52 @@ def _dn_outer_coeffs(m, ctx):
     return am, bm, ab, 1.0, ctx.mu
 
 
+# -- FedBuff (Nguyen et al. 2022): K-arrival buffered aggregation ------------
+
+def _fedbuff_outer_coeffs(m, ctx):
+    """Buffer incoming (weighted) pseudo-gradients; the server only steps
+    at every K-th arrival, applying the buffer AVERAGE through the plain
+    Nesterov update, then resets the buffer:
+
+      non-boundary:  b' = b + G;  m' = m;  p' = p
+      boundary:      gbar = (b+G)/K;  m' = mu m + (1-mu) gbar;  b' = 0
+                     p' = p - eta*(gbar + mu m')
+
+    Between boundaries nothing moves — workers keep training from the
+    last aggregate, the FedBuff semantics.
+    """
+    k = m.buffer_period
+    boundary = (((_phase(ctx) + 1) % k) == 0).astype(jnp.float32)
+    am = 1.0 - boundary * (1.0 - ctx.mu)
+    bm = boundary * ((1.0 - ctx.mu) / k)
+    ab = 1.0 - boundary
+    cg = 0.0
+    cm = boundary * ctx.mu
+    ca = boundary / k
+    return am, bm, ab, cg, cm, ca
+
+
+# -- polynomial staleness weighting (Xie et al. 2019 style) ------------------
+
+def _poly_weight(m, ctx):
+    tau = jnp.asarray(ctx.tau).astype(jnp.float32)
+    return (1.0 + tau) ** (-m.stale_alpha)
+
+
+def _poly_correct(m, ctx, delta, momentum):
+    """Damp the whole pseudo-gradient polynomially in its staleness:
+    Delta' = (1 + tau)^-alpha * Delta (tau=0 recovers plain Nesterov)."""
+    w = _poly_weight(m, ctx)
+    return jax.tree.map(
+        lambda d: (w * d.astype(jnp.float32)).astype(d.dtype), delta)
+
+
+def _poly_packed_coeffs(m, ctx, dbuf, mbuf):
+    n = ctx.layout.n_blocks
+    return (jnp.broadcast_to(_poly_weight(m, ctx), (n,)),
+            jnp.zeros((n,), jnp.float32), None)
+
+
 # -- DC-ASGD-style delay compensation (Zheng et al. 2017) --------------------
 
 def _dcasgd_correct(m, ctx, delta, momentum):
@@ -432,6 +488,25 @@ register(OuterMethod(
     aliases=("async-delayed-nesterov", "dn"), buffer_period=4,
     correct=_identity_correct, packed_coeffs=_plain_packed_coeffs,
     outer_coeffs=_dn_outer_coeffs))
+
+register(OuterMethod(
+    name="fedbuff",
+    description="FedBuff-style buffered asynchronous aggregation: the "
+                "server averages every K incoming pseudo-gradients into "
+                "one outer Nesterov step (Nguyen et al. 2022).",
+    outer_lr=0.7, momentum=0.9, weight_factor="one", lookahead_init=False,
+    aliases=("async-fedbuff",), buffer_period=4,
+    correct=_identity_correct, packed_coeffs=_plain_packed_coeffs,
+    outer_coeffs=_fedbuff_outer_coeffs))
+
+register(OuterMethod(
+    name="poly_stale",
+    description="Polynomial staleness weighting: the pseudo-gradient is "
+                "damped by (1+tau)^-alpha before the Nesterov outer step "
+                "(staleness-aware async SGD baseline).",
+    outer_lr=0.07, momentum=0.9, weight_factor="base", lookahead_init=False,
+    aliases=("async-poly-stale",), outer_lr_cap=0.07, stale_alpha=0.5,
+    correct=_poly_correct, packed_coeffs=_poly_packed_coeffs))
 
 register(OuterMethod(
     name="dcasgd",

@@ -127,6 +127,21 @@ def branch_scalars(stats: jnp.ndarray, h: HeLoCoConfig):
 # Sweep 2: fused correct + Nesterov outer update
 # ---------------------------------------------------------------------------
 
+# Per-row telemetry moments (see repro.telemetry.stats): each fused sweep
+# already reads (delta, momentum) tiles, so update-quality diagnostics are
+# emitted as ONE extra per-row output of the SAME launch — [d.m, d.d, m.m,
+# |g_unweighted - d|^2] partials, reduced outside the kernel. The p'/m'
+# arithmetic of the stats variants is op-for-op identical to the plain
+# kernels, so enabling telemetry cannot move a single output bit.
+N_MOMENTS = 4
+
+
+def _row_moments(d, m, corr):
+    return jnp.stack([jnp.sum(d * m, axis=1), jnp.sum(d * d, axis=1),
+                      jnp.sum(m * m, axis=1),
+                      jnp.sum((corr - d) * (corr - d), axis=1)], axis=1)
+
+
 def _correct_outer_kernel(p_ref, m_ref, d_ref, cu_ref, cv_ref, hp_ref,
                           p_out, m_out):
     eta = hp_ref[0, 0]
@@ -141,22 +156,51 @@ def _correct_outer_kernel(p_ref, m_ref, d_ref, cu_ref, cv_ref, hp_ref,
     m_out[...] = m_new
 
 
+def _correct_outer_stats_kernel(p_ref, m_ref, d_ref, cu_ref, cv_ref, hp_ref,
+                                p_out, m_out, s_out):
+    eta = hp_ref[0, 0]
+    mu = hp_ref[0, 1]
+    rho = hp_ref[0, 2]
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    g = (cu_ref[...] * d + cv_ref[...] * m) * rho    # corrected, weighted
+    m_new = mu * m + (1.0 - mu) * g
+    p_out[...] = (p - eta * (g + mu * m_new)).astype(p_out.dtype)
+    m_out[...] = m_new
+    s_out[...] = _row_moments(d, m, cu_ref[...] * d + cv_ref[...] * m)
+
+
 def packed_correct_outer(p2d: jnp.ndarray, m2d: jnp.ndarray,
                          d2d: jnp.ndarray, cu_rows: jnp.ndarray,
                          cv_rows: jnp.ndarray, eta: float, mu: float, rho,
-                         interpret: bool = True, rows: int | None = None):
+                         interpret: bool = True, rows: int | None = None,
+                         with_stats: bool = False):
     """One fused sweep: g = cu*delta + cv*m per row, then Eqs. 17-19.
 
     p2d/m2d/d2d: (R, 128); cu_rows/cv_rows: (R, 1) per-row branch scalars
-    (each block's scalar replicated over its rows). Returns (p', m').
+    (each block's scalar replicated over its rows). Returns (p', m'), plus
+    an (R, 4) per-row telemetry-moment output when ``with_stats`` — same
+    single launch, identical p'/m' arithmetic.
     """
     r = p2d.shape[0]
     rows, grid = _grid(r, interpret, rows)
     hp = jnp.stack([jnp.asarray(eta, jnp.float32),
                     jnp.asarray(mu, jnp.float32),
                     jnp.asarray(rho, jnp.float32)]).reshape(1, 3)
+    out_specs = [
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+        jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+    ]
+    if with_stats:
+        out_specs.append(pl.BlockSpec((rows, N_MOMENTS), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((r, N_MOMENTS), jnp.float32))
     return pl.pallas_call(
-        _correct_outer_kernel,
+        _correct_outer_stats_kernel if with_stats else _correct_outer_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
@@ -166,14 +210,8 @@ def packed_correct_outer(p2d: jnp.ndarray, m2d: jnp.ndarray,
             pl.BlockSpec((rows, 1), lambda i: (i, 0)),
             pl.BlockSpec((1, 3), lambda i: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
-            jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(p2d, m2d, d2d, cu_rows, cv_rows, hp)
 
@@ -203,21 +241,52 @@ def _correct_outer_quad_kernel(p_ref, m_ref, d_ref, cu_ref, cv_ref, cq_ref,
     m_out[...] = m_new
 
 
+def _correct_outer_quad_stats_kernel(p_ref, m_ref, d_ref, cu_ref, cv_ref,
+                                     cq_ref, hp_ref, p_out, m_out, s_out):
+    eta = hp_ref[0, 0]
+    mu = hp_ref[0, 1]
+    rho = hp_ref[0, 2]
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    g = (cu_ref[...] * d + cv_ref[...] * m
+         + cq_ref[...] * d * d * m) * rho       # Taylor-compensated, weighted
+    m_new = mu * m + (1.0 - mu) * g
+    p_out[...] = (p - eta * (g + mu * m_new)).astype(p_out.dtype)
+    m_out[...] = m_new
+    s_out[...] = _row_moments(
+        d, m, cu_ref[...] * d + cv_ref[...] * m + cq_ref[...] * d * d * m)
+
+
 def packed_correct_outer_quad(p2d: jnp.ndarray, m2d: jnp.ndarray,
                               d2d: jnp.ndarray, cu_rows: jnp.ndarray,
                               cv_rows: jnp.ndarray, cq_rows: jnp.ndarray,
                               eta: float, mu: float, rho,
                               interpret: bool = True,
-                              rows: int | None = None):
+                              rows: int | None = None,
+                              with_stats: bool = False):
     """One fused sweep with a quadratic compensation term per row:
-    g = cu*delta + cv*m + cq*delta^2*m, then Eqs. 17-19. Returns (p', m')."""
+    g = cu*delta + cv*m + cq*delta^2*m, then Eqs. 17-19. Returns (p', m')
+    (+ (R, 4) telemetry moments when ``with_stats``, same launch)."""
     r = p2d.shape[0]
     rows, grid = _grid(r, interpret, rows)
     hp = jnp.stack([jnp.asarray(eta, jnp.float32),
                     jnp.asarray(mu, jnp.float32),
                     jnp.asarray(rho, jnp.float32)]).reshape(1, 3)
+    out_specs = [
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+        jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+    ]
+    if with_stats:
+        out_specs.append(pl.BlockSpec((rows, N_MOMENTS), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((r, N_MOMENTS), jnp.float32))
     return pl.pallas_call(
-        _correct_outer_quad_kernel,
+        (_correct_outer_quad_stats_kernel if with_stats
+         else _correct_outer_quad_kernel),
         grid=grid,
         in_specs=[
             pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
@@ -228,14 +297,8 @@ def packed_correct_outer_quad(p2d: jnp.ndarray, m2d: jnp.ndarray,
             pl.BlockSpec((rows, 1), lambda i: (i, 0)),
             pl.BlockSpec((1, 3), lambda i: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
-            jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(p2d, m2d, d2d, cu_rows, cv_rows, cq_rows, hp)
 
@@ -249,6 +312,7 @@ def _correct_outer_acc_kernel(p_ref, m_ref, b_ref, d_ref, cu_ref, cv_ref,
     ab = hp_ref[0, 4]
     cg = hp_ref[0, 5]
     cm = hp_ref[0, 6]
+    ca = hp_ref[0, 7]
     p = p_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
     b = b_ref[...].astype(jnp.float32)
@@ -256,25 +320,54 @@ def _correct_outer_acc_kernel(p_ref, m_ref, b_ref, d_ref, cu_ref, cv_ref,
     g = (cu_ref[...] * d + cv_ref[...] * m) * rho
     acc = b + g
     m_new = am * m + bm * acc
-    p_out[...] = (p - eta * (cg * g + cm * m_new)).astype(p_out.dtype)
+    p_out[...] = (p - eta * (cg * g + ca * acc + cm * m_new)
+                  ).astype(p_out.dtype)
     m_out[...] = m_new
     b_out[...] = ab * acc
+
+
+def _correct_outer_acc_stats_kernel(p_ref, m_ref, b_ref, d_ref, cu_ref,
+                                    cv_ref, hp_ref, p_out, m_out, b_out,
+                                    s_out):
+    eta = hp_ref[0, 0]
+    rho = hp_ref[0, 1]
+    am = hp_ref[0, 2]
+    bm = hp_ref[0, 3]
+    ab = hp_ref[0, 4]
+    cg = hp_ref[0, 5]
+    cm = hp_ref[0, 6]
+    ca = hp_ref[0, 7]
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    g = (cu_ref[...] * d + cv_ref[...] * m) * rho
+    acc = b + g
+    m_new = am * m + bm * acc
+    p_out[...] = (p - eta * (cg * g + ca * acc + cm * m_new)
+                  ).astype(p_out.dtype)
+    m_out[...] = m_new
+    b_out[...] = ab * acc
+    s_out[...] = _row_moments(d, m, cu_ref[...] * d + cv_ref[...] * m)
 
 
 def packed_correct_outer_acc(p2d: jnp.ndarray, m2d: jnp.ndarray,
                              b2d: jnp.ndarray, d2d: jnp.ndarray,
                              cu_rows: jnp.ndarray, cv_rows: jnp.ndarray,
-                             eta: float, rho, am, bm, ab, cg, cm,
+                             eta: float, rho, am, bm, ab, cg, cm, ca=0.0,
                              interpret: bool = True,
-                             rows: int | None = None):
+                             rows: int | None = None,
+                             with_stats: bool = False):
     """One fused sweep of the generalized schedule with a gradient
-    accumulator (delayed-Nesterov family):
+    accumulator (delayed-Nesterov / FedBuff family):
 
       g = (cu*delta + cv*m)*rho;  acc = b + g
-      m' = am*m + bm*acc;  b' = ab*acc;  p' = p - eta*(cg*g + cm*m')
+      m' = am*m + bm*acc;  b' = ab*acc
+      p' = p - eta*(cg*g + ca*acc + cm*m')
 
     Schedule scalars may be traced (boundary arrivals toggle them).
-    Returns (p', m', b')."""
+    Returns (p', m', b') (+ (R, 4) telemetry moments when ``with_stats``,
+    same launch)."""
     r = p2d.shape[0]
     rows, grid = _grid(r, interpret, rows)
     hp = jnp.stack([jnp.asarray(eta, jnp.float32),
@@ -283,9 +376,24 @@ def packed_correct_outer_acc(p2d: jnp.ndarray, m2d: jnp.ndarray,
                     jnp.asarray(bm, jnp.float32),
                     jnp.asarray(ab, jnp.float32),
                     jnp.asarray(cg, jnp.float32),
-                    jnp.asarray(cm, jnp.float32)]).reshape(1, 7)
+                    jnp.asarray(cm, jnp.float32),
+                    jnp.asarray(ca, jnp.float32)]).reshape(1, 8)
+    out_specs = [
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+        jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+        jax.ShapeDtypeStruct(b2d.shape, jnp.float32),
+    ]
+    if with_stats:
+        out_specs.append(pl.BlockSpec((rows, N_MOMENTS), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((r, N_MOMENTS), jnp.float32))
     return pl.pallas_call(
-        _correct_outer_acc_kernel,
+        (_correct_outer_acc_stats_kernel if with_stats
+         else _correct_outer_acc_kernel),
         grid=grid,
         in_specs=[
             pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
@@ -294,18 +402,10 @@ def packed_correct_outer_acc(p2d: jnp.ndarray, m2d: jnp.ndarray,
             pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
             pl.BlockSpec((rows, 1), lambda i: (i, 0)),
             pl.BlockSpec((rows, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 7), lambda i: (0, 0)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
-            jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
-            jax.ShapeDtypeStruct(b2d.shape, jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(p2d, m2d, b2d, d2d, cu_rows, cv_rows, hp)
 

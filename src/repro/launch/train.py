@@ -100,6 +100,9 @@ def main():
                     help="default: 10, or the scenario's golden-trace "
                          "cadence when --scenario is given")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", default="", metavar="PATH",
+                    help="stream per-arrival update-quality telemetry "
+                         "(repro.telemetry JSONL) to this path")
     ap.add_argument("--engine", default="sim", choices=["sim", "wallclock"])
     ap.add_argument("--free", action="store_true",
                     help="wallclock engine: free-running arrival order "
@@ -124,7 +127,11 @@ def main():
     # comparable with its committed results/golden/<name>.json artifact
     eval_every = (args.eval_every if args.eval_every is not None
                   else (scn.eval_cadence if args.scenario else 10))
-    eng = make_engine(scn)
+    recorder = None
+    if args.telemetry:
+        from repro.telemetry import TelemetryRecorder
+        recorder = TelemetryRecorder()
+    eng = make_engine(scn, telemetry=recorder)
     if args.resume and args.ckpt_dir:
         latest = ckpt_lib.latest(args.ckpt_dir)
         if latest:
@@ -148,6 +155,12 @@ def main():
               f"occupancy={s['server_occupancy']:.2f} "
               f"parallelism={s['compute_parallelism']:.2f} "
               f"overlap_max={s['overlap_max']}")
+    if recorder is not None:
+        path = recorder.write_jsonl(args.telemetry)
+        t = recorder.summary()
+        print(f"telemetry -> {path}: {t['arrivals']} arrivals "
+              f"mean_cos={t['mean_cos_align']:.3f} "
+              f"mean_corrected_frac={t['mean_corrected_frac']:.3f}")
 
 
 if __name__ == "__main__":

@@ -117,6 +117,21 @@ register(Scenario(
     outer_steps=12, inner_steps=2, method="dcasgd"))
 
 register(Scenario(
+    name="fedbuff",
+    description="FedBuff-style buffered aggregation baseline: the server "
+                "averages every K=4 arrivals into one outer step.",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=12, inner_steps=2, method="fedbuff"))
+
+register(Scenario(
+    name="poly_stale",
+    description="Polynomial staleness weighting baseline: pseudo-"
+                "gradients damped by (1+tau)^-alpha before the outer "
+                "step.",
+    n_workers=4, worker_paces=(1.0, 1.0, 6.0, 15.0),
+    outer_steps=12, inner_steps=2, method="poly_stale"))
+
+register(Scenario(
     name="sync_baseline",
     description="Synchronous DiLoCo/Nesterov barrier baseline: the "
                 "slowest worker gates every round.",
@@ -137,6 +152,15 @@ register(Scenario(
                 "runtime: the buffered schedule commits trace-identically "
                 "to the simulator.",
     engine="wallclock", mode="deterministic", method="delayed_nesterov",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=10, inner_steps=2))
+
+register(Scenario(
+    name="fedbuff_wallclock",
+    description="FedBuff buffered aggregation on the deterministic "
+                "wall-clock runtime: the K-arrival boundary schedule "
+                "commits trace-identically to the simulator.",
+    engine="wallclock", mode="deterministic", method="fedbuff",
     n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
     outer_steps=10, inner_steps=2))
 

@@ -87,10 +87,15 @@ def param_fingerprint(params) -> Dict[str, List[float]]:
 # Running a scenario into a trace document
 # ---------------------------------------------------------------------------
 
-def run_trace(scn: Scenario) -> Dict[str, Any]:
-    """Execute the scenario and collect its full replayable trace."""
-    from repro.async_engine.engine import make_eval_fn
-    eng = scn.build()
+def run_trace(scn: Scenario, telemetry=None) -> Dict[str, Any]:
+    """Execute the scenario and collect its full replayable trace.
+
+    telemetry: optional ``repro.telemetry.TelemetryRecorder`` — the
+    telemetry-on arrival path is contract-bound to be byte-identical, so
+    a trace recorded with telemetry must verify against the committed
+    golden (asserted in tests/test_telemetry.py)."""
+    from repro.async_engine.engine import make_engine, make_eval_fn
+    eng = make_engine(scn, telemetry=telemetry)
     hist = eng.run(eval_every=scn.eval_cadence,
                    eval_fn=make_eval_fn(eng, batch=scn.eval_batch))
     arrivals = [[a["outer_step"], a["worker_id"],

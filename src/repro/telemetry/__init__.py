@@ -1,0 +1,28 @@
+"""Telemetry: structured per-arrival update-quality diagnostics.
+
+The paper's Section-5 evidence layer — who sent what, how stale it was,
+how well it aligned with the outer momentum, how much the method
+corrected, and what the per-language losses did — as a typed JSONL
+stream emitted by the engines with ZERO extra Pallas launches per
+arrival (the stats ride the fused packed sweeps as an extra output; see
+``repro.telemetry.stats`` and docs/telemetry.md).
+
+    from repro.telemetry import TelemetryRecorder
+    rec = TelemetryRecorder()
+    eng = make_engine(run_cfg, telemetry=rec)
+    eng.run(...)
+    rec.write_jsonl("results/telemetry/run.jsonl")
+"""
+from repro.telemetry.analysis import (          # noqa: F401
+    language_spread, per_language_curves, per_language_final,
+    staleness_alignment, summarize,
+)
+from repro.telemetry.recorder import TelemetryRecorder, iter_jsonl  # noqa: F401
+from repro.telemetry.schema import (            # noqa: F401
+    SCHEMA_VERSION, ArrivalMetrics, EvalMetrics, RunMeta, from_json_line,
+    to_json_line,
+)
+from repro.telemetry.stats import (             # noqa: F401
+    MOMENT_FIELDS, N_MOMENTS, UpdateStats, momentum_only_moments,
+    reference_moments, stats_from_moments,
+)

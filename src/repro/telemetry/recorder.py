@@ -1,0 +1,121 @@
+"""In-memory telemetry sink + JSONL persistence.
+
+A ``TelemetryRecorder`` is handed to an engine (``make_engine(...,
+telemetry=rec)``); the engine emits one ``ArrivalMetrics`` per committed
+outer step and one ``EvalMetrics`` per evaluation. Wall-time stamps are
+relative to the recorder's creation, so the stream is self-contained.
+
+The recorder never influences the run: stats are extra outputs of the
+kernels the synchronizer launches anyway, and recording is append-only —
+telemetry-on runs are byte-identical to telemetry-off runs (CI-gated via
+the golden traces, see tests/test_telemetry.py).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Iterator, List, Optional
+
+from repro.telemetry import schema
+
+
+class TelemetryRecorder:
+    def __init__(self, meta: Optional[schema.RunMeta] = None):
+        self.meta = meta
+        self.records: List[schema.Record] = []
+        self._t0 = time.perf_counter()
+
+    # ------------------------------------------------------------- emission
+    def wall(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def ensure_meta(self, **kw) -> None:
+        """Set the stream provenance once (first engine to run wins)."""
+        if self.meta is None:
+            self.meta = schema.RunMeta(**kw)
+
+    def record_arrival(self, rec, *, mixture=None,
+                       tokens_total: int = 0) -> None:
+        """``rec`` duck-types ``repro.async_engine.server.ArrivalRecord``
+        (the synchronizer attaches the update-quality stats to it)."""
+        def pick(name):
+            v = getattr(rec, name, None)
+            return None if v is None else float(v)
+
+        self.records.append(schema.ArrivalMetrics(
+            outer_step=int(rec.outer_step),
+            worker_id=int(rec.worker_id),
+            staleness=int(rec.staleness),
+            rho=float(rec.rho),
+            sim_time=float(rec.sim_time),
+            wall_time=self.wall(),
+            lang=rec.lang,
+            dropped=bool(rec.dropped),
+            cos_align=pick("cos_align"),
+            corrected_frac=pick("corrected_frac"),
+            delta_norm=pick("delta_norm"),
+            momentum_norm=pick("momentum_norm"),
+            mixture=None if mixture is None else tuple(float(x)
+                                                       for x in mixture),
+            tokens_total=int(tokens_total)))
+
+    def record_eval(self, ev: Dict) -> None:
+        """``ev`` is the ``make_eval_fn`` result dict."""
+        self.records.append(schema.EvalMetrics(
+            outer_step=int(ev["step"]),
+            sim_time=float(ev["time"]),
+            wall_time=self.wall(),
+            mean_loss=float(ev["mean"]),
+            per_lang={k: float(v) for k, v in ev.get("per_lang",
+                                                     {}).items()}))
+
+    # -------------------------------------------------------------- queries
+    def arrivals(self) -> List[schema.ArrivalMetrics]:
+        return [r for r in self.records
+                if isinstance(r, schema.ArrivalMetrics)]
+
+    def evals(self) -> List[schema.EvalMetrics]:
+        return [r for r in self.records if isinstance(r, schema.EvalMetrics)]
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def summary(self) -> Dict:
+        from repro.telemetry import analysis
+        return analysis.summarize(self.arrivals(), self.evals())
+
+    # ------------------------------------------------------------------ io
+    def write_jsonl(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            if self.meta is not None:
+                f.write(schema.to_json_line(self.meta) + "\n")
+            for rec in self.records:
+                f.write(schema.to_json_line(rec) + "\n")
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def read_jsonl(cls, path: str) -> "TelemetryRecorder":
+        rec = cls()
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                r = schema.from_json_line(line)
+                if isinstance(r, schema.RunMeta):
+                    rec.meta = r
+                else:
+                    rec.records.append(r)
+        return rec
+
+
+def iter_jsonl(path: str) -> Iterator[schema.Record]:
+    """Streaming reader (large sweeps)."""
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                yield schema.from_json_line(line)

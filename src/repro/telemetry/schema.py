@@ -1,0 +1,103 @@
+"""Typed schema of the telemetry stream.
+
+A stream is a JSONL file: one ``{"kind": ..., ...}`` object per line.
+Three record kinds:
+
+  meta      one per stream (first line): what produced it;
+  arrival   one per committed outer step: scheduling facts (worker,
+            staleness, rho, sim/wall time, language/mixture, dropped)
+            plus the update-quality stats of ``repro.telemetry.stats``;
+  eval      one per evaluation: mean + per-language validation loss.
+
+Records are frozen dataclasses; ``to_json_line``/``from_json_line``
+round-trip them. Unknown keys in a line are rejected loudly (schema
+drift should fail, not silently drop fields); bump SCHEMA_VERSION on
+breaking changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class RunMeta:
+    """Provenance of one stream."""
+    method: str
+    engine: str                       # make_engine dialect: "sim"|"wallclock"
+    n_workers: int
+    outer_steps: int
+    seed: int
+    non_iid: bool = False
+    mixture_alpha: Optional[float] = None
+    scenario: str = ""                # scenario / cell name, if any
+    schema_version: int = SCHEMA_VERSION
+
+
+@dataclass(frozen=True)
+class ArrivalMetrics:
+    """One committed outer step (one pseudo-gradient arrival or one
+    synchronous barrier round)."""
+    outer_step: int
+    worker_id: int
+    staleness: int
+    rho: float
+    sim_time: float
+    wall_time: float
+    lang: str
+    dropped: bool
+    # update-quality stats (None when the synchronizer ran stats-free)
+    cos_align: Optional[float] = None
+    corrected_frac: Optional[float] = None
+    delta_norm: Optional[float] = None
+    momentum_norm: Optional[float] = None
+    # data heterogeneity context
+    mixture: Optional[Tuple[float, ...]] = None
+    # budget accounting view: cumulative tokens at commit
+    tokens_total: int = 0
+
+
+@dataclass(frozen=True)
+class EvalMetrics:
+    """One evaluation snapshot (Fig. 2/3 protocol)."""
+    outer_step: int
+    sim_time: float
+    wall_time: float
+    mean_loss: float
+    per_lang: Dict[str, float] = field(default_factory=dict)
+
+
+Record = Union[RunMeta, ArrivalMetrics, EvalMetrics]
+
+KINDS: Dict[str, type] = {"meta": RunMeta, "arrival": ArrivalMetrics,
+                          "eval": EvalMetrics}
+_KIND_OF = {cls: kind for kind, cls in KINDS.items()}
+
+
+def kind_of(rec: Record) -> str:
+    return _KIND_OF[type(rec)]
+
+
+def to_json_line(rec: Record) -> str:
+    return json.dumps({"kind": kind_of(rec), **dataclasses.asdict(rec)},
+                      sort_keys=True)
+
+
+def from_json_line(line: str) -> Record:
+    d = json.loads(line)
+    kind = d.pop("kind", None)
+    cls = KINDS.get(kind)
+    if cls is None:
+        raise ValueError(f"unknown telemetry record kind {kind!r}")
+    if cls is ArrivalMetrics and d.get("mixture") is not None:
+        d["mixture"] = tuple(d["mixture"])
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"telemetry schema drift: {kind} record has "
+                         f"unknown fields {sorted(unknown)}")
+    return cls(**d)

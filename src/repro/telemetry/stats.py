@@ -1,0 +1,82 @@
+"""Update-quality statistics: the Section-5 diagnostics of one arrival.
+
+The paper's analysis of HOW staleness and heterogeneity shape training
+rests on four per-arrival scalars:
+
+  cos_align       cosine(Delta, m) — alignment of the incoming
+                  pseudo-gradient with the outer momentum direction;
+  corrected_frac  ||g - Delta|| / ||Delta|| — how much mass the method's
+                  correction moved (0 for identity methods);
+  delta_norm      ||Delta||;
+  momentum_norm   ||m||.
+
+All four derive from four global MOMENTS ``[Delta.m, Delta.Delta, m.m,
+|g - Delta|^2]`` (``g`` is the method's corrected gradient BEFORE the
+arrival weight rho). On the packed fast path these moments come out of
+the fused correct+outer sweep as an extra per-row output — ZERO extra
+Pallas launches per arrival (see ``repro.kernels.packed._row_moments``
+and the ``arrival_launches_packed_telemetry_*`` bench contracts); this
+module holds the moment -> stats conversion and the per-leaf reference
+implementation the kernel output is property-tested against.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# Moment vector layout (matches kernels.packed._row_moments columns).
+MOMENT_FIELDS = ("dot_dm", "delta_sq", "mom_sq", "err_sq")
+N_MOMENTS = len(MOMENT_FIELDS)
+
+
+@dataclass(frozen=True)
+class UpdateStats:
+    """The derived per-arrival diagnostics (plain floats, JSON-ready)."""
+    cos_align: float
+    corrected_frac: float
+    delta_norm: float
+    momentum_norm: float
+
+
+def stats_from_moments(moments) -> UpdateStats:
+    """(4,) moments -> UpdateStats. Degenerate norms (dropped arrivals,
+    zero momentum at t=0) yield 0 for the affected ratios."""
+    dot, dd, mm, ee = (float(x) for x in np.asarray(moments).reshape(-1))
+    dn = math.sqrt(max(dd, 0.0))
+    mn = math.sqrt(max(mm, 0.0))
+    cos = dot / (dn * mn) if dn > 0.0 and mn > 0.0 else 0.0
+    frac = math.sqrt(max(ee, 0.0)) / dn if dn > 0.0 else 0.0
+    return UpdateStats(cos_align=max(-1.0, min(1.0, cos)),
+                       corrected_frac=frac,
+                       delta_norm=dn, momentum_norm=mn)
+
+
+def reference_moments(delta: PyTree, momentum: PyTree,
+                      corrected: PyTree) -> jnp.ndarray:
+    """Per-leaf reference for the kernel-side moments: (4,) fp32
+    ``[Delta.m, Delta.Delta, m.m, |corrected - Delta|^2]`` summed over
+    every leaf (``corrected`` is the method's unweighted g)."""
+    def one(d, m, g):
+        d = d.astype(jnp.float32).reshape(-1)
+        m = m.astype(jnp.float32).reshape(-1)
+        g = g.astype(jnp.float32).reshape(-1)
+        e = g - d
+        return jnp.stack([jnp.dot(d, m), jnp.dot(d, d), jnp.dot(m, m),
+                          jnp.dot(e, e)])
+
+    parts = jax.tree.leaves(jax.tree.map(one, delta, momentum, corrected))
+    return jnp.sum(jnp.stack(parts), axis=0)
+
+
+def momentum_only_moments(momentum_sq) -> jnp.ndarray:
+    """Moments of a suppressed (dropped) arrival: Delta = 0, so only the
+    momentum norm is defined."""
+    z = jnp.zeros((), jnp.float32)
+    return jnp.stack([z, z, jnp.asarray(momentum_sq, jnp.float32), z])

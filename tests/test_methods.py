@@ -23,7 +23,7 @@ from repro.async_engine.server import Synchronizer
 H = HeLoCoConfig()
 
 CANONICAL = ("heloco", "mla", "nesterov", "sync_nesterov",
-             "delayed_nesterov", "dcasgd")
+             "delayed_nesterov", "dcasgd", "fedbuff", "poly_stale")
 
 
 # ---------------------------------------------------------------------------
@@ -281,6 +281,76 @@ def test_delayed_nesterov_state_roundtrip_carries_buffer():
     assert sv2.t == sv.t == 1
     np.testing.assert_array_equal(np.asarray(sv2.state.aux["w"]),
                                   np.asarray(snap.aux["w"]))
+
+
+def test_fedbuff_applies_buffer_average_every_k_arrivals():
+    """FedBuff semantics: nothing moves between boundaries (params AND
+    momentum frozen, buffer accumulating); every K-th arrival applies
+    the buffer average through one Nesterov step and resets the buffer."""
+    m = M.get("fedbuff")
+    k = m.buffer_period
+    params = {"w": jnp.ones((6, 4))}
+    sv = Synchronizer(params, OuterOptConfig(method="fedbuff",
+                                             weight_factor="one"), 1)
+    delta = {"w": 0.1 * jnp.ones((6, 4))}
+    for i in range(k - 1):
+        sv.on_arrival(jax.tree.map(jnp.copy, delta), s_i=sv.t, worker_id=0)
+        np.testing.assert_allclose(np.asarray(sv.state.params["w"]), 1.0,
+                                   rtol=1e-6)          # params frozen
+        np.testing.assert_allclose(np.asarray(sv.state.momentum["w"]), 0.0)
+        np.testing.assert_allclose(np.asarray(sv.state.aux["w"]),
+                                   0.1 * (i + 1), rtol=1e-6)
+    sv.on_arrival(jax.tree.map(jnp.copy, delta), s_i=sv.t, worker_id=0)
+    # boundary: gbar = K*0.1/K = 0.1; m' = (1-mu)*gbar; p' = p - eta*(gbar
+    # + mu*m'); buffer reset
+    mu, eta = 0.9, m.outer_lr
+    m_new = (1 - mu) * 0.1
+    np.testing.assert_allclose(np.asarray(sv.state.momentum["w"]), m_new,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sv.state.params["w"]),
+                               1.0 - eta * (0.1 + mu * m_new), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sv.state.aux["w"]), 0.0,
+                               atol=1e-7)
+
+
+def test_fedbuff_trajectory_packed_matches_per_leaf():
+    params = {"a": jax.random.normal(jax.random.PRNGKey(3), (32, 20)),
+              "b": jax.random.normal(jax.random.PRNGKey(4), (77,))}
+    cfg = OuterOptConfig(method="fedbuff")
+    svA = Synchronizer(jax.tree.map(jnp.copy, params), cfg, 3, packed=True)
+    svB = Synchronizer(jax.tree.map(jnp.copy, params), cfg, 3, packed=False)
+    for i in range(9):
+        delta = jax.tree.map(
+            lambda x: 0.02 * jax.random.normal(jax.random.PRNGKey(40 + i),
+                                               x.shape), params)
+        svA.on_arrival(jax.tree.map(jnp.copy, delta),
+                       s_i=max(0, svA.t - 2), worker_id=0)
+        svB.on_arrival(jax.tree.map(jnp.copy, delta),
+                       s_i=max(0, svB.t - 2), worker_id=0)
+    _tree_close(svA.state.params, svB.state.params, rtol=3e-5, atol=3e-5)
+    _tree_close(svA.state.momentum, svB.state.momentum,
+                rtol=3e-5, atol=3e-5)
+    _tree_close(svA.state.aux, svB.state.aux, rtol=3e-5, atol=3e-5)
+
+
+def test_poly_stale_damps_polynomially_with_staleness():
+    m = M.get("poly_stale")
+    delta = {"w": jnp.asarray([1.0, -2.0, 0.5])}
+    mom = {"w": jnp.asarray([0.3, 0.3, 0.3])}
+
+    def norm_at(tau):
+        ctx = M.ArrivalCtx(outer_lr=0.07, mu=0.9, h=H,
+                           tau=jnp.asarray(tau, jnp.float32))
+        g = m.correct(m, ctx, delta, mom)
+        return float(jnp.linalg.norm(g["w"]))
+
+    base = float(jnp.linalg.norm(delta["w"]))
+    np.testing.assert_allclose(norm_at(0.0), base, rtol=1e-6)   # tau=0: id
+    for tau in (1.0, 3.0, 8.0):
+        np.testing.assert_allclose(norm_at(tau),
+                                   base * (1.0 + tau) ** -m.stale_alpha,
+                                   rtol=1e-5)
+    assert norm_at(8.0) < norm_at(1.0) < base
 
 
 def test_dcasgd_reduces_to_nesterov_at_zero_staleness():

@@ -1,0 +1,149 @@
+"""Sweep subsystem: grid enumeration, budget specs, report math, and a
+tiny end-to-end budgeted sweep through the cached runner."""
+import json
+import os
+
+import pytest
+
+from repro.sweeps import (
+    BudgetSpec, SweepAxis, SweepSpec, comparison_tables, get_sweep,
+    names, run_sweep,
+)
+from repro.telemetry import TelemetryRecorder
+
+
+# ---------------------------------------------------------------------------
+# Spec / grid enumeration
+# ---------------------------------------------------------------------------
+
+def test_registered_sweeps_enumerate():
+    assert {"smoke", "paper_table2", "staleness_analysis"} <= set(names())
+    for name in names():
+        cells = get_sweep(name).cells()
+        assert cells
+        ids = [c.cell_id for c in cells]
+        assert len(set(ids)) == len(ids)
+
+
+def test_smoke_grid_shape_and_method_defaults():
+    spec = get_sweep("smoke")
+    cells = spec.cells()
+    assert len(cells) == (len(spec.methods) * len(spec.scenarios)
+                          * len(spec.budgets))
+    for c in cells:
+        # method swapped in with Table-3 defaults, budget binding
+        assert c.scenario.method == c.method
+        assert c.scenario.outer_lr is None
+        assert c.scenario.outer_steps >= spec.outer_cap
+        assert c.scenario.name == c.cell_id
+    assert spec.baseline_method == "nesterov"
+
+
+def test_axes_expand_the_grid_and_validate():
+    spec = SweepSpec(name="t", methods=("heloco",),
+                     scenarios=("paper_hetero_severe",),
+                     budgets=(BudgetSpec("outer_steps", 4),),
+                     axes=(SweepAxis("drop_stale_after", (None, 2)),
+                           SweepAxis("inner_steps", (1, 2, 3))))
+    cells = spec.cells()
+    assert len(cells) == 6
+    assert {c.scenario.inner_steps for c in cells} == {1, 2, 3}
+    assert any(c.scenario.drop_stale_after == 2 for c in cells)
+    # outer_steps budget -> exact step count, no Budget object
+    assert all(c.scenario.outer_steps == 4 for c in cells)
+    assert all(c.budget.to_budget() is None for c in cells)
+    with pytest.raises(AssertionError):
+        SweepAxis("not_a_scenario_field", (1,))
+
+
+def test_budget_spec_labels_and_conversion():
+    assert BudgetSpec("fixed_tokens", 512).label == "tok512"
+    assert BudgetSpec("fixed_wallclock", 12.0).label == "sec12"
+    assert BudgetSpec("outer_steps", 24).label == "steps24"
+    b = BudgetSpec("fixed_tokens", 512).to_budget()
+    assert b is not None and b.kind == "fixed_tokens"
+    with pytest.raises(AssertionError):
+        BudgetSpec("wat", 1)
+
+
+def test_failure_scenarios_rejected():
+    spec = SweepSpec(name="t", methods=("heloco",),
+                     scenarios=("crash_rejoin",),
+                     budgets=(BudgetSpec("fixed_tokens", 128),))
+    with pytest.raises(ValueError):
+        spec.cells()
+
+
+# ---------------------------------------------------------------------------
+# Report math (synthetic results: no training)
+# ---------------------------------------------------------------------------
+
+def _fake_doc():
+    b = {"kind": "fixed_tokens", "amount": 256}
+    def cell(method, loss):
+        return {"cell_id": f"x__{method}", "base": "paper_hetero_severe",
+                "method": method, "budget": b, "overrides": {},
+                "final_loss": loss, "per_lang": {"de": loss},
+                "tokens": 256, "final_time": 10.0, "arrivals": 4,
+                "n_dropped": 0, "telemetry": None}
+    return {"sweep": "x", "baseline": "nesterov",
+            "methods": ["heloco", "nesterov"],
+            "scenarios": ["paper_hetero_severe"],
+            "budgets": [b],
+            "cells": [cell("heloco", 3.8), cell("nesterov", 4.0)],
+            "n_cells": 2, "wall_seconds": 1.0}
+
+
+def test_comparison_table_percentages():
+    tables = comparison_tables(_fake_doc())
+    assert len(tables) == 1
+    rows = tables[0]["rows"]
+    col = "paper_hetero_severe"
+    assert rows["nesterov"][col]["delta_pct"] is None      # baseline
+    assert abs(rows["heloco"][col]["delta_pct"] - (-5.0)) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: a tiny budgeted sweep through the cached runner
+# ---------------------------------------------------------------------------
+
+def test_run_sweep_end_to_end(tmp_path, monkeypatch):
+    from benchmarks import common
+    monkeypatch.setattr(common, "RESULTS_DIR",
+                        str(tmp_path / "experiments"))
+    spec = SweepSpec(
+        name="tiny",
+        methods=("heloco", "nesterov"),
+        scenarios=("paper_hetero_severe",),
+        budgets=(BudgetSpec("fixed_tokens", 192),),
+        outer_cap=12, baseline="nesterov")
+    doc = run_sweep(spec, out_dir=str(tmp_path), verbose=False)
+    assert doc["n_cells"] == 2
+    for row in doc["cells"]:
+        # the budget actually stopped the run (192 tokens = 3 rounds)
+        assert 192 <= row["tokens"] < 192 + 64
+        assert row["final_loss"] is not None
+        # telemetry stream exists and parses through the typed schema
+        rec = TelemetryRecorder.read_jsonl(row["telemetry"])
+        assert len(rec.arrivals()) == row["arrivals"]
+        assert rec.meta.method == row["method"]
+    sweep_dir = tmp_path / "tiny"
+    report = (sweep_dir / "report.md").read_text()
+    assert "fixed token budget" in report
+    assert "baseline" in report and "`heloco`" in report
+    curves = json.loads((sweep_dir / "staleness_alignment.json"
+                         ).read_text())["curves"]
+    assert curves.get("heloco"), "no alignment curve from telemetry"
+    assert all(
+        set(pt) >= {"staleness", "n", "mean_cos_align"}
+        for pts in curves.values() for pt in pts)
+    # second invocation reuses the cache (no recompute)
+    doc2 = run_sweep(spec, out_dir=str(tmp_path), verbose=False)
+    assert [r["final_loss"] for r in doc2["cells"]] == \
+        [r["final_loss"] for r in doc["cells"]]
+    assert doc2["wall_seconds"] < doc["wall_seconds"] / 2
+
+
+def test_run_sweep_by_name_resolves_registry():
+    with pytest.raises(KeyError):
+        run_sweep("not_a_sweep")
