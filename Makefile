@@ -11,7 +11,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 .PHONY: verify verify-ci test test-slow test-wallclock bench bench-full \
 	bench-runtime bench-check bench-check-arrival bench-check-runtime \
 	bench-report smoke-wallclock scenarios scenarios-sim \
-	scenarios-wallclock record-goldens sweep-smoke
+	scenarios-wallclock record-goldens sweep-smoke chaos
 
 verify:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
@@ -89,6 +89,19 @@ scenarios-wallclock:
 		--engine-filter wallclock
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all \
 		--engine-filter sim --cross-only
+
+# unreliable-delivery gate (docs/faults.md): the chaos golden traces —
+# chaos_lossy / chaos_corrupt must reproduce wallclock_hetero's exact
+# param digest through drop/dup/reorder/corruption, chaos_partition must
+# survive a black-holed worker via liveness recovery — plus a short
+# free-running lossy training smoke through the --chaos launcher preset.
+chaos:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify \
+		chaos_lossy chaos_corrupt chaos_partition
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.launch.train --arch tinygpt-15m \
+		--smoke --engine wallclock --free --pace-scale 0.02 --chaos \
+		--paces 1,1,2,6 --workers 4 --outer 6 --inner 1 \
+		--batch 2 --seq 16 --eval-every 6
 
 # (re)generate the committed golden traces after an intentional change
 record-goldens:

@@ -252,6 +252,16 @@ class EngineBase:
         self._seq = 0
         self._task_counter = 0
         self._min_pace = min(w.pace for w in self.workers.values())
+        self._stop = False               # cooperative kill switch (request_stop)
+        self.restored_arrivals = 0       # commits accounted by a restored ckpt
+
+    def request_stop(self) -> None:
+        """Cooperative kill switch: the run loop exits at the next commit
+        boundary (server state stays consistent — a checkpoint taken after
+        ``run`` returns is a valid resume point). Models killing the
+        server mid-run; combined with ``checkpoint``/``restore`` it is the
+        recovery path docs/faults.md describes."""
+        self._stop = True
 
     # -------------------------------------------------------- engine hooks
     def _submit(self, task: RoundTask) -> None:
@@ -439,7 +449,7 @@ class EngineBase:
                 self._dispatch(w)
         fail_idx = el_idx = 0
         target = self.cfg.outer_steps
-        while self.server.t < target and self._heap:
+        while self.server.t < target and self._heap and not self._stop:
             time, _, kind, wid, gen = heapq.heappop(self._heap)
             if budget is not None and budget.over_time(time):
                 break   # fixed clock horizon: never commit past it
@@ -480,7 +490,7 @@ class EngineBase:
     def _run_sync(self, eval_every, eval_fn, ckpt_every, ckpt_dir,
                   budget: Optional[Budget] = None) -> History:
         target = self.cfg.outer_steps
-        while self.server.t < target:
+        while self.server.t < target and not self._stop:
             alive = [w for w in self.workers.values() if w.alive]
             round_time = max(self._h_steps(w) * w.pace for w in alive)
             if budget is not None and budget.over_time(self.time + round_time):
@@ -549,7 +559,8 @@ class EngineBase:
 
     def checkpoint(self, ckpt_dir: str) -> str:
         path = os.path.join(ckpt_dir, f"step_{self.server.t}.npz")
-        meta = {"time": self.time, "tokens": int(self.history.tokens)}
+        meta = {"time": self.time, "tokens": int(self.history.tokens),
+                "arrivals": len(self.history.arrivals)}
         ckpt.save(path, self.server_tree(), meta)
         return path
 
@@ -562,6 +573,10 @@ class EngineBase:
             aux=tree.get("aux", self.server.state.aux))
         self.time = float(meta.get("time", 0.0))
         self.history.tokens = int(meta.get("tokens", 0))
+        # committed-arrival count up to the checkpoint: a resumed run's
+        # total accounting is restored_arrivals + len(history.arrivals)
+        self.restored_arrivals = int(meta.get("arrivals", 0))
+        self._stop = False
         # in-flight worker rounds are lost on restart (real-world semantics)
         self._heap.clear()
         for w in self.workers.values():

@@ -32,6 +32,24 @@ Two commit orders:
       hardware. Failure / elastic event times are interpreted on the same
       scaled clock.
 
+Unreliable delivery (docs/faults.md)
+------------------------------------
+
+The channel is never trusted. Every worker->server message is a framed
+``Envelope`` (monotonic per-worker seq, generation, CRC32 of the packed
+payload); the worker retries unacknowledged frames with exponential
+backoff + deterministic jitter, and the server side is idempotent —
+``DeliveryTracker`` dedups redeliveries by ``(wid, generation, seq)``,
+rejects checksum-failed frames (never acked, so the sender retries), and
+quarantines a worker after K consecutive corrupt frames. Pass
+``faults=FaultSpec(...)`` to wrap the channel in a deterministic fault
+injector (drop / duplicate / reorder / delay / corrupt / partition); the
+committed history of a deterministic-mode run is unchanged by any
+eventually-delivering fault pattern — only latency and the delivery
+counters move. In free mode, workers additionally beat on a heartbeat
+side channel and a liveness monitor routes silent workers through the
+existing crash/rejoin generation machinery.
+
 Fault tolerance rides the generation counters the simulator already
 uses: a crash bumps the worker's generation, so the in-flight round that
 eventually lands through the transport is discarded at the server —
@@ -40,6 +58,7 @@ torn down on elastic leave / shutdown (poison pill + transport close).
 """
 from __future__ import annotations
 
+import dataclasses
 import queue as _queue
 import threading
 import time
@@ -52,8 +71,12 @@ from repro.async_engine.engine import (
     ElasticEvent, EngineBase, FailureEvent, History, RoundResult, RoundTask,
     Worker,
 )
+from repro.async_engine.faults import (
+    DELIVERY_COUNTERS, DeliveryTracker, FaultSpec, FaultyTransport,
+)
 from repro.async_engine.transport import (
-    InProcTransport, Transport, TransportClosed, TransportTimeout,
+    Ack, AckWaiter, Envelope, InProcTransport, KIND_ERROR, KIND_HEARTBEAT,
+    KIND_RESULT, Transport, TransportClosed, TransportTimeout, payload_crc,
 )
 from repro.configs.base import RunConfig
 
@@ -72,6 +95,9 @@ class RoundError:
 class ConcurrentRuntime(EngineBase):
     ENGINE_NAME = "wallclock"
 
+    #: ack wait on a fault-free channel before a (harmless) resend
+    _RELIABLE_ACK_TIMEOUT = 5.0
+
     def __init__(self, run_cfg: RunConfig, *,
                  failures: Optional[List[FailureEvent]] = None,
                  elastic: Optional[List[ElasticEvent]] = None,
@@ -81,19 +107,43 @@ class ConcurrentRuntime(EngineBase):
                  pin_devices: bool = True,
                  queue_capacity: Optional[int] = None,
                  result_timeout: float = 600.0,
+                 faults: Optional[FaultSpec] = None,
                  telemetry=None):
         if mode not in ("deterministic", "free"):
             raise ValueError(f"mode must be 'deterministic' or 'free': {mode}")
+        if faults is not None and faults.partitions and mode != "free":
+            raise ValueError(
+                "partition windows are defined on the free-running virtual "
+                "clock; deterministic mode has no wall-to-virtual coupling "
+                "to evaluate them against (use mode='free')")
         super().__init__(run_cfg, failures=failures, elastic=elastic,
                          telemetry=telemetry)
         self.mode = mode
         self.pace_scale = pace_scale
         self.result_timeout = result_timeout
+        self.faults = faults
         self._capacity = queue_capacity or max(2 * len(self.workers), 4)
         self._own_transport = transport is None
-        self.transport = transport or InProcTransport(self._capacity)
+        self._free_t0: Optional[float] = None
+        if transport is not None and faults is not None:
+            transport = self._wrap(transport, stream=0)
+        self.transport = transport or self._data_channel()
+        self._hb_channel: Transport = self._heartbeat_channel()
+        self._hb_enabled = (faults is not None and faults.liveness_enabled
+                            and mode == "free")
+        self._delivery = DeliveryTracker(
+            quarantine_after=(faults.quarantine_after if faults else 8))
+        self._dlock = threading.Lock()
+        self._fault_accum: Dict[str, int] = {}
         self._inboxes: Dict[int, "_queue.Queue"] = {}
+        self._ack_waiters: Dict[int, AckWaiter] = {}
         self._threads: Dict[int, threading.Thread] = {}
+        self._hb_threads: Dict[int, threading.Thread] = {}
+        self._hb_stops: Dict[int, threading.Event] = {}
+        self._last_beat: Dict[int, float] = {}
+        self._miss_counted: Dict[int, int] = {}
+        self._liveness_dead: set = set()
+        self._quarantine_acted: set = set()
         self._results: Dict[int, RoundResult] = {}      # task_id -> result
         self._computing = 0
         self._comp_lock = threading.Lock()
@@ -108,16 +158,54 @@ class ConcurrentRuntime(EngineBase):
             for w in self.workers.values():
                 w.device = devices[w.wid % len(devices)]
 
+    # ------------------------------------------------------------- channels
+    def _virtual_now(self) -> float:
+        """Free-running virtual clock (partition windows live on it)."""
+        if self._free_t0 is None:
+            return 0.0
+        scale = self.pace_scale if self.pace_scale > 0 else 1.0
+        return (time.monotonic() - self._free_t0) / scale
+
+    def _wrap(self, inner: Transport, stream: int) -> Transport:
+        return FaultyTransport(inner, self.faults, stream=stream,
+                               clock=self._virtual_now)
+
+    def _data_channel(self) -> Transport:
+        inner = InProcTransport(self._capacity)
+        return self._wrap(inner, stream=0) if self.faults else inner
+
+    def _heartbeat_channel(self) -> Transport:
+        # side channel: beacons never queue behind pseudo-gradient
+        # backpressure, and partitions silence them like any other frame
+        inner = InProcTransport(max(64 * max(len(self.workers), 1), 256))
+        return self._wrap(inner, stream=1) if self.faults else inner
+
     # ------------------------------------------------------- worker threads
     def _start_worker_thread(self, wid: int):
         inbox: "_queue.Queue[Optional[RoundTask]]" = _queue.Queue()
-        t = threading.Thread(target=self._worker_loop, args=(inbox,),
-                             name=f"heloco-worker-{wid}", daemon=True)
+        waiter = AckWaiter()
         self._inboxes[wid] = inbox
+        self._ack_waiters[wid] = waiter
+        # a (re)started thread begins a fresh delivery stream
+        self._delivery.reset_stream(wid)
+        self._last_beat[wid] = time.monotonic()
+        self._miss_counted[wid] = 0
+        t = threading.Thread(target=self._worker_loop,
+                             args=(wid, inbox, waiter),
+                             name=f"heloco-worker-{wid}", daemon=True)
         self._threads[wid] = t
         t.start()
+        if self._hb_enabled:
+            stop = threading.Event()
+            self._hb_stops[wid] = stop
+            ht = threading.Thread(target=self._heartbeat_loop,
+                                  args=(wid, stop),
+                                  name=f"heloco-hb-{wid}", daemon=True)
+            self._hb_threads[wid] = ht
+            ht.start()
 
-    def _worker_loop(self, inbox):
+    def _worker_loop(self, wid: int, inbox, waiter: AckWaiter):
+        seq = 0                          # per-stream monotonic frame counter
         while True:
             task = inbox.get()
             if task is None:
@@ -146,10 +234,64 @@ class ConcurrentRuntime(EngineBase):
                         - (time.monotonic() - t0))
                 if rest > 0:
                     time.sleep(rest)
+            seq += 1
+            if isinstance(out, RoundError):
+                env = Envelope(wid=wid, generation=task.generation, seq=seq,
+                               kind=KIND_ERROR, payload=out)
+            else:
+                env = Envelope(wid=wid, generation=task.generation, seq=seq,
+                               kind=KIND_RESULT, payload=out,
+                               crc=payload_crc(out))
+            if not self._send_reliably(env, waiter):
+                return                              # channel torn down
+
+    def _send_reliably(self, env: Envelope, waiter: AckWaiter) -> bool:
+        """At-least-once send: retry the frame until the server's delivery
+        receipt lands. Backoff is exponential with deterministic jitter;
+        a quarantine ack stops the retries (the server will not accept
+        this worker again). Returns False when the channel is gone."""
+        spec = self.faults
+        base = spec.ack_timeout if spec else self._RELIABLE_ACK_TIMEOUT
+        boff = spec.backoff_base if spec else 2.0
+        cap = spec.max_backoff if spec else self._RELIABLE_ACK_TIMEOUT
+        attempt = 0
+        while True:
             try:
-                self.transport.send(out)
+                self.transport.send(dataclasses.replace(env, attempt=attempt))
             except TransportClosed:
-                return                                  # shutdown race: drop
+                return False
+            timeout = min(base * (boff ** attempt), cap)
+            if spec is not None:
+                timeout *= 1.0 + spec.retry_jitter(env.wid, env.seq, attempt)
+            ack = waiter.wait_for(env, timeout)
+            if ack is not None:
+                return True                  # delivered (or quarantined)
+            if waiter.closed:
+                return False
+            attempt += 1
+            self._bump("retries")
+
+    def _heartbeat_loop(self, wid: int, stop: threading.Event):
+        """Liveness side channel: one beacon per interval until the
+        worker is torn down. Beacons ride the same fault injector as data
+        frames, so a partition silences them — which is exactly how the
+        server detects it."""
+        interval = self.faults.heartbeat_interval
+        seq = 0
+        while not stop.wait(interval):
+            seq += 1
+            w = self.workers.get(wid)
+            gen = w.generation if w is not None else 0
+            try:
+                self._hb_channel.send(
+                    Envelope(wid=wid, generation=gen, seq=seq,
+                             kind=KIND_HEARTBEAT, payload=None,
+                             sent_time=time.monotonic()),
+                    timeout=0.01)
+            except TransportTimeout:
+                continue                         # channel full: drop beacon
+            except TransportClosed:
+                return
 
     # --------------------------------------------------------- engine hooks
     def _use_virtual_clock(self) -> bool:
@@ -166,27 +308,180 @@ class ConcurrentRuntime(EngineBase):
         self._inboxes[task.wid].put(task)
 
     def _recv_result(self, timeout: Optional[float] = None) -> RoundResult:
-        """One transport message, with stats + error unwrapping. With an
-        explicit ``timeout`` the ``TransportTimeout`` propagates (polling
-        callers keep their event clock ticking); without one it is a hard
-        liveness failure."""
-        try:
-            msg = self.transport.recv(
-                timeout=self.result_timeout if timeout is None else timeout)
-        except TransportTimeout:
-            if timeout is not None:
-                raise
-            raise RuntimeError(
-                f"no arrival within {self.result_timeout}s — worker thread "
-                f"dead or wedged (threads alive: "
-                f"{[w for w, t in self._threads.items() if t.is_alive()]})")
-        self.stats["queue_depth_samples"].append(self.transport.depth())
-        if isinstance(msg, RoundError):
-            raise RuntimeError(
-                f"worker {msg.wid} round {msg.round_seq} failed: {msg.error}")
-        self.stats["compute_seconds_total"] += msg.compute_seconds
-        return msg
+        """One *accepted* transport message, with stats + error
+        unwrapping. Duplicate, corrupt, and quarantined frames are
+        consumed (and acked/rejected per the delivery protocol) without
+        being returned. With an explicit ``timeout`` the
+        ``TransportTimeout`` propagates (polling callers keep their event
+        clock ticking); without one it is a hard liveness failure."""
+        budget = self.result_timeout if timeout is None else timeout
+        deadline = time.monotonic() + budget
+        while True:
+            rest = deadline - time.monotonic()
+            try:
+                if rest <= 0:
+                    raise TransportTimeout(f"recv idle > {budget}s")
+                msg = self.transport.recv(timeout=rest)
+            except TransportTimeout:
+                if timeout is not None:
+                    raise
+                raise RuntimeError(
+                    f"no arrival within {self.result_timeout}s — worker "
+                    f"thread dead, wedged, or quarantined (threads alive: "
+                    f"{[w for w, t in self._threads.items() if t.is_alive()]},"
+                    f" quarantined: {sorted(self._delivery.quarantined)})")
+            if isinstance(msg, Envelope):
+                payload = self._process_envelope(msg)
+                if payload is None:
+                    continue                     # dup / reject / heartbeat
+                msg = payload
+            self.stats["queue_depth_samples"].append(self.transport.depth())
+            if isinstance(msg, RoundError):
+                raise RuntimeError(
+                    f"worker {msg.wid} round {msg.round_seq} failed: "
+                    f"{msg.error}")
+            self.stats["compute_seconds_total"] += msg.compute_seconds
+            return msg
 
+    # --------------------------------------------------- delivery protocol
+    def _process_envelope(self, env: Envelope) -> Optional[Any]:
+        """Idempotent-commit gate: CRC verification, (wid, generation,
+        seq) dedup, quarantine policy, ack routing. Returns the payload
+        only for first-time, checksum-clean deliveries."""
+        if env.kind == KIND_HEARTBEAT:
+            self._note_heartbeat(env)            # stray beacon: harmless
+            return None
+        verdict = self._delivery.process(env)
+        if verdict.ack:
+            self._send_ack(env, quarantined=env.wid
+                           in self._delivery.quarantined)
+        if verdict.quarantine:
+            self._on_quarantine(env)
+        elif verdict.status == "reject":
+            self._telemetry_fault("checksum_reject", env)
+        elif verdict.status == "dup":
+            self._telemetry_fault("dedup", env)
+        if verdict.status != "accept":
+            return None
+        return env.payload
+
+    def _send_ack(self, env: Envelope, quarantined: bool = False):
+        spec = self.faults
+        if (spec is not None and not quarantined
+                and spec.drops_ack(env.wid, env.seq, env.attempt)):
+            self._bump("acks_dropped")           # lost receipt -> redelivery
+            return
+        waiter = self._ack_waiters.get(env.wid)
+        if waiter is not None:
+            waiter.put(Ack(wid=env.wid, generation=env.generation,
+                           seq=env.seq, quarantined=quarantined))
+
+    def _on_quarantine(self, env: Envelope):
+        """K consecutive corrupt frames: stop accepting this worker.
+        Free mode degrades gracefully (the worker leaves the rotation via
+        the crash machinery, no restart); deterministic mode records the
+        quarantine and the event loop surfaces a hard liveness error if
+        it ends up starved of that worker's round."""
+        if env.wid in self._quarantine_acted:
+            return                      # already handled the transition
+        self._quarantine_acted.add(env.wid)
+        self._telemetry_fault("quarantine", env)
+        w = self.workers.get(env.wid)
+        if w is not None and w.alive and self.mode == "free":
+            self._crash_worker(w)
+
+    def _bump(self, key: str, n: int = 1):
+        with self._dlock:
+            self._delivery.counters[key] += n
+
+    def _telemetry_fault(self, event: str, env: Optional[Envelope] = None,
+                         wid: Optional[int] = None, detail=None):
+        if self.telemetry is None:
+            return
+        self.telemetry.record_fault(
+            event=event,
+            wid=env.wid if env is not None else (-1 if wid is None else wid),
+            seq=env.seq if env is not None else -1,
+            generation=env.generation if env is not None else -1,
+            detail=detail)
+
+    # ------------------------------------------------------------- liveness
+    def _note_heartbeat(self, env: Envelope):
+        wid = env.wid
+        # measure silence between *send* instants, not drain instants:
+        # beacons queue on the side channel and the server may drain late
+        beat_t = env.sent_time or time.monotonic()
+        w = self.workers.get(wid)
+        if (self._hb_enabled and w is not None and w.alive
+                and wid not in self._liveness_dead):
+            last = self._last_beat.get(wid)
+            interval = self.faults.heartbeat_interval
+            if last is not None and beat_t > last:
+                missed = int((beat_t - last) / interval)
+                if missed >= self.faults.liveness_misses:
+                    # the worker WAS silent past the death threshold and
+                    # only now resurfaced — the sweep may not have caught
+                    # it in the act, but the semantics are the same:
+                    # declare the death retroactively (generation bump
+                    # drops whatever it computed while partitioned), then
+                    # let this very beacon revive it below
+                    counted = self._miss_counted.get(wid, 0)
+                    if missed > counted:
+                        self._bump("heartbeat_misses", missed - counted)
+                    self._liveness_dead.add(wid)
+                    self._bump("liveness_deaths")
+                    self._telemetry_fault("liveness_dead", wid=wid)
+                    self._crash_worker(w)
+        self._last_beat[wid] = max(beat_t, self._last_beat.get(wid, 0.0))
+        self._miss_counted[wid] = 0
+        if (wid in self._liveness_dead and w is not None and not w.alive
+                and wid not in self._delivery.quarantined):
+            # the silent worker is back: rejoin through the generation
+            # machinery (its lost round can never commit)
+            self._liveness_dead.discard(wid)
+            w.alive = True
+            self._bump("liveness_revivals")
+            self._telemetry_fault("liveness_revive", wid=wid)
+            self._dispatch(w)
+
+    def _drain_heartbeats(self):
+        if not self._hb_enabled:
+            return
+        while True:
+            try:
+                env = self._hb_channel.recv(timeout=0.0)
+            except (TransportTimeout, TransportClosed):
+                return
+            if isinstance(env, Envelope) and env.kind == KIND_HEARTBEAT:
+                self._note_heartbeat(env)
+
+    def _check_liveness(self):
+        """Declare workers whose beacons stopped dead after
+        ``liveness_misses`` whole intervals — the crash/rejoin machinery
+        handles the rest (generation bump drops the in-flight round; a
+        returning beacon revives the worker)."""
+        if not self._hb_enabled:
+            return
+        interval = self.faults.heartbeat_interval
+        now = time.monotonic()
+        for wid, w in list(self.workers.items()):
+            if not w.alive or wid in self._liveness_dead:
+                continue
+            last = self._last_beat.get(wid)
+            if last is None:
+                continue
+            missed = int((now - last) / interval)
+            counted = self._miss_counted.get(wid, 0)
+            if missed > counted:
+                self._bump("heartbeat_misses", missed - counted)
+                self._miss_counted[wid] = missed
+            if missed >= self.faults.liveness_misses:
+                self._liveness_dead.add(wid)
+                self._bump("liveness_deaths")
+                self._telemetry_fault("liveness_dead", wid=wid)
+                self._crash_worker(w)
+
+    # ----------------------------------------------------------- commit path
     def _is_current(self, res: RoundResult) -> bool:
         """A result counts only if it is the round its worker is waiting
         on. Task ids are engine-unique, so a departed incarnation of a
@@ -228,6 +523,13 @@ class ConcurrentRuntime(EngineBase):
         inbox = self._inboxes.pop(w.wid, None)
         if inbox is not None:
             inbox.put(None)                             # poison pill
+        waiter = self._ack_waiters.pop(w.wid, None)
+        if waiter is not None:
+            waiter.close()                              # unblock a retry loop
+        stop = self._hb_stops.pop(w.wid, None)
+        if stop is not None:
+            stop.set()
+        self._hb_threads.pop(w.wid, None)
         self._threads.pop(w.wid, None)
         if w.pending_task_id is not None:
             self._results.pop(w.pending_task_id, None)
@@ -237,20 +539,37 @@ class ConcurrentRuntime(EngineBase):
         if self._shut:
             if not self._own_transport:
                 raise RuntimeError("transport closed; inject a fresh one")
-            self.transport = InProcTransport(self._capacity)
+            self._fold_fault_counters()
+            self.transport = self._data_channel()
+            self._hb_channel = self._heartbeat_channel()
             self._shut = False
+
+    def _fold_fault_counters(self):
+        """Carry injected-fault counts across channel rebuilds."""
+        for tr in (self.transport, self._hb_channel):
+            if isinstance(tr, FaultyTransport):
+                for k, v in tr.counters.items():
+                    self._fault_accum[k] = self._fault_accum.get(k, 0) + v
 
     def shutdown(self):
         """Tear down worker threads. Idempotent; ``run``/``restore`` after
         shutdown transparently rebuild the channel + threads."""
         self._shut = True
         self.transport.close()
+        self._hb_channel.close()
+        for stop in self._hb_stops.values():
+            stop.set()
         for inbox in self._inboxes.values():
             inbox.put(None)
-        for t in self._threads.values():
+        for waiter in self._ack_waiters.values():
+            waiter.close()
+        for t in list(self._threads.values()) + list(self._hb_threads.values()):
             t.join(timeout=5.0)
         self._inboxes.clear()
+        self._ack_waiters.clear()
         self._threads.clear()
+        self._hb_threads.clear()
+        self._hb_stops.clear()
         self._results.clear()
 
     # -------------------------------------------------------------- run
@@ -271,6 +590,15 @@ class ConcurrentRuntime(EngineBase):
             self.shutdown()
         return hist
 
+    def _finalize(self, eval_fn) -> History:
+        hist = super()._finalize(eval_fn)
+        if self.telemetry is not None:
+            d = self.delivery_stats()
+            if any(d.values()):
+                self._telemetry_fault(
+                    "summary", detail={k: float(v) for k, v in d.items()})
+        return hist
+
     # ------------------------------------------------------- free-run loop
     def _run_free(self, eval_every, eval_fn, ckpt_every, ckpt_dir,
                   budget=None) -> History:
@@ -279,10 +607,12 @@ class ConcurrentRuntime(EngineBase):
         comparable with the simulator; with pace_scale == 0 it is raw wall
         seconds. Failure / elastic / restart times live on that clock.
         A ``Budget`` is accounted on the same clock (fixed_wallclock) or
-        on committed tokens (fixed_tokens)."""
+        on committed tokens (fixed_tokens). Heartbeat liveness runs here:
+        every loop iteration drains the side channel and sweeps for
+        silent workers."""
         self._ensure_telemetry_meta()
         target = self.cfg.outer_steps
-        t0 = time.monotonic()
+        self._free_t0 = t0 = time.monotonic()
         scale = self.pace_scale if self.pace_scale > 0 else 1.0
         fail_idx = el_idx = 0
         restarts: List[Tuple[float, int]] = []
@@ -318,14 +648,18 @@ class ConcurrentRuntime(EngineBase):
 
         def progress_possible() -> bool:
             """Someone will eventually produce an arrival: a live worker,
-            a pending restart, or an unfired failure/elastic event."""
+            a pending restart, an unfired failure/elastic event, or a
+            liveness-dead worker whose beacon may yet return."""
             return (any(w.alive for w in self.workers.values())
                     or bool(restarts)
+                    or bool(self._liveness_dead)
                     or fail_idx < len(self.failures)
                     or el_idx < len(self.elastic))
 
-        while self.server.t < target:
+        while self.server.t < target and not self._stop:
             process_events(vnow())
+            self._drain_heartbeats()
+            self._check_liveness()
             if not progress_possible():
                 break                   # every worker gone: starved run
             if budget is not None and budget.over_time(vnow()):
@@ -367,6 +701,21 @@ class ConcurrentRuntime(EngineBase):
         return [got[i] for i in range(len(tasks))]
 
     # ----------------------------------------------------------- reporting
+    def delivery_stats(self) -> Dict[str, int]:
+        """Delivery-health counters: protocol events (retries, dedups,
+        checksum rejects, quarantines, heartbeat misses, liveness
+        transitions) plus the injected-fault tallies of the faulty
+        channel(s)."""
+        with self._dlock:
+            out = {k: self._delivery.counters[k] for k in DELIVERY_COUNTERS}
+        for k, v in self._fault_accum.items():
+            out[k] = out.get(k, 0) + v
+        for tr in (self.transport, self._hb_channel):
+            if isinstance(tr, FaultyTransport):
+                for k, v in tr.counters.items():
+                    out[k] = out.get(k, 0) + v
+        return out
+
     def stats_summary(self) -> Dict[str, Any]:
         q = self.stats["queue_depth_samples"]
         ov = self.stats["overlap_samples"]
@@ -388,4 +737,5 @@ class ConcurrentRuntime(EngineBase):
             "overlap_mean": (sum(ov) / len(ov)) if ov else 0.0,
             "overlap_max": max(ov) if ov else 0,
             "overlap_commits": sum(1 for x in ov if x >= 1),
+            "delivery": self.delivery_stats(),
         }

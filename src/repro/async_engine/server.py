@@ -75,6 +75,12 @@ class Synchronizer:
         self.telemetry = telemetry
         self._last_moments = None      # (4,) device array, telemetry only
         self.records: List[ArrivalRecord] = []
+        # idempotent-commit ledger: commit_key -> record already produced.
+        # The delivery layer (DeliveryTracker) dedups redelivered frames
+        # before they reach the engine; this is the server's own guarantee
+        # that a replayed (wid, generation, seq) can never double-step
+        # outer state, whatever path it took here.
+        self._committed: dict = {}
         buffered = self.method.uses_buffer
         if packed:
             self.layout = packing.build_layout(init_params, stacked_axes)
@@ -297,7 +303,16 @@ class Synchronizer:
 
     # -- arrival processing ---------------------------------------------------
     def on_arrival(self, delta: PyTree, s_i: int, worker_id: int,
-                   sim_time: float = 0.0, lang: str = "") -> ArrivalRecord:
+                   sim_time: float = 0.0, lang: str = "",
+                   commit_key=None) -> ArrivalRecord:
+        """Apply one pseudo-gradient arrival. ``commit_key`` (typically the
+        delivery frame identity ``(wid, generation, seq)``) makes the call
+        idempotent: a key seen before returns the original record and
+        leaves outer state untouched."""
+        if commit_key is not None:
+            prior = self._committed.get(commit_key)
+            if prior is not None:
+                return prior
         tau = self.t - s_i
         dropped = (self.cfg.drop_stale_after is not None
                    and tau > self.cfg.drop_stale_after)
@@ -311,6 +326,8 @@ class Synchronizer:
                           staleness=tau, rho=rho, sim_time=sim_time,
                           lang=lang, dropped=dropped))
         self.records.append(rec)
+        if commit_key is not None:
+            self._committed[commit_key] = rec
         return rec
 
     # -- sync round (barrier) -------------------------------------------------

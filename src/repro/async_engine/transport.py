@@ -1,29 +1,58 @@
 """Transport abstraction for worker -> server pseudo-gradient traffic.
 
 The concurrent runtime never touches ``queue`` directly: workers push
-``RoundResult`` messages through a ``Transport`` and the server drains
-them. The only backend today is ``InProcTransport`` — a bounded
-in-process MPSC queue whose blocking ``send`` gives natural backpressure
-(a worker that outruns the server parks on the channel instead of piling
-up pseudo-gradients in memory). The interface is deliberately small and
-byte-agnostic so a socket/RPC backend (serialize the packed (R, 128)
-buffer, ship int8 + per-block scales) can slot in without touching the
-runtime: ``send`` / ``recv`` / ``close`` / ``depth``.
+framed ``Envelope`` messages through a ``Transport`` and the server
+drains them. The only backend today is ``InProcTransport`` — a bounded
+in-process MPSC channel whose blocking ``send`` gives natural
+backpressure (a worker that outruns the server parks on the channel
+instead of piling up pseudo-gradients in memory). The interface is
+deliberately small and byte-agnostic so a socket/RPC backend (serialize
+the packed (R, 128) buffer, ship int8 + per-block scales) can slot in
+without touching the runtime: ``send`` / ``recv`` / ``close`` /
+``depth``.
 
 ``close`` wakes every blocked producer and consumer with
 ``TransportClosed`` — that is how the runtime tears worker threads down
 without draining in-flight rounds (they are lost, exactly like a real
 disconnect; generation counters on the server make that safe).
+
+Blocking is implemented with ``threading.Condition`` wakeups: a parked
+``send``/``recv`` sleeps until notified (message consumed / produced /
+channel closed), so there is no idle poll burn and timeout deadlines
+are exact rather than quantized to a poll interval.
+
+Delivery framing
+----------------
+
+A ``Transport`` makes no reliability promises beyond what its backend
+gives it — and ``repro.async_engine.faults.FaultyTransport``
+deliberately takes even those away (drop / duplicate / reorder / delay /
+corrupt). The at-least-once protocol that survives such a channel is
+expressed with the frame types defined here:
+
+  ``Envelope``   one framed message: per-worker monotonic ``seq``,
+                 worker ``generation``, CRC32 of the payload bytes, and
+                 the retry ``attempt`` (not part of the frame identity);
+  ``Ack``        the server's delivery receipt, routed back on a
+                 per-worker side channel; a worker retries an
+                 unacknowledged frame with exponential backoff.
+
+The server deduplicates redeliveries by ``(wid, generation, seq)`` and
+rejects frames whose recomputed CRC disagrees with the envelope — see
+``repro.async_engine.faults.DeliveryTracker``.
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
+import zlib
 from abc import ABC, abstractmethod
+from collections import deque
+from dataclasses import dataclass, field
 from typing import Any, Optional
 
-_POLL_S = 0.02       # how often blocked send/recv re-checks for close()
+import jax
+import numpy as np
 
 
 class TransportClosed(Exception):
@@ -58,43 +87,168 @@ class Transport(ABC):
 
 
 class InProcTransport(Transport):
-    """Bounded in-process queue. ``capacity`` is the backpressure knob:
+    """Bounded in-process channel. ``capacity`` is the backpressure knob:
     once full, producers block in ``send`` until the server drains an
-    arrival — no message is ever dropped."""
+    arrival — no message is ever dropped. Condition-variable wakeups:
+    blocked peers sleep (no polling) and honour timeout deadlines
+    exactly; ``close`` notifies everyone."""
 
     def __init__(self, capacity: int = 8):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=capacity)
-        self._closed = threading.Event()
+        self._dq: deque = deque()
+        lock = threading.Lock()
+        self._not_full = threading.Condition(lock)
+        self._not_empty = threading.Condition(lock)
+        self._closed = False
 
     def send(self, msg: Any, timeout: Optional[float] = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
-            if self._closed.is_set():
-                raise TransportClosed("send on closed transport")
-            try:
-                self._q.put(msg, timeout=_POLL_S)
-                return
-            except queue.Full:
-                if deadline is not None and time.monotonic() > deadline:
-                    raise TransportTimeout(
-                        f"send blocked > {timeout}s (capacity {self.capacity})")
+        with self._not_full:
+            while True:
+                if self._closed:
+                    raise TransportClosed("send on closed transport")
+                if len(self._dq) < self.capacity:
+                    self._dq.append(msg)
+                    self._not_empty.notify()
+                    return
+                if deadline is None:
+                    self._not_full.wait()
+                else:
+                    rest = deadline - time.monotonic()
+                    if rest <= 0:
+                        raise TransportTimeout(
+                            f"send blocked > {timeout}s "
+                            f"(capacity {self.capacity})")
+                    self._not_full.wait(rest)
 
     def recv(self, timeout: Optional[float] = None) -> Any:
         deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
-            try:
-                return self._q.get(timeout=_POLL_S)
-            except queue.Empty:
-                if self._closed.is_set():
+        with self._not_empty:
+            while True:
+                if self._dq:
+                    msg = self._dq.popleft()
+                    self._not_full.notify()
+                    return msg
+                if self._closed:
                     raise TransportClosed("recv on closed, drained transport")
-                if deadline is not None and time.monotonic() > deadline:
-                    raise TransportTimeout(f"recv idle > {timeout}s")
+                if deadline is None:
+                    self._not_empty.wait()
+                else:
+                    rest = deadline - time.monotonic()
+                    if rest <= 0:
+                        raise TransportTimeout(f"recv idle > {timeout}s")
+                    self._not_empty.wait(rest)
 
     def close(self) -> None:
-        self._closed.set()
+        with self._not_full:                 # shared lock with _not_empty
+            self._closed = True
+            self._not_full.notify_all()
+            self._not_empty.notify_all()
 
     def depth(self) -> int:
-        return self._q.qsize()
+        return len(self._dq)
+
+
+# ---------------------------------------------------------------------------
+# Delivery framing: envelopes, acks, payload checksums
+# ---------------------------------------------------------------------------
+
+# Envelope kinds. "result" carries a RoundResult (CRC-protected);
+# "error" carries a RoundError (re-raised server-side); "heartbeat" is
+# the liveness side-channel beacon (no payload, no ack).
+KIND_RESULT = "result"
+KIND_ERROR = "error"
+KIND_HEARTBEAT = "heartbeat"
+
+
+@dataclass(frozen=True)
+class Envelope:
+    """One framed transport message. Identity is ``(wid, generation,
+    seq)`` — ``seq`` is the sender's monotonic per-stream counter, so the
+    server can deduplicate at-least-once redeliveries. ``attempt`` counts
+    retries of the same frame and is NOT part of the identity (fault
+    injection keys off it so a retried frame draws fresh fault dice)."""
+    wid: int
+    generation: int
+    seq: int
+    kind: str
+    payload: Any
+    crc: int = 0
+    attempt: int = 0
+    sent_time: float = 0.0           # sender clock (diagnostics only)
+
+    @property
+    def key(self):
+        return (self.wid, self.generation, self.seq)
+
+
+@dataclass(frozen=True)
+class Ack:
+    """Server -> worker delivery receipt (per-worker side channel).
+    ``quarantined`` tells the sender to stop retrying: the server has
+    stopped accepting its frames (graceful degradation)."""
+    wid: int
+    generation: int
+    seq: int
+    quarantined: bool = False
+
+
+def payload_crc(payload: Any) -> int:
+    """CRC32 over the serialized pseudo-gradient payload: every leaf of
+    ``payload.delta`` (packed fp32 or decoded int8 round-trip) in pytree
+    order, host bytes. This is what a socket backend would checksum on
+    the wire; corrupt frames fail verification server-side and are never
+    folded into outer state."""
+    delta = getattr(payload, "delta", payload)
+    crc = 0
+    for leaf in jax.tree.leaves(delta):
+        crc = zlib.crc32(np.asarray(leaf).tobytes(), crc)
+    return crc
+
+
+@dataclass
+class AckWaiter:
+    """The worker half of the retry loop: a plain Condition-guarded
+    mailbox the server drops ``Ack``s into. Deliberately not a
+    ``Transport`` — acks are tiny, per-worker, and never backpressure."""
+    _acks: deque = field(default_factory=deque)
+    _cond: threading.Condition = field(default_factory=threading.Condition)
+    _closed: bool = False
+
+    def put(self, ack: Optional[Ack]) -> None:
+        with self._cond:
+            if ack is None:
+                self._closed = True
+            else:
+                self._acks.append(ack)
+            self._cond.notify_all()
+
+    def wait_for(self, env: Envelope, timeout: float) -> Optional[Ack]:
+        """Block until an ack matching ``env``'s identity arrives, the
+        mailbox closes (returns None), or ``timeout`` elapses (returns
+        None — caller retries). Stale acks for earlier frames are
+        discarded."""
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            while True:
+                while self._acks:
+                    ack = self._acks.popleft()
+                    if (ack.wid == env.wid
+                            and ack.generation == env.generation
+                            and ack.seq == env.seq):
+                        return ack
+                if self._closed:
+                    return None
+                rest = deadline - time.monotonic()
+                if rest <= 0:
+                    return None
+                self._cond.wait(rest)
+
+    def close(self) -> None:
+        self.put(None)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed

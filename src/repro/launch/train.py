@@ -32,8 +32,17 @@ import argparse
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.core import methods as outer_methods
 from repro.async_engine.engine import make_engine, make_eval_fn
+from repro.async_engine.faults import FaultSpec
 from repro.scenarios import registry
 from repro.scenarios.spec import Scenario
+
+# --chaos preset: the docs/faults.md lossy channel (chaos_lossy's fault
+# mix) keyed off the run seed — a quick way to smoke any wallclock run
+# against an unreliable delivery layer.
+def _chaos_faults(seed: int) -> FaultSpec:
+    return FaultSpec(drop_p=0.2, dup_p=0.1, reorder_p=0.2,
+                     delay_p=0.1, delay_s=0.01, ack_drop_p=0.05,
+                     seed=seed + 97)
 
 
 def scenario_from_args(args) -> Scenario:
@@ -57,7 +66,9 @@ def scenario_from_args(args) -> Scenario:
         method=args.method, outer_lr=outer_lr, momentum=args.momentum,
         compression=args.compression,
         drop_stale_after=args.drop_stale_after,
-        inner_lr=args.inner_lr, seed=args.seed)
+        inner_lr=args.inner_lr, seed=args.seed,
+        faults=(_chaos_faults(args.seed)
+                if getattr(args, "chaos", False) else None))
 
 
 def main():
@@ -110,7 +121,15 @@ def main():
     ap.add_argument("--pace-scale", type=float, default=0.0,
                     help="wallclock+free: wall seconds per virtual second "
                          "of worker pace (0 = no throttling)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="wallclock engine: inject the docs/faults.md "
+                         "lossy-channel preset (20%% drop, 10%% dup, 20%% "
+                         "reorder, delays, lost acks); the at-least-once "
+                         "delivery layer must absorb it")
     args = ap.parse_args()
+    if args.chaos and args.engine != "wallclock":
+        ap.error("--chaos needs --engine wallclock (the simulator has no "
+                 "transport to inject faults into)")
 
     if args.list_scenarios:
         for s in registry.all_scenarios():
@@ -155,6 +174,10 @@ def main():
               f"occupancy={s['server_occupancy']:.2f} "
               f"parallelism={s['compute_parallelism']:.2f} "
               f"overlap_max={s['overlap_max']}")
+        d = s.get("delivery", {})
+        if any(d.values()):
+            hot = {k: v for k, v in d.items() if v}
+            print(f"delivery: {hot}")
     if recorder is not None:
         path = recorder.write_jsonl(args.telemetry)
         t = recorder.summary()

@@ -7,6 +7,9 @@
 
 See docs/scenarios.md for the spec schema and the golden-trace workflow.
 """
+from repro.async_engine.faults import (       # noqa: F401
+    FaultSpec, PartitionSpec,
+)
 from repro.scenarios.spec import (            # noqa: F401
     ElasticSpec, FailureSpec, Materialized, METHOD_TABLE, Scenario,
 )

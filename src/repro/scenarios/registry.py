@@ -16,6 +16,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.async_engine.faults import FaultSpec, PartitionSpec
 from repro.scenarios.spec import ElasticSpec, FailureSpec, Scenario
 
 _REGISTRY: Dict[str, Scenario] = {}
@@ -180,3 +181,47 @@ register(Scenario(
     engine="wallclock", mode="free", pace_scale=0.02,
     n_workers=4, worker_paces=(1.0, 1.0, 2.0, 6.0),
     outer_steps=10, inner_steps=1))
+
+# -- chaos: unreliable delivery (docs/faults.md) ----------------------------
+# chaos_lossy / chaos_corrupt share wallclock_hetero's exact run config:
+# with at-least-once retries and idempotent commit, a deterministic-mode
+# run under drop/dup/reorder (or corruption) commits the IDENTICAL history
+# — their golden param digests must equal wallclock_hetero's.
+
+register(Scenario(
+    name="chaos_lossy",
+    description="wallclock_hetero under a lossy channel: 20% drop, 10% "
+                "duplicate, 20% reorder, delays and lost acks — the "
+                "delivery layer makes the committed history (and the "
+                "final param digest) identical to the fault-free twin.",
+    engine="wallclock", mode="deterministic",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=10, inner_steps=2,
+    faults=FaultSpec(drop_p=0.2, dup_p=0.1, reorder_p=0.2,
+                     delay_p=0.1, delay_s=0.01, ack_drop_p=0.05, seed=7)))
+
+register(Scenario(
+    name="chaos_corrupt",
+    description="wallclock_hetero under payload corruption: 25% of frames "
+                "arrive checksum-broken and are rejected (never folded "
+                "into outer state); retries redeliver clean copies, so "
+                "the digest still matches the fault-free twin.",
+    engine="wallclock", mode="deterministic",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=10, inner_steps=2,
+    faults=FaultSpec(corrupt_p=0.25, ack_drop_p=0.1, seed=11)))
+
+register(Scenario(
+    name="chaos_partition",
+    description="Free-running runtime with a network partition: worker 3 "
+                "is black-holed from t=2 on the virtual clock, heartbeats "
+                "stop, the liveness monitor routes it through the crash "
+                "machinery, and the survivors finish the run "
+                "(tolerance-banded golden).",
+    engine="wallclock", mode="free", pace_scale=0.02,
+    n_workers=4, worker_paces=(1.0, 1.0, 2.0, 6.0),
+    outer_steps=10, inner_steps=1,
+    faults=FaultSpec(drop_p=0.05, seed=13,
+                     partitions=(PartitionSpec(start=2.0, end=1e9,
+                                               wids=(3,)),),
+                     heartbeat_interval=0.05, liveness_misses=3)))

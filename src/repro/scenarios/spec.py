@@ -18,6 +18,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.async_engine.faults import FaultSpec
 from repro.configs import get_config, reduced
 from repro.configs.base import (
     HeLoCoConfig, InnerOptConfig, OuterOptConfig, RunConfig,
@@ -107,6 +108,8 @@ class Scenario:
     # -- failure / elastic schedules ------------------------------------------
     failures: Tuple[FailureSpec, ...] = ()
     elastic: Tuple[ElasticSpec, ...] = ()
+    # -- unreliable delivery (chaos scenarios; wallclock engine only) ---------
+    faults: Optional[FaultSpec] = None
     # -- eval / reproducibility ----------------------------------------------
     eval_every: int = 0              # 0 -> outer_steps // 4 (min 1)
     eval_batch: int = 8
@@ -120,6 +123,13 @@ class Scenario:
         object.__setattr__(self, "method",
                            outer_methods.canonical(self.method))
         assert self.n_workers >= 1 and self.worker_paces
+        if self.faults is not None:
+            # the simulator has no transport to inject faults into, and
+            # partition windows live on the free-running virtual clock
+            assert self.engine == "wallclock", \
+                f"faults need engine='wallclock', got {self.engine!r}"
+            assert not self.faults.partitions or self.mode == "free", \
+                "partition windows require mode='free'"
 
     # ------------------------------------------------------------ properties
     @property
@@ -193,6 +203,8 @@ class Scenario:
         engine_kw: Dict[str, Any] = {}
         if self.engine == "wallclock":
             engine_kw = dict(mode=self.mode, pace_scale=self.pace_scale)
+            if self.faults is not None:
+                engine_kw["faults"] = self.faults
         failures = [FailureEvent(time=f.time, wid=f.wid,
                                  restart_delay=f.restart_delay)
                     for f in self.failures]
@@ -221,7 +233,14 @@ class Scenario:
 
     # ------------------------------------------------------------------ json
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # fault-free scenario dicts are identical to their pre-faults form
+        # (recorded goldens compare the scenario dict byte-for-byte)
+        if self.faults is None:
+            d.pop("faults")
+        else:
+            d["faults"] = self.faults.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Scenario":
@@ -230,4 +249,6 @@ class Scenario:
         d["heloco"] = HeLoCoConfig(**d.get("heloco", {}))
         d["failures"] = tuple(FailureSpec(**f) for f in d.get("failures", ()))
         d["elastic"] = tuple(ElasticSpec(**e) for e in d.get("elastic", ()))
+        if d.get("faults") is not None:
+            d["faults"] = FaultSpec.from_dict(d["faults"])
         return cls(**d)

@@ -69,6 +69,16 @@ class TelemetryRecorder:
             per_lang={k: float(v) for k, v in ev.get("per_lang",
                                                      {}).items()}))
 
+    def record_fault(self, *, event: str, wid: int = -1, seq: int = -1,
+                     generation: int = -1, detail=None) -> None:
+        """One delivery-protocol event (checksum reject, dedup,
+        quarantine, liveness transition, end-of-run counter summary)."""
+        self.records.append(schema.FaultMetrics(
+            event=event, wall_time=self.wall(), wid=int(wid), seq=int(seq),
+            generation=int(generation),
+            detail=None if detail is None
+            else {k: float(v) for k, v in detail.items()}))
+
     # -------------------------------------------------------------- queries
     def arrivals(self) -> List[schema.ArrivalMetrics]:
         return [r for r in self.records
@@ -76,6 +86,9 @@ class TelemetryRecorder:
 
     def evals(self) -> List[schema.EvalMetrics]:
         return [r for r in self.records if isinstance(r, schema.EvalMetrics)]
+
+    def faults(self) -> List[schema.FaultMetrics]:
+        return [r for r in self.records if isinstance(r, schema.FaultMetrics)]
 
     def __len__(self) -> int:
         return len(self.records)

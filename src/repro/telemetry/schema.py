@@ -1,13 +1,16 @@
 """Typed schema of the telemetry stream.
 
 A stream is a JSONL file: one ``{"kind": ..., ...}`` object per line.
-Three record kinds:
+Four record kinds:
 
   meta      one per stream (first line): what produced it;
   arrival   one per committed outer step: scheduling facts (worker,
             staleness, rho, sim/wall time, language/mixture, dropped)
             plus the update-quality stats of ``repro.telemetry.stats``;
-  eval      one per evaluation: mean + per-language validation loss.
+  eval      one per evaluation: mean + per-language validation loss;
+  fault     one per delivery-protocol event on the wall-clock runtime
+            (checksum reject, dedup, quarantine, liveness transition) and
+            one end-of-run "summary" carrying the delivery counters.
 
 Records are frozen dataclasses; ``to_json_line``/``from_json_line``
 round-trip them. Unknown keys in a line are rejected loudly (schema
@@ -21,7 +24,8 @@ import json
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple, Union
 
-SCHEMA_VERSION = 1
+# v2: added the "fault" record kind (delivery-robustness events)
+SCHEMA_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -71,10 +75,26 @@ class EvalMetrics:
     per_lang: Dict[str, float] = field(default_factory=dict)
 
 
-Record = Union[RunMeta, ArrivalMetrics, EvalMetrics]
+@dataclass(frozen=True)
+class FaultMetrics:
+    """One delivery-protocol event (wall-clock runtime under an
+    unreliable channel — see docs/faults.md). ``event`` vocabulary:
+    checksum_reject | dedup | quarantine | liveness_dead |
+    liveness_revive | summary. Frame identity fields are -1 when the
+    event is not tied to a specific frame; ``detail`` carries the
+    delivery counters for the end-of-run "summary" event."""
+    event: str
+    wall_time: float
+    wid: int = -1
+    seq: int = -1
+    generation: int = -1
+    detail: Optional[Dict[str, float]] = None
+
+
+Record = Union[RunMeta, ArrivalMetrics, EvalMetrics, FaultMetrics]
 
 KINDS: Dict[str, type] = {"meta": RunMeta, "arrival": ArrivalMetrics,
-                          "eval": EvalMetrics}
+                          "eval": EvalMetrics, "fault": FaultMetrics}
 _KIND_OF = {cls: kind for kind, cls in KINDS.items()}
 
 

@@ -1,0 +1,303 @@
+"""Delivery-robustness layer: deterministic fault dice, FaultyTransport
+injection semantics, at-least-once bookkeeping (DeliveryTracker), payload
+checksums, the `fault` telemetry record, and the Scenario.faults axis.
+
+Pure unit tests (no training runs) — tier-1."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.async_engine.faults import (
+    DELIVERY_COUNTERS, DeliveryTracker, FaultSpec, FaultyTransport,
+    PartitionSpec,
+)
+from repro.async_engine.transport import (
+    Ack, AckWaiter, Envelope, InProcTransport, KIND_HEARTBEAT, KIND_RESULT,
+    payload_crc,
+)
+from repro.scenarios import Scenario, get_scenario, names
+from repro.telemetry import TelemetryRecorder, schema
+
+
+@dataclasses.dataclass
+class FakeResult:
+    """Duck-types the .delta payload_crc checksums."""
+    delta: object
+
+
+def env_for(seq, *, wid=0, gen=0, kind=KIND_RESULT, payload=None, crc=None,
+            attempt=0):
+    payload = payload if payload is not None else FakeResult(
+        {"w": np.arange(4, dtype=np.float32) + seq})
+    if crc is None:
+        crc = payload_crc(payload)
+    return Envelope(wid=wid, generation=gen, seq=seq, kind=kind,
+                    payload=payload, crc=crc, attempt=attempt)
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec: deterministic dice
+# ---------------------------------------------------------------------------
+
+def test_fault_dice_deterministic_and_rate():
+    a = FaultSpec(drop_p=0.3, seed=1)
+    b = FaultSpec(drop_p=0.3, seed=1)
+    keys = [(w, s, t) for w in range(4) for s in range(300) for t in range(2)]
+    da = [a.drops(*k) for k in keys]
+    assert da == [b.drops(*k) for k in keys]     # pure function of the key
+    rate = sum(da) / len(da)
+    assert 0.25 < rate < 0.35, rate
+    # independent streams: a retried frame draws fresh dice
+    assert any(a.drops(w, s, 0) != a.drops(w, s, 1)
+               for w in range(4) for s in range(50))
+    # different seeds give different patterns
+    c = FaultSpec(drop_p=0.3, seed=2)
+    assert da != [c.drops(*k) for k in keys]
+
+
+def test_fault_types_roll_independent_dice():
+    spec = FaultSpec(drop_p=0.5, dup_p=0.5, seed=3)
+    keys = [(0, s, 0) for s in range(200)]
+    drops = [spec.drops(*k) for k in keys]
+    dups = [spec.duplicates(*k) for k in keys]
+    assert drops != dups                          # distinct stream salts
+
+
+def test_retry_jitter_bounded_and_deterministic():
+    spec = FaultSpec(seed=9)
+    js = [spec.retry_jitter(0, s, t) for s in range(100) for t in range(3)]
+    assert all(0.0 <= j < 0.25 for j in js)
+    assert len(set(js)) > 50                      # actually varies
+    assert js == [FaultSpec(seed=9).retry_jitter(0, s, t)
+                  for s in range(100) for t in range(3)]
+
+
+def test_partition_spec_covers():
+    p = PartitionSpec(start=1.0, end=2.0, wids=(1, 3))
+    assert p.covers(1, 1.5) and p.covers(3, 1.0)
+    assert not p.covers(2, 1.5)                   # other wid
+    assert not p.covers(1, 2.0)                   # end-exclusive
+    everyone = PartitionSpec(start=0.0, end=1.0)
+    assert everyone.covers(7, 0.5)
+    spec = FaultSpec(partitions=(p,))
+    assert spec.in_partition(3, 1.2) and not spec.in_partition(3, 5.0)
+
+
+def test_fault_spec_json_round_trip():
+    spec = FaultSpec(drop_p=0.2, corrupt_p=0.1, corrupt_wids=(1, 2),
+                     partitions=(PartitionSpec(0.5, 2.5, wids=(0,)),),
+                     seed=4, heartbeat_interval=0.1, quarantine_after=3)
+    back = FaultSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+
+
+# ---------------------------------------------------------------------------
+# FaultyTransport injection semantics
+# ---------------------------------------------------------------------------
+
+def test_faulty_transport_drops_only_envelopes():
+    inner = InProcTransport(capacity=16)
+    tr = FaultyTransport(inner, FaultSpec(drop_p=1.0, seed=0))
+    tr.send(env_for(1))
+    tr.send("not-an-envelope")                    # non-frames pass through
+    assert tr.counters["injected_drops"] == 1
+    assert tr.recv(timeout=0.5) == "not-an-envelope"
+    assert tr.depth() == 0
+
+
+def test_faulty_transport_duplicates_and_dedup():
+    inner = InProcTransport(capacity=16)
+    tr = FaultyTransport(inner, FaultSpec(dup_p=1.0, seed=0))
+    tr.send(env_for(1))
+    got = [tr.recv(timeout=0.5), tr.recv(timeout=0.5)]
+    assert [g.seq for g in got] == [1, 1]
+    tracker = DeliveryTracker()
+    assert tracker.process(got[0]).status == "accept"
+    v = tracker.process(got[1])
+    assert v.status == "dup" and v.ack            # redelivery is re-acked
+    assert tracker.counters["redelivered_deduped"] == 1
+
+
+def test_faulty_transport_adjacent_swap_reorder_and_close_flush():
+    inner = InProcTransport(capacity=16)
+    tr = FaultyTransport(inner, FaultSpec(reorder_p=1.0, seed=0))
+    tr.send(env_for(1))                           # shelved
+    assert inner.depth() == 0
+    tr.send(env_for(2))                           # releases the shelf after
+    got = [tr.recv(timeout=0.5).seq for _ in range(2)]
+    assert got == [2, 1]                          # FIFO broken by one swap
+    tr.send(env_for(3))                           # shelved again
+    tr.close()                                    # flush: frame not lost
+    assert tr.counters["injected_reorders"] == 2
+    assert inner.recv(timeout=0.5).seq == 3
+
+
+def test_faulty_transport_corrupts_copy_not_sender():
+    inner = InProcTransport(capacity=16)
+    tr = FaultyTransport(inner, FaultSpec(corrupt_p=1.0, seed=0))
+    env = env_for(1)
+    tr.send(env)
+    wire = tr.recv(timeout=0.5)
+    assert wire.crc != env.crc                    # corrupted on the wire
+    assert env.crc == payload_crc(env.payload)    # sender's frame pristine
+    v = DeliveryTracker().process(wire)
+    assert v.status == "reject" and not v.ack     # no ack -> sender retries
+    # heartbeats carry no checksummed payload: never corrupted
+    hb = env_for(2, kind=KIND_HEARTBEAT, payload=None, crc=0)
+    tr.send(hb)
+    assert tr.recv(timeout=0.5).crc == 0
+
+
+def test_partition_window_requires_clock():
+    spec = FaultSpec(partitions=(PartitionSpec(0.0, 1.0),))
+    with pytest.raises(ValueError):
+        FaultyTransport(InProcTransport(4), spec)
+    t = [0.5]
+    tr = FaultyTransport(InProcTransport(4), spec, clock=lambda: t[0])
+    tr.send(env_for(1))
+    assert tr.counters["partition_drops"] == 1
+    t[0] = 2.0                                    # window over: heals
+    tr.send(env_for(1, attempt=1))
+    assert tr.recv(timeout=0.5).seq == 1
+
+
+# ---------------------------------------------------------------------------
+# DeliveryTracker: dedup, rejection, quarantine
+# ---------------------------------------------------------------------------
+
+def test_tracker_dedup_is_per_stream_high_water():
+    tr = DeliveryTracker()
+    assert tr.process(env_for(1)).status == "accept"
+    assert tr.process(env_for(2)).status == "accept"
+    assert tr.process(env_for(2)).status == "dup"     # redelivery
+    assert tr.process(env_for(1)).status == "dup"     # late reordered copy
+    # a generation bump outranks the seq high-water
+    assert tr.process(env_for(3, gen=1)).status == "accept"
+    assert tr.process(env_for(3, gen=0)).status == "dup"
+    # an independent worker stream is unaffected
+    assert tr.process(env_for(1, wid=5)).status == "accept"
+    # a restarted thread starts a fresh stream
+    tr.reset_stream(0)
+    assert tr.process(env_for(1)).status == "accept"
+
+
+def test_tracker_quarantines_after_consecutive_corruption():
+    tr = DeliveryTracker(quarantine_after=3)
+    bad = lambda seq: env_for(seq, crc=12345)         # wrong checksum
+    assert tr.process(bad(1)).status == "reject"
+    assert tr.process(bad(2)).status == "reject"
+    v = tr.process(bad(3))                            # third consecutive
+    assert v.status == "reject" and v.quarantine and v.ack
+    assert 0 in tr.quarantined
+    assert tr.counters["quarantines"] == 1
+    assert tr.counters["checksum_rejects"] == 3
+    # everything from a quarantined worker is acked-and-discarded
+    v = tr.process(env_for(4))
+    assert v.status == "reject" and v.ack and v.quarantine
+
+
+def test_tracker_clean_frame_resets_corruption_streak():
+    tr = DeliveryTracker(quarantine_after=2)
+    assert tr.process(env_for(1, crc=1)).status == "reject"
+    assert tr.process(env_for(1)).status == "accept"  # clean retry
+    assert tr.process(env_for(2, crc=1)).status == "reject"
+    assert not tr.quarantined                         # streak was broken
+    assert all(k in tr.counters for k in DELIVERY_COUNTERS)
+
+
+def test_payload_crc_sensitive_to_values():
+    a = FakeResult({"w": np.ones(8, np.float32)})
+    b = FakeResult({"w": np.ones(8, np.float32)})
+    assert payload_crc(a) == payload_crc(b)
+    b.delta["w"][3] = 2.0
+    assert payload_crc(a) != payload_crc(b)
+
+
+def test_ack_waiter_matches_discards_and_closes():
+    w = AckWaiter()
+    env = env_for(5)
+    w.put(Ack(wid=0, generation=0, seq=4))            # stale: discarded
+    w.put(Ack(wid=0, generation=0, seq=5))
+    ack = w.wait_for(env, timeout=0.5)
+    assert ack is not None and ack.seq == 5
+    assert w.wait_for(env, timeout=0.05) is None      # timeout path
+    assert not w.closed
+    w.close()
+    assert w.wait_for(env, timeout=0.05) is None and w.closed
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: the `fault` record kind (schema v2)
+# ---------------------------------------------------------------------------
+
+def test_schema_v2_fault_record_round_trip():
+    assert schema.SCHEMA_VERSION == 2
+    rec = schema.FaultMetrics(event="checksum_reject", wall_time=1.5,
+                              wid=2, seq=7, generation=1)
+    back = schema.from_json_line(schema.to_json_line(rec))
+    assert back == rec
+    summary = schema.FaultMetrics(event="summary", wall_time=9.0,
+                                  detail={"retries": 3.0})
+    assert schema.from_json_line(schema.to_json_line(summary)) == summary
+    with pytest.raises(ValueError):
+        schema.from_json_line('{"kind": "fault", "event": "x", '
+                              '"wall_time": 0.0, "bogus": 1}')
+
+
+def test_recorder_fault_records_and_jsonl(tmp_path):
+    rec = TelemetryRecorder()
+    rec.ensure_meta(method="heloco", engine="wallclock", n_workers=2,
+                    outer_steps=4, seed=0)
+    rec.record_fault(event="dedup", wid=1, seq=3, generation=0)
+    rec.record_fault(event="summary", detail={"retries": 2, "quarantines": 0})
+    assert [f.event for f in rec.faults()] == ["dedup", "summary"]
+    path = str(tmp_path / "t.jsonl")
+    rec.write_jsonl(path)
+    back = TelemetryRecorder.read_jsonl(path)
+    assert back.meta.schema_version == 2
+    assert [f.event for f in back.faults()] == ["dedup", "summary"]
+    assert back.faults()[1].detail == {"retries": 2.0, "quarantines": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# Scenario axis
+# ---------------------------------------------------------------------------
+
+def test_scenario_faults_round_trip_and_materialize():
+    scn = Scenario(name="t", engine="wallclock",
+                   faults=FaultSpec(drop_p=0.2, seed=7))
+    assert Scenario.from_dict(json.loads(json.dumps(scn.to_dict()))) == scn
+    m = scn.materialize()
+    assert m.engine_kw["faults"] == scn.faults
+
+
+def test_scenario_to_dict_omits_faults_when_none():
+    # recorded goldens compare the scenario dict byte-for-byte: the new
+    # axis must be invisible on every pre-existing (fault-free) scenario
+    d = Scenario(name="t").to_dict()
+    assert "faults" not in d
+    assert Scenario.from_dict(d).faults is None
+
+
+def test_scenario_rejects_bad_fault_combinations():
+    with pytest.raises(AssertionError):
+        Scenario(name="t", engine="sim", faults=FaultSpec(drop_p=0.1))
+    with pytest.raises(AssertionError):
+        Scenario(name="t", engine="wallclock", mode="deterministic",
+                 faults=FaultSpec(partitions=(PartitionSpec(0.0, 1.0),)))
+
+
+def test_chaos_scenarios_registered():
+    for name in ("chaos_lossy", "chaos_partition", "chaos_corrupt"):
+        assert name in names()
+        scn = get_scenario(name)
+        assert scn.engine == "wallclock" and scn.faults is not None
+    lossy = get_scenario("chaos_lossy")
+    twin = get_scenario("wallclock_hetero")
+    # the digest-identity claim only holds if the twins share the exact
+    # run config — everything but the fault axis
+    assert lossy.run_config() == twin.run_config()
+    assert get_scenario("chaos_corrupt").run_config() == twin.run_config()
+    assert get_scenario("chaos_partition").mode == "free"

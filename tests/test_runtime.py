@@ -18,11 +18,13 @@ from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
 from repro.async_engine.engine import (
     ElasticEvent, FailureEvent, make_engine,
 )
+from repro.async_engine.faults import FaultSpec, PartitionSpec
 from repro.async_engine.runtime import ConcurrentRuntime
 from repro.async_engine.simulator import AsyncSimulator
 from repro.async_engine.transport import (
     InProcTransport, TransportClosed, TransportTimeout,
 )
+from repro.checkpoint import ckpt as _ckpt
 
 
 def tiny_run(method="heloco", **kw):
@@ -102,6 +104,51 @@ def test_transport_close_wakes_blocked_sender_and_receiver():
         tr.recv(timeout=1.0)
     with pytest.raises(TransportTimeout):
         InProcTransport(capacity=1).recv(timeout=0.05)
+
+
+def test_transport_send_timeout_when_full_exact_deadline():
+    tr = InProcTransport(capacity=1)
+    tr.send(0)
+    t0 = time.monotonic()
+    with pytest.raises(TransportTimeout):
+        tr.send(1, timeout=0.2)
+    waited = time.monotonic() - t0
+    # Condition-based deadlines are exact, not quantized to a poll tick
+    assert 0.18 <= waited < 0.6, waited
+    assert tr.depth() == 1               # the timed-out message was not queued
+    assert tr.recv(timeout=0.5) == 0
+
+
+def test_transport_recv_timeout_when_idle_exact_deadline():
+    tr = InProcTransport(capacity=4)
+    t0 = time.monotonic()
+    with pytest.raises(TransportTimeout):
+        tr.recv(timeout=0.2)
+    waited = time.monotonic() - t0
+    assert 0.18 <= waited < 0.6, waited
+    tr.send("late")
+    assert tr.recv(timeout=0.5) == "late"
+
+
+def test_transport_close_wakes_blocked_receiver():
+    tr = InProcTransport(capacity=1)
+    errs = []
+
+    def blocked_recv():
+        try:
+            tr.recv(timeout=10.0)
+        except TransportClosed as e:
+            errs.append(e)
+
+    t = threading.Thread(target=blocked_recv, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    assert t.is_alive()                  # parked in recv(), no message yet
+    tr.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and len(errs) == 1
+    with pytest.raises(TransportClosed):
+        tr.send(1)
 
 
 # ---------------------------------------------------------------------------
@@ -263,3 +310,146 @@ def test_free_running_crash_rejoin_and_elastic():
     # crashed worker's generation advanced: its lost round never committed
     w0 = [a for a in hist.arrivals if a["worker_id"] == 0]
     assert all(not a["dropped"] for a in w0)
+
+
+# ---------------------------------------------------------------------------
+# Unreliable delivery: at-least-once retry, idempotent commit, liveness
+# ---------------------------------------------------------------------------
+
+def chaos_run(rc, faults, **kw):
+    rt = ConcurrentRuntime(rc, faults=faults, **kw)
+    hist = rt.run()
+    return rt, hist
+
+
+def test_chaos_deterministic_identical_to_fault_free_twin():
+    """The dedup+retry correctness claim: drop/dup/reorder/delay/ack-loss
+    change latency and delivery counters, never the committed history or
+    the final parameters (bitwise)."""
+    rc = tiny_run(n_workers=4, outer_steps=10, inner_steps=2,
+                  worker_paces=(1.0, 2.0, 6.0, 15.0))
+    clean = ConcurrentRuntime(rc)
+    h_clean = clean.run()
+    faults = FaultSpec(drop_p=0.2, dup_p=0.1, reorder_p=0.2,
+                       delay_p=0.1, delay_s=0.005, ack_drop_p=0.05, seed=7)
+    rt, hist = chaos_run(rc, faults)
+    assert arrival_keys(hist) == arrival_keys(h_clean)
+    assert hist.tokens == h_clean.tokens
+    assert hist.comm_bytes == h_clean.comm_bytes
+    assert_params_close(clean, rt, rtol=0, atol=0)        # bitwise
+    d = rt.stats_summary()["delivery"]
+    assert d["injected_drops"] + d["injected_dups"] \
+        + d["injected_reorders"] > 0, d
+    assert d["retries"] > 0 and d["redelivered_deduped"] > 0, d
+    clean_d = clean.stats_summary()["delivery"]
+    assert all(v == 0 for v in clean_d.values()), clean_d  # fault-free: quiet
+
+
+def test_chaos_corruption_rejected_then_redelivered_clean():
+    rc = tiny_run(outer_steps=8)
+    clean = ConcurrentRuntime(rc)
+    h_clean = clean.run()
+    rt, hist = chaos_run(rc, FaultSpec(corrupt_p=0.3, ack_drop_p=0.1,
+                                       seed=11))
+    assert arrival_keys(hist) == arrival_keys(h_clean)
+    assert_params_close(clean, rt, rtol=0, atol=0)
+    d = rt.stats_summary()["delivery"]
+    assert d["checksum_rejects"] > 0, d     # corrupt frames never committed
+
+
+def test_chaos_quarantine_degrades_gracefully_in_free_mode():
+    rc = tiny_run(n_workers=3, outer_steps=8, inner_steps=1,
+                  worker_paces=(1.0, 1.0, 2.0))
+    faults = FaultSpec(corrupt_p=1.0, corrupt_wids=(1,), quarantine_after=3,
+                       seed=5)
+    rt, hist = chaos_run(rc, faults, mode="free", pace_scale=0.02)
+    assert len(hist.arrivals) == 8          # survivors finish the run
+    assert all(a["worker_id"] != 1 for a in hist.arrivals)
+    d = rt.stats_summary()["delivery"]
+    assert d["quarantines"] == 1 and d["checksum_rejects"] >= 3, d
+
+
+def test_partition_liveness_death_and_revival():
+    """A partitioned worker's heartbeats stop -> liveness declares it dead
+    (generation bump: its in-flight round is lost); when the partition
+    heals, the returning beacon revives it through the rejoin machinery
+    and it contributes again."""
+    rc = tiny_run(n_workers=3, outer_steps=14, inner_steps=1,
+                  worker_paces=(1.0, 1.0, 1.0))
+    faults = FaultSpec(
+        seed=13, partitions=(PartitionSpec(start=0.5, end=4.0, wids=(2,)),),
+        heartbeat_interval=0.05, liveness_misses=2,
+        ack_timeout=0.1, max_backoff=0.2)
+    rt, hist = chaos_run(rc, faults, mode="free", pace_scale=0.2)
+    assert len(hist.arrivals) == 14
+    d = rt.stats_summary()["delivery"]
+    assert d["liveness_deaths"] >= 1, d
+    assert d["heartbeat_misses"] >= 2, d
+    assert d["liveness_revivals"] >= 1, d
+    # the revived worker contributed after the partition healed
+    late = [a for a in hist.arrivals if a["worker_id"] == 2
+            and a["sim_time"] > 4.0]
+    assert late, [a for a in hist.arrivals if a["worker_id"] == 2]
+
+
+def test_partitions_rejected_in_deterministic_mode():
+    rc = tiny_run(outer_steps=4)
+    faults = FaultSpec(partitions=(PartitionSpec(0.0, 1.0),))
+    with pytest.raises(ValueError):
+        ConcurrentRuntime(rc, faults=faults)
+
+
+def test_kill_server_and_resume_same_arrival_accounting(tmp_path):
+    """Kill-and-resume recovery: request_stop mid-run, checkpoint-restore
+    in a fresh runtime, and the combined arrival accounting matches an
+    uninterrupted run — under a lossy channel."""
+    rc = tiny_run(outer_steps=8)
+    faults = FaultSpec(drop_p=0.2, dup_p=0.1, reorder_p=0.2, seed=7)
+    rt = ConcurrentRuntime(rc, faults=faults)
+
+    def kill_after_two_commits():
+        while rt.server.t < 2:
+            time.sleep(0.02)
+        rt.request_stop()
+
+    killer = threading.Thread(target=kill_after_two_commits, daemon=True)
+    killer.start()
+    h1 = rt.run(ckpt_every=1, ckpt_dir=str(tmp_path))
+    killer.join(timeout=5.0)
+    assert 2 <= rt.server.t <= 8
+    assert rt.server.t == len(h1.arrivals)
+    rt2 = ConcurrentRuntime(rc, faults=faults)
+    rt2.restore(_ckpt.latest(str(tmp_path)))
+    assert rt2.restored_arrivals == rt2.server.t
+    h2 = rt2.run()
+    assert rt2.server.t == 8
+    assert rt2.restored_arrivals + len(h2.arrivals) == 8
+
+
+def test_synchronizer_commit_is_idempotent():
+    """Defense-in-depth below the delivery layer: a replayed commit key
+    can never double-step outer state."""
+    rc = tiny_run(outer_steps=2)
+    rt = ConcurrentRuntime(rc)
+    rt.run()
+    srv = rt.server
+    t_before = srv.t
+    delta = jax.tree.map(np.zeros_like, jax.tree.map(np.asarray,
+                                                     srv.state.params))
+    rec1 = srv.on_arrival(delta, s_i=t_before, worker_id=0,
+                          commit_key=(0, 0, 99))
+    rec2 = srv.on_arrival(delta, s_i=t_before, worker_id=0,
+                          commit_key=(0, 0, 99))
+    assert rec2 is rec1                     # replay returns the original
+    assert srv.t == t_before + 1            # exactly one outer step
+
+
+def test_heartbeats_do_not_perturb_free_run_stats():
+    """Liveness enabled on a healthy channel: beacons flow, nobody dies."""
+    rc = tiny_run(n_workers=3, outer_steps=6, inner_steps=1,
+                  worker_paces=(1.0, 1.0, 2.0))
+    faults = FaultSpec(seed=1, heartbeat_interval=0.05, liveness_misses=50)
+    rt, hist = chaos_run(rc, faults, mode="free", pace_scale=0.02)
+    assert len(hist.arrivals) == 6
+    d = rt.stats_summary()["delivery"]
+    assert d["liveness_deaths"] == 0, d
