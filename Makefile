@@ -11,7 +11,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 .PHONY: verify verify-ci test test-slow test-wallclock bench bench-full \
 	bench-runtime bench-check bench-check-arrival bench-check-runtime \
 	bench-report smoke-wallclock scenarios scenarios-sim \
-	scenarios-wallclock record-goldens sweep-smoke chaos
+	scenarios-wallclock record-goldens sweep-smoke chaos console-smoke
 
 verify:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
@@ -106,6 +106,23 @@ chaos:
 # (re)generate the committed golden traces after an intentional change
 record-goldens:
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run record --all
+
+# observability smoke (docs/observability.md): a free-running chaos run
+# streams telemetry live to disk while exporting trace spans and a
+# stats-summary JSON; then the operator console renders a headless
+# snapshot of the stream and the trace is validated as well-formed
+# Chrome trace-event JSON (Perfetto-loadable).
+console-smoke:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.launch.train --arch tinygpt-15m \
+		--smoke --engine wallclock --free --pace-scale 0.02 --chaos \
+		--paces 1,1,2,6 --workers 4 --outer 6 --inner 1 \
+		--batch 2 --seq 16 --eval-every 3 \
+		--telemetry results/obs/console_smoke.jsonl --telemetry-every 1 \
+		--trace results/obs/console_smoke.trace.json \
+		--stats-json results/obs/console_smoke.stats.json
+	$(PYTHON) -m repro.obs console results/obs/console_smoke.jsonl --once
+	$(PYTHON) -m repro.obs trace --validate \
+		results/obs/console_smoke.trace.json
 
 # tiny end-to-end wallclock-engine training run (CI smoke)
 smoke-wallclock:

@@ -47,6 +47,7 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.configs.base import RunConfig
 from repro.core.compression import roundtrip_with_error_feedback
+from repro.obs.spans import NULL_TRACER
 from repro.async_engine.server import Synchronizer
 from repro.data.synthetic import (
     ShardSampler, eval_batches, make_language_specs, mixture_weights,
@@ -216,7 +217,8 @@ class EngineBase:
     def __init__(self, run_cfg: RunConfig, *,
                  failures: Optional[List[FailureEvent]] = None,
                  elastic: Optional[List[ElasticEvent]] = None,
-                 telemetry=None):
+                 telemetry=None, tracer=None,
+                 runtime_record_every: int = 0):
         self.cfg = run_cfg
         self.model = build_model(run_cfg.model)
         self.specs = make_language_specs(run_cfg.model.vocab_size,
@@ -227,8 +229,13 @@ class EngineBase:
         # telemetry: a repro.telemetry.TelemetryRecorder (or None). The
         # synchronizer then emits update-quality stats from the same fused
         # sweeps (zero extra launches); the engine streams arrival/eval
-        # records into the recorder at commit time.
+        # records into the recorder at commit time, plus a periodic
+        # "runtime" health snapshot every `runtime_record_every` commits.
+        # tracer: a repro.obs.spans.SpanTracer (or None -> shared no-op)
+        # timing worker rounds / commits / evals as Chrome trace spans.
         self.telemetry = telemetry
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.runtime_record_every = int(runtime_record_every or 0)
         self.server = Synchronizer(init_params, run_cfg.outer,
                                    run_cfg.n_workers,
                                    telemetry=telemetry is not None)
@@ -346,21 +353,25 @@ class EngineBase:
         engine state — safe to call from any thread, results of a lost
         (crashed-generation) round can be discarded without side effects."""
         t0 = _time.perf_counter()
-        sampler = ShardSampler(self.specs, task.lang, self.cfg.batch_size,
-                               self.cfg.seq_len,
-                               seed=self.cfg.seed * 977 + task.wid,
-                               mixture=task.mixture)
-        result = run_inner(self.model, self.cfg.inner, task.params, task.opt,
-                           sampler, task.h_steps,
-                           step_offset=task.inner_step_offset)
-        delta = pseudo_gradient(task.params, result.params)
+        with self.tracer.span("worker_round", cat="compute", wid=task.wid,
+                              s_i=task.s_i, h=task.h_steps):
+            sampler = ShardSampler(self.specs, task.lang,
+                                   self.cfg.batch_size, self.cfg.seq_len,
+                                   seed=self.cfg.seed * 977 + task.wid,
+                                   mixture=task.mixture)
+            result = run_inner(self.model, self.cfg.inner, task.params,
+                               task.opt, sampler, task.h_steps,
+                               step_offset=task.inner_step_offset)
+            delta = pseudo_gradient(task.params, result.params)
         # int8 rides the server's packed layout: per-block scales, O(1)
         # kernel launches, and a packed error-feedback buffer per worker.
         layout = (self.server.layout
                   if self.cfg.outer.compression == "int8" else None)
-        decoded, ef, nbytes = roundtrip_with_error_feedback(
-            delta, task.ef, self.cfg.outer.compression,
-            self.cfg.outer.topk_ratio, layout=layout)
+        with self.tracer.span("compress_roundtrip", cat="compute",
+                              wid=task.wid):
+            decoded, ef, nbytes = roundtrip_with_error_feedback(
+                delta, task.ef, self.cfg.outer.compression,
+                self.cfg.outer.topk_ratio, layout=layout)
         if not self.cfg.outer.error_feedback:
             ef = None
         return RoundResult(
@@ -386,10 +397,12 @@ class EngineBase:
 
     def _commit(self, w: Worker, res: RoundResult):
         self._commit_worker(w, res)
-        rec = self.server.on_arrival(
-            res.delta, res.s_i, res.wid, sim_time=self.time,
-            lang=(self.specs[res.lang].lang
-                  if res.lang is not None else "iid"))
+        with self.tracer.span("server_commit", cat="server", wid=res.wid,
+                              s_i=res.s_i):
+            rec = self.server.on_arrival(
+                res.delta, res.s_i, res.wid, sim_time=self.time,
+                lang=(self.specs[res.lang].lang
+                      if res.lang is not None else "iid"))
         self.history.arrivals.append(rec.__dict__)
         if self.telemetry is not None:
             self.telemetry.record_arrival(rec, mixture=w.mixture,
@@ -399,21 +412,52 @@ class EngineBase:
     def _post_commit(self, eval_every, eval_fn, ckpt_every, ckpt_dir):
         t = self.server.t
         if eval_every and eval_fn and t % eval_every == 0:
-            ev = eval_fn(self.server.state.params, t, self.time)
+            with self.tracer.span("eval", cat="eval", step=t):
+                ev = eval_fn(self.server.state.params, t, self.time)
             self.history.evals.append(ev)
             if self.telemetry is not None:
                 self.telemetry.record_eval(ev)
         if ckpt_every and ckpt_dir and t % ckpt_every == 0:
-            self.checkpoint(ckpt_dir)
+            with self.tracer.span("checkpoint", cat="ckpt", step=t):
+                self.checkpoint(ckpt_dir)
+        if (self.telemetry is not None and self.runtime_record_every
+                and len(self.history.arrivals)
+                % self.runtime_record_every == 0):
+            self._record_runtime()
+
+    # ----------------------------------------------- runtime health records
+    def _runtime_snapshot(self) -> Dict:
+        """Worker-membership health view; the concurrent runtime overrides
+        this to add occupancy/parallelism/queue/liveness/delivery from its
+        live counters. Pure observation: no jax ops, no RNG — telemetry-on
+        runs stay byte-identical to the goldens."""
+        return {
+            "workers_alive": sum(1 for w in self.workers.values()
+                                 if w.alive),
+            "workers_total": len(self.workers),
+            "in_flight": sum(1 for w in self.workers.values()
+                             if w.in_flight),
+        }
+
+    def _record_runtime(self):
+        if self.telemetry is None:
+            return
+        self.telemetry.record_runtime(outer_step=self.server.t,
+                                      sim_time=self.time,
+                                      **self._runtime_snapshot())
 
     def _finalize(self, eval_fn) -> History:
         self.history.final_time = self.time
         if eval_fn and (not self.history.evals
                         or self.history.evals[-1]["step"] != self.server.t):
-            ev = eval_fn(self.server.state.params, self.server.t, self.time)
+            with self.tracer.span("eval", cat="eval", step=self.server.t):
+                ev = eval_fn(self.server.state.params, self.server.t,
+                             self.time)
             self.history.evals.append(ev)
             if self.telemetry is not None:
                 self.telemetry.record_eval(ev)
+        if self.telemetry is not None and self.runtime_record_every:
+            self._record_runtime()           # end-of-run snapshot
         return self.history
 
     # -------------------------------------------------------------- main loop
@@ -597,13 +641,20 @@ ENGINES = ("sim", "wallclock")
 def make_engine(run_cfg: RunConfig, engine: Optional[str] = None, *,
                 failures: Optional[List[FailureEvent]] = None,
                 elastic: Optional[List[ElasticEvent]] = None,
-                telemetry=None, **runtime_kw) -> Engine:
+                telemetry=None, tracer=None,
+                runtime_record_every: Optional[int] = None,
+                **runtime_kw) -> Engine:
     """Build a training engine. ``engine``: "sim" (default, virtual clock)
     or "wallclock" (threaded ``ConcurrentRuntime``; extra keywords —
     ``mode``, ``pace_scale``, ``transport``, ... — are forwarded to it).
     ``telemetry``: optional ``repro.telemetry.TelemetryRecorder`` the run
     streams arrival/eval diagnostics into (valid alongside a Scenario —
-    observation, not configuration).
+    observation, not configuration). ``tracer``: optional
+    ``repro.obs.spans.SpanTracer`` recording worker-round / transport /
+    commit / eval spans (same observation-only status).
+    ``runtime_record_every``: emit a telemetry "runtime" health snapshot
+    every N commits (None defers to the Scenario's ``telemetry_every``
+    knob; 0 disables).
 
     Also accepts a ``repro.scenarios`` ``Scenario`` as the first argument:
     its ``materialize()`` then supplies the run config, engine choice,
@@ -621,21 +672,27 @@ def make_engine(run_cfg: RunConfig, engine: Optional[str] = None, *,
                 non_iid=run_cfg.non_iid,
                 mixture_alpha=run_cfg.mixture_alpha,
                 scenario=run_cfg.name)
+        if runtime_record_every is None:
+            runtime_record_every = getattr(run_cfg, "telemetry_every", 0)
         m = run_cfg.materialize()                # avoids a circular import
         return make_engine(m.run_cfg, m.engine, failures=m.failures,
                            elastic=m.elastic, telemetry=telemetry,
+                           tracer=tracer,
+                           runtime_record_every=runtime_record_every,
                            **m.engine_kw)
+    obs_kw = dict(telemetry=telemetry, tracer=tracer,
+                  runtime_record_every=runtime_record_every or 0)
     engine = engine or "sim"
     if engine in ("sim", "simulator", "virtual"):
         if runtime_kw:
             raise TypeError(f"simulator takes no runtime options: {runtime_kw}")
         from repro.async_engine.simulator import AsyncSimulator
         return AsyncSimulator(run_cfg, failures=failures, elastic=elastic,
-                              telemetry=telemetry)
+                              **obs_kw)
     if engine in ("wallclock", "concurrent", "runtime"):
         from repro.async_engine.runtime import ConcurrentRuntime
         return ConcurrentRuntime(run_cfg, failures=failures, elastic=elastic,
-                                 telemetry=telemetry, **runtime_kw)
+                                 **obs_kw, **runtime_kw)
     raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
 
 

@@ -108,7 +108,8 @@ class ConcurrentRuntime(EngineBase):
                  queue_capacity: Optional[int] = None,
                  result_timeout: float = 600.0,
                  faults: Optional[FaultSpec] = None,
-                 telemetry=None):
+                 telemetry=None, tracer=None,
+                 runtime_record_every: int = 0):
         if mode not in ("deterministic", "free"):
             raise ValueError(f"mode must be 'deterministic' or 'free': {mode}")
         if faults is not None and faults.partitions and mode != "free":
@@ -117,8 +118,10 @@ class ConcurrentRuntime(EngineBase):
                 "clock; deterministic mode has no wall-to-virtual coupling "
                 "to evaluate them against (use mode='free')")
         super().__init__(run_cfg, failures=failures, elastic=elastic,
-                         telemetry=telemetry)
+                         telemetry=telemetry, tracer=tracer,
+                         runtime_record_every=runtime_record_every)
         self.mode = mode
+        self._run_t0: Optional[float] = None
         self.pace_scale = pace_scale
         self.result_timeout = result_timeout
         self.faults = faults
@@ -257,18 +260,27 @@ class ConcurrentRuntime(EngineBase):
         attempt = 0
         while True:
             try:
-                self.transport.send(dataclasses.replace(env, attempt=attempt))
+                with self.tracer.span("transport.send", cat="transport",
+                                      wid=env.wid, seq=env.seq,
+                                      attempt=attempt):
+                    self.transport.send(dataclasses.replace(env,
+                                                            attempt=attempt))
             except TransportClosed:
                 return False
             timeout = min(base * (boff ** attempt), cap)
             if spec is not None:
                 timeout *= 1.0 + spec.retry_jitter(env.wid, env.seq, attempt)
-            ack = waiter.wait_for(env, timeout)
+            with self.tracer.span("transport.ack_wait", cat="transport",
+                                  wid=env.wid, seq=env.seq,
+                                  attempt=attempt):
+                ack = waiter.wait_for(env, timeout)
             if ack is not None:
                 return True                  # delivered (or quarantined)
             if waiter.closed:
                 return False
             attempt += 1
+            self.tracer.instant("transport.retry", cat="transport",
+                                wid=env.wid, seq=env.seq, attempt=attempt)
             self._bump("retries")
 
     def _heartbeat_loop(self, wid: int, stop: threading.Event):
@@ -572,12 +584,41 @@ class ConcurrentRuntime(EngineBase):
         self._hb_stops.clear()
         self._results.clear()
 
+    # ------------------------------------------- runtime health snapshots
+    def _runtime_snapshot(self) -> Dict:
+        """Live counters for a telemetry "runtime" record: everything
+        ``stats_summary()`` reports at exit, snapshotted mid-run, plus
+        liveness states and the delivery/fault counters. Observation
+        only — reads counters the run maintains anyway."""
+        snap = super()._runtime_snapshot()
+        wall = (time.monotonic() - self._run_t0
+                if self._run_t0 is not None else 0.0)
+        arrivals = self.stats["arrivals"]
+        snap.update(
+            arrivals=arrivals,
+            arrivals_per_sec=arrivals / wall if wall > 0 else 0.0,
+            server_occupancy=(self.stats["server_busy_seconds"] / wall
+                              if wall > 0 else 0.0),
+            compute_parallelism=(self.stats["compute_seconds_total"] / wall
+                                 if wall > 0 else 0.0),
+            queue_depth=self.transport.depth(),
+            liveness={
+                "dead": len(self._liveness_dead),
+                "quarantined": len(self._delivery.quarantined),
+                "threads_alive": sum(1 for t in self._threads.values()
+                                     if t.is_alive()),
+            },
+            delivery={k: float(v)
+                      for k, v in self.delivery_stats().items() if v})
+        return snap
+
     # -------------------------------------------------------------- run
     def run(self, eval_every: int = 0,
             eval_fn: Optional[Callable[[PyTree, int, float], Dict]] = None,
             ckpt_every: int = 0, ckpt_dir: str = "",
             budget=None) -> History:
         t0 = time.monotonic()
+        self._run_t0 = t0
         try:
             if self.mode == "free" and not self.server.method.sync:
                 hist = self._run_free(eval_every, eval_fn, ckpt_every,

@@ -113,7 +113,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--telemetry", default="", metavar="PATH",
                     help="stream per-arrival update-quality telemetry "
-                         "(repro.telemetry JSONL) to this path")
+                         "(repro.telemetry JSONL) to this path, written "
+                         "live (per-record flush) so `python -m repro.obs "
+                         "console PATH` can tail the run")
+    ap.add_argument("--telemetry-every", type=int, default=None,
+                    metavar="N",
+                    help="emit a runtime-health telemetry record every N "
+                         "commits (default 1 when --telemetry is set, "
+                         "else the scenario's telemetry_every)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="profile the run with trace spans and export "
+                         "Chrome trace-event JSON (Perfetto-loadable) "
+                         "to this path")
+    ap.add_argument("--stats-json", default="", metavar="PATH",
+                    help="dump the runtime stats_summary() as JSON at "
+                         "exit (machine-readable CI artifact)")
     ap.add_argument("--engine", default="sim", choices=["sim", "wallclock"])
     ap.add_argument("--free", action="store_true",
                     help="wallclock engine: free-running arrival order "
@@ -149,8 +163,18 @@ def main():
     recorder = None
     if args.telemetry:
         from repro.telemetry import TelemetryRecorder
-        recorder = TelemetryRecorder()
-    eng = make_engine(scn, telemetry=recorder)
+        recorder = TelemetryRecorder(sink=args.telemetry)
+    tracer = None
+    if args.trace:
+        from repro.obs.spans import SpanTracer
+        tracer = SpanTracer()
+    # runtime-health cadence: explicit flag > "on" whenever telemetry is
+    # streamed > the scenario's own telemetry_every knob
+    runtime_every = (args.telemetry_every
+                     if args.telemetry_every is not None
+                     else (1 if args.telemetry else None))
+    eng = make_engine(scn, telemetry=recorder, tracer=tracer,
+                      runtime_record_every=runtime_every)
     if args.resume and args.ckpt_dir:
         latest = ckpt_lib.latest(args.ckpt_dir)
         if latest:
@@ -178,12 +202,29 @@ def main():
         if any(d.values()):
             hot = {k: v for k, v in d.items() if v}
             print(f"delivery: {hot}")
+    if args.stats_json:
+        import json
+        import os
+        summary = (eng.stats_summary() if hasattr(eng, "stats_summary")
+                   else {"arrivals": len(hist.arrivals),
+                         "tokens": hist.tokens,
+                         "comm_bytes": hist.comm_bytes,
+                         "mean_staleness": sum(taus) / len(taus)})
+        os.makedirs(os.path.dirname(args.stats_json) or ".",
+                    exist_ok=True)
+        with open(args.stats_json, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True, default=str)
+        print(f"stats -> {args.stats_json}")
     if recorder is not None:
-        path = recorder.write_jsonl(args.telemetry)
+        recorder.close()       # stream already on disk, live-flushed
         t = recorder.summary()
-        print(f"telemetry -> {path}: {t['arrivals']} arrivals "
+        print(f"telemetry -> {args.telemetry}: {t['arrivals']} arrivals "
               f"mean_cos={t['mean_cos_align']:.3f} "
               f"mean_corrected_frac={t['mean_corrected_frac']:.3f}")
+    if tracer is not None:
+        path = tracer.write(args.trace)
+        print(f"trace -> {path}: {len(tracer)} events (load in "
+              f"https://ui.perfetto.dev or chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""Observability for the async runtime: streaming telemetry, a live
+terminal operator console, and trace-span profiling.
+
+Three pieces (docs/observability.md):
+
+  - ``repro.obs.spans``   — near-zero-overhead span tracer exporting
+    Chrome trace-event JSON (Perfetto-loadable);
+  - ``repro.obs.tail``    — rotation/truncation-robust JSONL tail reader;
+  - ``repro.obs.console`` — the ``python -m repro.obs console`` dashboard
+    over a live or recorded telemetry stream.
+
+This ``__init__`` stays light on purpose: the engines import
+``repro.obs.spans`` for the shared ``NULL_TRACER``, so nothing here may
+drag in the console (argparse/rendering) or anything heavier.
+"""
+from repro.obs.spans import (                    # noqa: F401
+    NULL_TRACER, NullTracer, SpanTracer, validate_chrome_trace,
+)
+from repro.obs.tail import (                     # noqa: F401
+    TailReader, read_complete_lines,
+)

@@ -1,0 +1,221 @@
+"""Trace-span profiling for the async runtime: Chrome trace-event JSON.
+
+A ``SpanTracer`` instruments the hot paths of both engines — worker
+round compute, transport send/retry/backoff, server commit, eval — and
+exports the spans as Chrome trace-event JSON (the ``traceEvents``
+format), directly loadable in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing``. Each span records the thread it ran on, so the
+viewer shows the compute/commit overlap the wall-clock runtime claims:
+worker rounds on ``heloco-worker-*`` rows overlapping server commits on
+the main row.
+
+Overhead discipline
+-------------------
+
+Tracing must never perturb the run it observes:
+
+  - disabled (the default — engines hold the shared ``NULL_TRACER``
+    singleton), a span is one attribute lookup + one call returning a
+    shared no-op context manager: no allocation, no clock read;
+  - enabled, a span is two ``perf_counter`` reads and one list append
+    (GIL-atomic, so worker threads record without taking a lock); the
+    JSON encode cost is paid once at ``write``, never during the run.
+
+Nothing here touches jax — telemetry+tracing-on runs stay byte-identical
+to the committed golden traces (asserted in tests/test_obs.py).
+
+    tracer = SpanTracer()
+    with tracer.span("worker_round", cat="compute", wid=3):
+        ...
+    tracer.write("results/obs/run.trace.json")
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+__all__ = ["SpanTracer", "NullTracer", "NULL_TRACER",
+           "validate_chrome_trace"]
+
+
+class _Span:
+    """One live span; created by ``SpanTracer.span`` and finished by the
+    ``with`` exit. Re-entrant use is not supported (make a new one)."""
+    __slots__ = ("_tr", "_name", "_cat", "_args", "_t0")
+
+    def __init__(self, tr: "SpanTracer", name: str, cat: str,
+                 args: Optional[Dict[str, Any]]):
+        self._tr = tr
+        self._name = name
+        self._cat = cat
+        self._args = args
+
+    def __enter__(self) -> "_Span":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        t1 = time.perf_counter()
+        tr = self._tr
+        ident = threading.get_ident()
+        if ident not in tr._names:               # first span on this thread
+            tr._names[ident] = threading.current_thread().name
+        tr._events.append((self._name, self._cat, "X",
+                           self._t0 - tr._epoch, t1 - self._t0,
+                           ident, self._args))
+        return None
+
+
+class _NullSpan:
+    """Shared no-op context manager (the disabled-tracer fast path)."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """Tracing disabled: every call is a no-op. Engines default to the
+    shared ``NULL_TRACER`` so instrumentation sites stay unconditional."""
+    enabled = False
+
+    def span(self, name: str, cat: str = "engine", **args) -> _NullSpan:
+        return _NULL_SPAN
+
+    def instant(self, name: str, cat: str = "engine", **args) -> None:
+        return None
+
+    def write(self, path: str) -> str:          # pragma: no cover - guard
+        raise RuntimeError("NULL_TRACER records nothing; build a "
+                           "SpanTracer to export a trace")
+
+    def __len__(self) -> int:
+        return 0
+
+
+NULL_TRACER = NullTracer()
+
+
+class SpanTracer:
+    """Collects spans from any thread; exports Chrome trace-event JSON."""
+    enabled = True
+
+    def __init__(self):
+        self._epoch = time.perf_counter()
+        # (name, cat, ph, start_s, dur_s, tid, args) tuples; list.append
+        # is GIL-atomic so worker threads record lock-free
+        self._events: List[tuple] = []
+        # thread ident -> name, captured at record time (worker threads
+        # are usually joined before export)
+        self._names: Dict[int, str] = {}
+
+    # ------------------------------------------------------------ recording
+    def span(self, name: str, cat: str = "engine", **args) -> _Span:
+        """Context manager timing one span (ph="X" complete event)."""
+        return _Span(self, name, cat, args or None)
+
+    def instant(self, name: str, cat: str = "engine", **args) -> None:
+        """Zero-duration marker (ph="i"): retries, drops, state flips."""
+        ident = threading.get_ident()
+        if ident not in self._names:
+            self._names[ident] = threading.current_thread().name
+        self._events.append((name, cat, "i",
+                             time.perf_counter() - self._epoch, 0.0,
+                             ident, args or None))
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    # -------------------------------------------------------------- export
+    def to_chrome(self) -> Dict[str, Any]:
+        """The trace-event JSON object format: ``{"traceEvents": [...]}``
+        with per-thread ``thread_name`` metadata. Timestamps are
+        microseconds since the tracer's creation."""
+        # map python thread idents to small stable tids + their names
+        # (record-time capture first; live threads fill any gaps)
+        tids: Dict[int, int] = {}
+        names: Dict[int, str] = dict(self._names)
+        for th in threading.enumerate():
+            names.setdefault(th.ident, th.name)
+        events: List[Dict[str, Any]] = []
+        for name, cat, ph, start, dur, ident, args in list(self._events):
+            tid = tids.setdefault(ident, len(tids))
+            ev: Dict[str, Any] = {
+                "name": name, "cat": cat or "engine", "ph": ph,
+                "ts": round(start * 1e6, 3), "pid": 0, "tid": tid,
+            }
+            if ph == "X":
+                ev["dur"] = round(dur * 1e6, 3)
+            if ph == "i":
+                ev["s"] = "t"                    # thread-scoped instant
+            if args:
+                ev["args"] = args
+            events.append(ev)
+        meta = [{"name": "process_name", "ph": "M", "pid": 0,
+                 "args": {"name": "heloco-runtime"}}]
+        for ident, tid in sorted(tids.items(), key=lambda kv: kv[1]):
+            meta.append({"name": "thread_name", "ph": "M", "pid": 0,
+                         "tid": tid,
+                         "args": {"name": names.get(ident,
+                                                    f"thread-{tid}")}})
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_chrome(), f)
+        os.replace(tmp, path)
+        return path
+
+
+# ---------------------------------------------------------------------------
+# Validation (the `python -m repro.obs trace --validate` / CI gate)
+# ---------------------------------------------------------------------------
+
+_REQUIRED = {"name", "ph", "ts", "pid", "tid"}
+
+
+def validate_chrome_trace(doc: Any) -> List[str]:
+    """Structural well-formedness of a trace-event JSON document (what
+    Perfetto's legacy JSON importer requires). Returns a list of
+    problems; empty means loadable."""
+    problems: List[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["not a trace-event JSON object (missing 'traceEvents')"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        return ["'traceEvents' must be a non-empty list"]
+    n_spans = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event[{i}] is not an object")
+            continue
+        if ev.get("ph") == "M":
+            continue                             # metadata: name/args only
+        missing = _REQUIRED - set(ev)
+        if missing:
+            problems.append(f"event[{i}] missing keys {sorted(missing)}")
+            continue
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            problems.append(f"event[{i}] bad ts {ev['ts']!r}")
+        if ev["ph"] == "X":
+            n_spans += 1
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                problems.append(f"event[{i}] complete event without a "
+                                f"non-negative 'dur'")
+        if len(problems) > 20:
+            problems.append("... (truncated)")
+            break
+    if n_spans == 0:
+        problems.append("no complete ('X') span events recorded")
+    return problems

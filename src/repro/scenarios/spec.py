@@ -114,6 +114,10 @@ class Scenario:
     eval_every: int = 0              # 0 -> outer_steps // 4 (min 1)
     eval_batch: int = 8
     seed: int = 0
+    # -- observability (observation only: never changes run behavior) --------
+    telemetry_every: int = 0         # emit a "runtime" telemetry health
+    # snapshot every N commits when a TelemetryRecorder is attached
+    # (0 = off; docs/observability.md)
 
     def __post_init__(self):
         assert self.engine in ENGINES, self.engine
@@ -235,11 +239,14 @@ class Scenario:
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         # fault-free scenario dicts are identical to their pre-faults form
-        # (recorded goldens compare the scenario dict byte-for-byte)
+        # (recorded goldens compare the scenario dict byte-for-byte);
+        # same discipline for the observability cadence knob
         if self.faults is None:
             d.pop("faults")
         else:
             d["faults"] = self.faults.to_dict()
+        if not self.telemetry_every:
+            d.pop("telemetry_every")
         return d
 
     @classmethod

@@ -17,10 +17,12 @@ from repro.telemetry.analysis import (          # noqa: F401
     language_spread, per_language_curves, per_language_final,
     staleness_alignment, summarize,
 )
-from repro.telemetry.recorder import TelemetryRecorder, iter_jsonl  # noqa: F401
+from repro.telemetry.recorder import (          # noqa: F401
+    DEFAULT_WINDOW, TelemetryRecorder, iter_jsonl,
+)
 from repro.telemetry.schema import (            # noqa: F401
-    SCHEMA_VERSION, ArrivalMetrics, EvalMetrics, RunMeta, from_json_line,
-    to_json_line,
+    SCHEMA_VERSION, ArrivalMetrics, EvalMetrics, FaultMetrics, RunMeta,
+    RuntimeMetrics, StreamDecoder, from_json_line, to_json_line,
 )
 from repro.telemetry.stats import (             # noqa: F401
     MOMENT_FIELDS, N_MOMENTS, UpdateStats, momentum_only_moments,

@@ -1,38 +1,90 @@
-"""In-memory telemetry sink + JSONL persistence.
+"""In-memory telemetry sink + live JSONL streaming.
 
 A ``TelemetryRecorder`` is handed to an engine (``make_engine(...,
 telemetry=rec)``); the engine emits one ``ArrivalMetrics`` per committed
-outer step and one ``EvalMetrics`` per evaluation. Wall-time stamps are
-relative to the recorder's creation, so the stream is self-contained.
+outer step, one ``EvalMetrics`` per evaluation, and (when a cadence is
+configured) periodic ``RuntimeMetrics`` health snapshots. Wall-time
+stamps are relative to the recorder's creation, so the stream is
+self-contained.
+
+Memory contract
+---------------
+
+Two retention modes:
+
+  - **no sink** (default): every record is retained in ``self.records``
+    (an unbounded list) — fine for the short CI-sized runs the analyses
+    consume, and what ``write_jsonl`` serializes at the end.
+  - **live sink** (``TelemetryRecorder(sink=path)``): the full stream
+    lives on disk — each record is written and flushed as ONE complete
+    JSONL line the moment it is recorded, so ``python -m repro.obs
+    console <path>`` can tail the run live. ``self.records`` then
+    becomes a bounded ring of the most recent ``window`` records
+    (default 4096) so in-process analyses (``summary()``,
+    ``arrivals()``, ...) see a recent window while memory stays
+    O(window) for arbitrarily long runs. ``write_jsonl`` copies the
+    complete on-disk stream, never the ring.
 
 The recorder never influences the run: stats are extra outputs of the
 kernels the synchronizer launches anyway, and recording is append-only —
 telemetry-on runs are byte-identical to telemetry-off runs (CI-gated via
-the golden traces, see tests/test_telemetry.py).
+the golden traces, see tests/test_telemetry.py and tests/test_obs.py).
 """
 from __future__ import annotations
 
 import os
+import shutil
 import time
-from typing import Dict, Iterator, List, Optional
+from collections import deque
+from typing import Dict, Iterator, List, Optional, Union
 
 from repro.telemetry import schema
 
+#: ring size once a live sink holds the full stream (memory contract above)
+DEFAULT_WINDOW = 4096
+
 
 class TelemetryRecorder:
-    def __init__(self, meta: Optional[schema.RunMeta] = None):
+    def __init__(self, meta: Optional[schema.RunMeta] = None,
+                 sink: Optional[str] = None,
+                 window: Optional[int] = None):
         self.meta = meta
-        self.records: List[schema.Record] = []
+        if sink is not None or window:
+            self.records: Union[List[schema.Record], deque] = deque(
+                maxlen=window or DEFAULT_WINDOW)
+        else:
+            self.records = []
         self._t0 = time.perf_counter()
+        self._sink_path = sink
+        self._sink = None
+        self._meta_written = False
+        if sink is not None:
+            os.makedirs(os.path.dirname(sink) or ".", exist_ok=True)
+            self._sink = open(sink, "w")
+            self._write_meta_line()
 
     # ------------------------------------------------------------- emission
     def wall(self) -> float:
         return time.perf_counter() - self._t0
 
+    def _write_meta_line(self) -> None:
+        if self._sink is not None and self.meta is not None \
+                and not self._meta_written:
+            self._sink.write(schema.to_json_line(self.meta) + "\n")
+            self._sink.flush()
+            self._meta_written = True
+
+    def _emit(self, rec: schema.Record) -> None:
+        self.records.append(rec)
+        if self._sink is not None:
+            self._sink.write(schema.to_json_line(rec) + "\n")
+            self._sink.flush()               # per-record: tail-able live
+
     def ensure_meta(self, **kw) -> None:
         """Set the stream provenance once (first engine to run wins)."""
         if self.meta is None:
             self.meta = schema.RunMeta(**kw)
+        self._write_meta_line()
 
     def record_arrival(self, rec, *, mixture=None,
                        tokens_total: int = 0) -> None:
@@ -42,7 +94,7 @@ class TelemetryRecorder:
             v = getattr(rec, name, None)
             return None if v is None else float(v)
 
-        self.records.append(schema.ArrivalMetrics(
+        self._emit(schema.ArrivalMetrics(
             outer_step=int(rec.outer_step),
             worker_id=int(rec.worker_id),
             staleness=int(rec.staleness),
@@ -61,7 +113,7 @@ class TelemetryRecorder:
 
     def record_eval(self, ev: Dict) -> None:
         """``ev`` is the ``make_eval_fn`` result dict."""
-        self.records.append(schema.EvalMetrics(
+        self._emit(schema.EvalMetrics(
             outer_step=int(ev["step"]),
             sim_time=float(ev["time"]),
             wall_time=self.wall(),
@@ -73,11 +125,19 @@ class TelemetryRecorder:
                      generation: int = -1, detail=None) -> None:
         """One delivery-protocol event (checksum reject, dedup,
         quarantine, liveness transition, end-of-run counter summary)."""
-        self.records.append(schema.FaultMetrics(
+        self._emit(schema.FaultMetrics(
             event=event, wall_time=self.wall(), wid=int(wid), seq=int(seq),
             generation=int(generation),
             detail=None if detail is None
             else {k: float(v) for k, v in detail.items()}))
+
+    def record_runtime(self, *, outer_step: int, sim_time: float,
+                       **kw) -> None:
+        """One periodic runtime-health snapshot (engine-driven cadence;
+        see ``schema.RuntimeMetrics`` for the field vocabulary)."""
+        self._emit(schema.RuntimeMetrics(
+            outer_step=int(outer_step), sim_time=float(sim_time),
+            wall_time=self.wall(), **kw))
 
     # -------------------------------------------------------------- queries
     def arrivals(self) -> List[schema.ArrivalMetrics]:
@@ -90,6 +150,10 @@ class TelemetryRecorder:
     def faults(self) -> List[schema.FaultMetrics]:
         return [r for r in self.records if isinstance(r, schema.FaultMetrics)]
 
+    def runtime_records(self) -> List[schema.RuntimeMetrics]:
+        return [r for r in self.records
+                if isinstance(r, schema.RuntimeMetrics)]
+
     def __len__(self) -> int:
         return len(self.records)
 
@@ -98,7 +162,33 @@ class TelemetryRecorder:
         return analysis.summarize(self.arrivals(), self.evals())
 
     # ------------------------------------------------------------------ io
+    @property
+    def sink_path(self) -> Optional[str]:
+        return self._sink_path
+
+    def flush(self) -> None:
+        if self._sink is not None:
+            self._sink.flush()
+
+    def close(self) -> None:
+        """Flush and close the live sink (idempotent; the stream file
+        stays valid after every flushed line, so close is a courtesy,
+        not a durability requirement)."""
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None
+
     def write_jsonl(self, path: str) -> str:
+        """Persist the FULL stream to ``path``. With a live sink the
+        complete stream is already on disk — it is copied (not the
+        bounded in-memory ring); without one, the in-memory records are
+        serialized."""
+        if self._sink_path is not None:
+            self.flush()
+            if os.path.abspath(path) != os.path.abspath(self._sink_path):
+                os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+                shutil.copyfile(self._sink_path, path)
+            return path
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:

@@ -1,7 +1,7 @@
 """Typed schema of the telemetry stream.
 
 A stream is a JSONL file: one ``{"kind": ..., ...}`` object per line.
-Four record kinds:
+Five record kinds:
 
   meta      one per stream (first line): what produced it;
   arrival   one per committed outer step: scheduling facts (worker,
@@ -10,22 +10,31 @@ Four record kinds:
   eval      one per evaluation: mean + per-language validation loss;
   fault     one per delivery-protocol event on the wall-clock runtime
             (checksum reject, dedup, quarantine, liveness transition) and
-            one end-of-run "summary" carrying the delivery counters.
+            one end-of-run "summary" carrying the delivery counters;
+  runtime   one periodic runtime-health snapshot (engine-driven cadence):
+            occupancy, parallelism, queue depth, worker liveness, and the
+            delivery/fault counters — the live operator console's
+            (``python -m repro.obs console``) health panel.
 
 Records are frozen dataclasses; ``to_json_line``/``from_json_line``
 round-trip them. Unknown keys in a line are rejected loudly (schema
 drift should fail, not silently drop fields); bump SCHEMA_VERSION on
-breaking changes.
+breaking changes. Live readers that must survive streams written by a
+NEWER schema (the console tailing a file from a newer build) go through
+``StreamDecoder``, which tolerates unknown kinds/fields but *counts and
+reports* everything it skipped instead of silently thinning the stream.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+from collections import Counter
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 # v2: added the "fault" record kind (delivery-robustness events)
-SCHEMA_VERSION = 2
+# v3: added the "runtime" record kind (periodic runtime-health snapshots)
+SCHEMA_VERSION = 3
 
 
 @dataclass(frozen=True)
@@ -91,10 +100,38 @@ class FaultMetrics:
     detail: Optional[Dict[str, float]] = None
 
 
-Record = Union[RunMeta, ArrivalMetrics, EvalMetrics, FaultMetrics]
+@dataclass(frozen=True)
+class RuntimeMetrics:
+    """One periodic runtime-health snapshot (engine-driven cadence — the
+    ``runtime_record_every`` knob of ``make_engine`` / the
+    ``telemetry_every`` field of a Scenario). The wall-clock runtime
+    fills every field from its live counters
+    (``ConcurrentRuntime.stats_summary()`` / ``delivery_stats()``); the
+    simulator emits only the worker-membership view (rates/occupancy
+    stay 0). ``liveness`` holds state tallies (``dead``, ``quarantined``,
+    ``threads_alive``); ``delivery`` the cumulative delivery/fault
+    counters of docs/faults.md."""
+    outer_step: int
+    sim_time: float
+    wall_time: float
+    workers_alive: int
+    workers_total: int
+    in_flight: int = 0
+    arrivals: int = 0
+    arrivals_per_sec: float = 0.0
+    server_occupancy: float = 0.0
+    compute_parallelism: float = 0.0
+    queue_depth: int = 0
+    liveness: Dict[str, int] = field(default_factory=dict)
+    delivery: Dict[str, float] = field(default_factory=dict)
+
+
+Record = Union[RunMeta, ArrivalMetrics, EvalMetrics, FaultMetrics,
+               RuntimeMetrics]
 
 KINDS: Dict[str, type] = {"meta": RunMeta, "arrival": ArrivalMetrics,
-                          "eval": EvalMetrics, "fault": FaultMetrics}
+                          "eval": EvalMetrics, "fault": FaultMetrics,
+                          "runtime": RuntimeMetrics}
 _KIND_OF = {cls: kind for kind, cls in KINDS.items()}
 
 
@@ -121,3 +158,103 @@ def from_json_line(line: str) -> Record:
         raise ValueError(f"telemetry schema drift: {kind} record has "
                          f"unknown fields {sorted(unknown)}")
     return cls(**d)
+
+
+class StreamDecoder:
+    """Forward-compatible stream reader with drift accounting.
+
+    ``from_json_line`` rejects any unknown key/kind loudly — correct for
+    same-version tooling, fatal for a live console tailing a stream a
+    NEWER build is writing. The decoder closes that gap with an explicit
+    version check instead of silent thinning:
+
+      - it learns the stream's declared version from its ``meta`` record;
+      - unknown record kinds and unknown fields are skipped but
+        **counted** (``unknown_kinds`` / ``unknown_keys``), and
+        ``drift_report()`` renders the tally so a v3 reader *surfaces* a
+        v4 stream ("stream schema v4 > reader v3: skipped ...") rather
+        than quietly showing less data;
+      - ``strict=True`` restores the loud behavior for streams at or
+        below the reader's version (genuine drift should still fail) —
+        a declared-newer stream is tolerated-and-counted even then.
+
+    Undecodable lines (torn writes that still ended in a newline) are
+    never raised in lenient mode; they land in ``bad_lines``.
+    """
+
+    def __init__(self, strict: bool = False):
+        self.strict = strict
+        self.meta: Optional[RunMeta] = None
+        self.stream_version: Optional[int] = None
+        self.lines = 0
+        self.bad_lines = 0
+        self.unknown_kinds: Counter = Counter()
+        self.unknown_keys: Counter = Counter()
+
+    @property
+    def newer_stream(self) -> bool:
+        """The stream declared a schema version ahead of this reader."""
+        return (self.stream_version is not None
+                and self.stream_version > SCHEMA_VERSION)
+
+    def decode(self, line: str) -> Optional[Record]:
+        line = line.strip()
+        if not line:
+            return None
+        self.lines += 1
+        try:
+            d = json.loads(line)
+            if not isinstance(d, dict):
+                raise ValueError("not an object")
+        except ValueError:
+            if self.strict and not self.newer_stream:
+                raise
+            self.bad_lines += 1
+            return None
+        kind = d.pop("kind", None)
+        cls = KINDS.get(kind)
+        if cls is None:
+            if self.strict and not self.newer_stream:
+                raise ValueError(f"unknown telemetry record kind {kind!r}")
+            self.unknown_kinds[str(kind)] += 1
+            return None
+        if cls is ArrivalMetrics and d.get("mixture") is not None:
+            d["mixture"] = tuple(d["mixture"])
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            if self.strict and not self.newer_stream:
+                raise ValueError(f"telemetry schema drift: {kind} record "
+                                 f"has unknown fields {sorted(unknown)}")
+            for k in unknown:
+                self.unknown_keys[f"{kind}.{k}"] += 1
+                d.pop(k)
+        try:
+            rec = cls(**d)
+        except TypeError:
+            # missing required fields (a truncated-then-completed object)
+            self.bad_lines += 1
+            return None
+        if isinstance(rec, RunMeta):
+            self.meta = rec
+            self.stream_version = int(rec.schema_version)
+        return rec
+
+    def drift_report(self) -> List[str]:
+        """Human-readable drift/skip tally; empty means a clean stream."""
+        out: List[str] = []
+        if self.newer_stream:
+            out.append(f"stream schema v{self.stream_version} > reader "
+                       f"v{SCHEMA_VERSION}: fields/kinds unknown to this "
+                       f"reader are skipped (counted below)")
+        if self.unknown_kinds:
+            tally = ", ".join(f"{k} x{n}" for k, n
+                              in sorted(self.unknown_kinds.items()))
+            out.append(f"skipped unknown record kinds: {tally}")
+        if self.unknown_keys:
+            tally = ", ".join(f"{k} x{n}" for k, n
+                              in sorted(self.unknown_keys.items()))
+            out.append(f"skipped unknown fields: {tally}")
+        if self.bad_lines:
+            out.append(f"undecodable lines: {self.bad_lines}")
+        return out

@@ -1,0 +1,400 @@
+"""Observability subsystem: tail/follow reader robustness, the
+forward-compatible StreamDecoder (version check + skipped-unknown
+accounting), the recorder's live-sink/bounded-ring memory contract,
+Chrome trace-event export, the operator console's headless render over
+the committed chaos_partition golden stream, and the byte-identity
+contract: a golden scenario run with telemetry + tracing + runtime
+records enabled must still verify against its committed golden."""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.obs.console import ConsoleState, render, sparkline
+from repro.obs.spans import (
+    NULL_TRACER, SpanTracer, validate_chrome_trace,
+)
+from repro.obs.tail import TailReader, read_complete_lines
+from repro.telemetry import (
+    DEFAULT_WINDOW, RunMeta, RuntimeMetrics, StreamDecoder,
+    TelemetryRecorder, schema,
+)
+
+GOLDEN_STREAM = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "results", "golden", "streams",
+                             "chaos_partition.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# Tail / follow reader
+# ---------------------------------------------------------------------------
+
+def test_tail_holds_back_partial_trailing_line(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text('{"a": 1}\n{"b": 2')          # second record still mid-write
+    r = TailReader(str(p))
+    assert r.read_available() == ['{"a": 1}']
+    assert r.read_available() == []             # partial line stays buffered
+    with open(p, "a") as f:
+        f.write('}\n{"c": 3}\n')
+    assert r.read_available() == ['{"b": 2}', '{"c": 3}']
+    r.close()
+
+
+def test_tail_restarts_on_truncation(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text("one\ntwo\nthree\n")
+    r = TailReader(str(p))
+    assert r.read_available() == ["one", "two", "three"]
+    p.write_text("fresh\n")                     # rerun over the same path
+    assert r.read_available() == ["fresh"]
+    r.close()
+
+
+def test_tail_follows_rotation_to_new_inode(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text("old\n")
+    r = TailReader(str(p))
+    assert r.read_available() == ["old"]
+    os.rename(p, tmp_path / "s.jsonl.1")        # rotate
+    (tmp_path / "s.jsonl").write_text("new\n")
+    # allow same-inode reuse on exotic filesystems: poll a couple times
+    got = r.read_available() or r.read_available()
+    assert got == ["new"]
+    r.close()
+
+
+def test_tail_waits_for_missing_file(tmp_path):
+    p = tmp_path / "later.jsonl"
+    r = TailReader(str(p))
+    assert r.read_available() == []             # not an error
+    p.write_text("here\n")
+    assert r.read_available() == ["here"]
+    r.close()
+
+
+def test_follow_drains_after_stop_and_survives_concurrent_writer(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text("")
+    stop = threading.Event()
+    got = []
+
+    def writer():
+        with open(p, "a") as f:
+            for i in range(20):
+                f.write(f"line-{i}\n")
+                f.flush()
+                time.sleep(0.002)
+        stop.set()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    r = TailReader(str(p), poll=0.005)
+    for ln in r.follow(stop=stop.is_set):
+        got.append(ln)
+    t.join()
+    r.close()
+    # final drain after stop => nothing written before stop is lost
+    assert got == [f"line-{i}" for i in range(20)]
+
+
+def test_read_complete_lines_drops_partial_tail(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text("a\nb\ncut-off-no-newline")
+    assert read_complete_lines(str(p)) == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# StreamDecoder: forward-compat version check + drift accounting
+# ---------------------------------------------------------------------------
+
+def _meta_line(version: int) -> str:
+    d = json.loads(schema.to_json_line(RunMeta(
+        method="heloco", engine="sim", n_workers=2, outer_steps=4, seed=0)))
+    d["schema_version"] = version
+    return json.dumps(d)
+
+
+def test_decoder_counts_unknown_kinds_and_keys_from_newer_stream():
+    dec = StreamDecoder()
+    assert dec.decode(_meta_line(schema.SCHEMA_VERSION + 1)) is not None
+    assert dec.newer_stream
+    # a record kind this reader has never heard of
+    assert dec.decode('{"kind": "gpu_power", "watts": 412.0}') is None
+    # a known kind with a field from the future
+    line = json.dumps({"kind": "eval", "outer_step": 4, "sim_time": 1.0,
+                       "wall_time": 2.0, "mean_loss": 3.5,
+                       "per_lang": {}, "perplexity_v4": 33.1})
+    rec = dec.decode(line)
+    assert rec is not None and rec.mean_loss == 3.5
+    assert dec.unknown_kinds == {"gpu_power": 1}
+    assert dec.unknown_keys == {"eval.perplexity_v4": 1}
+    report = "\n".join(dec.drift_report())
+    assert f"v{schema.SCHEMA_VERSION + 1} > reader" in report
+    assert "gpu_power" in report and "eval.perplexity_v4" in report
+
+
+def test_decoder_strict_raises_on_same_version_drift_only():
+    strict = StreamDecoder(strict=True)
+    strict.decode(_meta_line(schema.SCHEMA_VERSION))
+    with pytest.raises(ValueError, match="unknown"):
+        strict.decode('{"kind": "gpu_power", "watts": 1.0}')
+    # ... but a declared-NEWER stream is tolerated-and-counted even strict
+    newer = StreamDecoder(strict=True)
+    newer.decode(_meta_line(schema.SCHEMA_VERSION + 2))
+    assert newer.decode('{"kind": "gpu_power", "watts": 1.0}') is None
+    assert newer.unknown_kinds["gpu_power"] == 1
+
+
+def test_decoder_tolerates_bad_lines_and_missing_required_fields():
+    dec = StreamDecoder()
+    assert dec.decode("") is None
+    assert dec.decode('{"kind": "arrival"') is None          # torn JSON
+    assert dec.decode('{"kind": "eval", "outer_step": 1}') is None  # missing
+    assert dec.bad_lines == 2
+    assert any("undecodable" in s for s in dec.drift_report())
+
+
+# ---------------------------------------------------------------------------
+# Recorder: live sink + bounded ring (the memory contract)
+# ---------------------------------------------------------------------------
+
+def _fake_arrival(i):
+    class A:
+        outer_step = i
+        worker_id = i % 2
+        staleness = 0
+        rho = 1.0
+        sim_time = float(i)
+        lang = "en"
+        dropped = False
+    return A()
+
+
+def test_recorder_sink_streams_full_stream_but_bounds_memory(tmp_path):
+    sink = str(tmp_path / "live.jsonl")
+    rec = TelemetryRecorder(sink=sink, window=8)
+    rec.ensure_meta(method="heloco", engine="sim", n_workers=2,
+                    outer_steps=64, seed=0)
+    for i in range(64):
+        rec.record_arrival(_fake_arrival(i))
+    assert len(rec.records) == 8                 # bounded ring
+    # ... but the on-disk stream is complete and live (no close needed)
+    lines = read_complete_lines(sink)
+    assert len(lines) == 65                      # meta + 64 arrivals
+    # write_jsonl copies the FULL stream, not the ring
+    out = str(tmp_path / "copy.jsonl")
+    rec.write_jsonl(out)
+    assert len(read_complete_lines(out)) == 65
+    rec.close()
+    rec.close()                                  # idempotent
+    dec = StreamDecoder(strict=True)
+    for ln in lines:
+        assert dec.decode(ln) is not None
+    assert dec.meta is not None and not dec.drift_report()
+
+
+def test_recorder_without_sink_keeps_unbounded_list():
+    rec = TelemetryRecorder()
+    for i in range(DEFAULT_WINDOW + 10):
+        rec.record_arrival(_fake_arrival(i))
+    assert isinstance(rec.records, list)
+    assert len(rec.records) == DEFAULT_WINDOW + 10
+
+
+def test_runtime_record_roundtrip():
+    rec = TelemetryRecorder()
+    rec.record_runtime(outer_step=7, sim_time=3.0, workers_alive=3,
+                       workers_total=4, queue_depth=2,
+                       liveness={"dead": 1},
+                       delivery={"retries": 5.0})
+    (rt,) = rec.runtime_records()
+    line = schema.to_json_line(rt)
+    back = schema.from_json_line(line)
+    assert isinstance(back, RuntimeMetrics)
+    assert back.workers_alive == 3 and back.delivery == {"retries": 5.0}
+
+
+# ---------------------------------------------------------------------------
+# Span tracer + Chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_span_tracer_exports_valid_chrome_trace_with_thread_names():
+    tr = SpanTracer()
+    with tr.span("outer", cat="engine", step=1):
+        with tr.span("inner", cat="compute"):
+            pass
+    tr.instant("retry", cat="transport", wid=3)
+
+    def worker():
+        with tr.span("worker_round", cat="compute", wid=0):
+            pass
+
+    t = threading.Thread(target=worker, name="heloco-worker-0")
+    t.start()
+    t.join()
+    assert len(tr) == 4
+    doc = tr.to_chrome()
+    assert validate_chrome_trace(doc) == []
+    names = [e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "thread_name"]
+    assert "heloco-worker-0" in names
+    spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert {e["name"] for e in spans} == {"outer", "inner", "worker_round"}
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in spans)
+    # nesting: inner ends no later than outer
+    by = {e["name"]: e for e in spans}
+    assert (by["inner"]["ts"] + by["inner"]["dur"]
+            <= by["outer"]["ts"] + by["outer"]["dur"] + 1e-3)
+
+
+def test_span_tracer_write_roundtrip(tmp_path):
+    tr = SpanTracer()
+    with tr.span("s"):
+        pass
+    path = tr.write(str(tmp_path / "t.trace.json"))
+    with open(path) as f:
+        assert validate_chrome_trace(json.load(f)) == []
+
+
+def test_null_tracer_is_inert():
+    with NULL_TRACER.span("anything", wid=1):
+        pass
+    NULL_TRACER.instant("x")
+    assert len(NULL_TRACER) == 0
+    with pytest.raises(RuntimeError):
+        NULL_TRACER.write("/nonexistent/nope.json")
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    assert validate_chrome_trace({}) != []
+    assert validate_chrome_trace({"traceEvents": []}) != []
+    no_dur = {"traceEvents": [{"name": "a", "ph": "X", "ts": 0,
+                               "pid": 0, "tid": 0}]}
+    assert any("dur" in p for p in validate_chrome_trace(no_dur))
+    meta_only = {"traceEvents": [{"name": "process_name", "ph": "M",
+                                  "pid": 0, "args": {"name": "p"}}]}
+    assert any("no complete" in p for p in validate_chrome_trace(meta_only))
+
+
+# ---------------------------------------------------------------------------
+# Operator console (headless) over the committed golden stream
+# ---------------------------------------------------------------------------
+
+def _console_over(lines):
+    state = ConsoleState()
+    for ln in lines:
+        state.add_line(ln)
+    return state, render(state, color=False)
+
+
+def test_console_once_renders_committed_chaos_partition_stream():
+    lines = read_complete_lines(GOLDEN_STREAM)
+    assert lines, f"missing committed stream {GOLDEN_STREAM}"
+    state, out = _console_over(lines)
+    assert state.meta is not None and state.meta.scenario == "chaos_partition"
+    # every panel the chaos scenario exercises is present
+    for needle in ("HeLoCo operator console", "chaos_partition",
+                   "staleness histogram", "cos(D,m)", "per-language loss",
+                   "workers", "runtime health", "delivery / chaos"):
+        assert needle in out, f"panel {needle!r} missing:\n{out}"
+    # the partitioned worker (wid 3, black-holed from t=2.0) shows dead
+    assert state.workers[3]["state"] == "dead"
+    assert "dead" in out
+    # delivery counters from the runtime records made it to the panel
+    assert "partition_drops" in out
+    # a clean committed stream renders no drift footer
+    assert "schema drift" not in out
+    assert state.decoder.stream_version == schema.SCHEMA_VERSION
+
+
+def test_console_surfaces_unknown_kind_instead_of_crashing():
+    lines = [_meta_line(schema.SCHEMA_VERSION + 1),
+             '{"kind": "quantum_flux", "q": 1}']
+    state, out = _console_over(lines)
+    assert "schema drift" in out and "quantum_flux" in out
+
+
+def test_console_cli_once_smoke(capsys):
+    from repro.obs.console import main as console_main
+    assert console_main([GOLDEN_STREAM, "--once"]) == 0
+    out = capsys.readouterr().out
+    assert "HeLoCo operator console" in out and "chaos_partition" in out
+
+
+def test_trace_cli_validate(tmp_path, capsys):
+    from repro.obs.__main__ import main as obs_main
+    tr = SpanTracer()
+    with tr.span("s"):
+        pass
+    p = tr.write(str(tmp_path / "t.json"))
+    assert obs_main(["trace", p, "--validate"]) == 0
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"traceEvents": [{"ph": "X"}]}')
+    capsys.readouterr()
+    assert obs_main(["trace", str(bad), "--validate"]) == 1
+
+
+def test_sparkline_shape():
+    assert sparkline([]) == ""
+    s = sparkline([0, 1, 2, 3], width=4)
+    assert len(s) == 4 and s[0] == "▁" and s[-1] == "█"
+    assert sparkline([5.0] * 3) == "▁▁▁"        # constant series: no crash
+
+
+# ---------------------------------------------------------------------------
+# The byte-identity contract: observability on == golden off
+# ---------------------------------------------------------------------------
+
+def test_golden_identical_with_telemetry_tracing_and_runtime_records(
+        tmp_path):
+    """Running a golden scenario with the FULL observability stack on —
+    live-sink telemetry, span tracing, periodic runtime records — must
+    reproduce the committed golden trace byte-for-byte (observation
+    never perturbs the run), while actually producing a live stream,
+    runtime records, and a valid Chrome trace."""
+    from repro.async_engine.engine import make_engine, make_eval_fn
+    from repro.scenarios import get_scenario, trace
+
+    scn = get_scenario("paper_hetero_severe")
+    sink = str(tmp_path / "live.jsonl")
+    rec = TelemetryRecorder(sink=sink)
+    tr = SpanTracer()
+    eng = make_engine(scn, telemetry=rec, tracer=tr, runtime_record_every=2)
+    hist = eng.run(eval_every=scn.eval_cadence,
+                   eval_fn=make_eval_fn(eng, batch=scn.eval_batch))
+    rec.close()
+
+    arrivals = [[a["outer_step"], a["worker_id"],
+                 a["outer_step"] - 1 - a["staleness"], a["staleness"],
+                 a["lang"], a["rho"], a["sim_time"], bool(a["dropped"])]
+                for a in hist.arrivals]
+    doc = {
+        "schema": trace.SCHEMA_VERSION,
+        "scenario": scn.to_dict(),
+        "engine": scn.engine, "mode": scn.mode, "exact": scn.exact,
+        "arrivals": arrivals, "evals": hist.evals,
+        "tokens": int(hist.tokens), "comm_bytes": int(hist.comm_bytes),
+        "final_time": float(hist.final_time),
+        "param_digest": trace.param_digest(eng.server.state.params),
+        "param_fingerprint": trace.param_fingerprint(
+            eng.server.state.params),
+    }
+    res = trace.verify(scn, fresh=doc)
+    assert res.ok, res.report()
+
+    # the observability artifacts actually materialized
+    assert rec.runtime_records(), "no runtime records at cadence 2"
+    rt = rec.runtime_records()[-1]
+    assert rt.workers_total == scn.n_workers
+    assert len(tr) > 0 and validate_chrome_trace(tr.to_chrome()) == []
+    dec = StreamDecoder(strict=True)
+    for ln in read_complete_lines(sink):
+        dec.decode(ln)
+    assert dec.meta is not None and not dec.drift_report()
+    kinds = {type(r).__name__ for r in map(dec.decode,
+                                           read_complete_lines(sink))
+             if r is not None}
+    assert {"ArrivalMetrics", "EvalMetrics", "RuntimeMetrics"} <= kinds
