@@ -8,10 +8,11 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify verify-ci test test-slow test-wallclock bench bench-full \
-	bench-runtime bench-check bench-check-arrival bench-check-runtime \
-	bench-report smoke-wallclock scenarios scenarios-sim \
-	scenarios-wallclock record-goldens sweep-smoke chaos console-smoke
+.PHONY: verify verify-ci test test-slow test-wallclock test-proc bench \
+	bench-full bench-runtime bench-check bench-check-arrival \
+	bench-check-runtime bench-report smoke-wallclock smoke-proc scenarios \
+	scenarios-sim scenarios-wallclock scenarios-proc record-goldens \
+	sweep-smoke chaos console-smoke
 
 verify:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
@@ -30,6 +31,17 @@ test-slow:
 test-wallclock:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -q -m wallclock \
 		--junitxml=results/junit/wallclock.xml
+
+# multi-process socket-transport lane. PROC_FLAGS probes for the CI-only
+# plugins (requirements-ci.txt): pytest-timeout turns a wedged rendezvous
+# into a single failed test with thread stacks, pytest-rerunfailures
+# grants flaky proc tests exactly one rerun (flake telemetry lands in the
+# junit artifact). Locally without the plugins the conftest.py fallback
+# watchdog still bounds each test.
+PROC_FLAGS := $(shell $(PYTHON) -c "import pytest_timeout, pytest_rerunfailures; print('--timeout=180 --timeout-method=thread --reruns 1')" 2>/dev/null)
+test-proc:
+	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -q -m proc $(PROC_FLAGS) \
+		--junitxml=results/junit/proc.xml
 
 # micro-benchmarks only; persists arrival-path rows to
 # results/bench/BENCH_arrival.json
@@ -86,25 +98,53 @@ scenarios-sim:
 
 scenarios-wallclock:
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all \
-		--engine-filter wallclock
+		--engine-filter wallclock --transport-filter inproc
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all \
 		--engine-filter sim --cross-only
+
+# cross-process gate (docs/runtime.md, "Process transport"): the
+# socket-registered scenarios verify against their goldens; then a slice
+# of the wallclock/chaos grid and the sim cross-replays are re-run over
+# real worker processes against the UNMODIFIED committed goldens — the
+# process boundary must not change a single trace. Plus the proc test
+# lane and a 2-process free-running training smoke.
+scenarios-proc:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all \
+		--transport-filter socket
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify \
+		wallclock_hetero chaos_lossy chaos_corrupt --transport socket
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify \
+		paper_hetero_severe drop_stale int8_dylu gossip_ring \
+		--cross-only --transport socket
+	$(MAKE) test-proc
+	$(MAKE) smoke-proc
 
 # unreliable-delivery gate (docs/faults.md): the chaos golden traces —
 # chaos_lossy / chaos_corrupt must reproduce wallclock_hetero's exact
 # param digest through drop/dup/reorder/corruption, chaos_partition must
 # survive a black-holed worker via liveness recovery — plus a short
 # free-running lossy training smoke through the --chaos launcher preset.
+# TRANSPORT=socket runs the identical gate over real worker processes
+# (child-side fault injection, same dice) against the same goldens.
+TRANSPORT ?= inproc
 chaos:
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify \
-		chaos_lossy chaos_corrupt chaos_partition
+		chaos_lossy chaos_corrupt chaos_partition \
+		$(if $(filter socket,$(TRANSPORT)),--transport socket)
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.launch.train --arch tinygpt-15m \
 		--smoke --engine wallclock --free --pace-scale 0.02 --chaos \
+		--transport $(TRANSPORT) \
 		--paces 1,1,2,6 --workers 4 --outer 6 --inner 1 \
 		--batch 2 --seq 16 --eval-every 6
 
-# (re)generate the committed golden traces after an intentional change
+# (re)generate the committed golden traces after an intentional change.
+# Guard: refuses while tier-1 is red — re-recording goldens on top of a
+# broken tree bakes the breakage into the reference artifacts.
 record-goldens:
+	@echo "record-goldens: checking tier-1 is green first..."
+	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -q || \
+		{ echo "record-goldens: REFUSED — tier-1 is red; fix the suite \
+before re-recording reference traces" >&2; exit 1; }
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run record --all
 
 # observability smoke (docs/observability.md): a free-running chaos run
@@ -130,3 +170,12 @@ smoke-wallclock:
 		--smoke --engine wallclock --free --pace-scale 0.02 \
 		--paces 1,1,2,6 --workers 4 --outer 8 --inner 2 \
 		--batch 2 --seq 16 --eval-every 8
+
+# free-running end-to-end smoke over REAL worker processes: 2 spawned
+# children, socket rendezvous, true arrival order
+smoke-proc:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.launch.train --arch tinygpt-15m \
+		--smoke --engine wallclock --free --pace-scale 0.02 \
+		--transport socket \
+		--paces 1,2 --workers 2 --outer 6 --inner 1 \
+		--batch 2 --seq 16 --eval-every 6

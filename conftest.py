@@ -9,3 +9,66 @@ _ROOT = os.path.dirname(os.path.abspath(__file__))
 for p in (_ROOT, os.path.join(_ROOT, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+import pytest
+
+# ---------------------------------------------------------------------------
+# Hang guard for the concurrency lanes (`wallclock` and `proc` markers).
+#
+# A deadlocked thread rendezvous or a wedged worker-process handshake must
+# fail its OWN test within REPRO_TEST_TIMEOUT seconds — not stall the lane
+# until CI's 45-minute job limit kills the whole matrix cell with no junit
+# output. When pytest-timeout is installed (requirements-ci.txt) each
+# wallclock/proc test gets a timeout marker; the plugin dumps stacks of
+# every thread and fails just that test. Locally, where installing it may
+# not be possible, a daemon-timer fallback does the same thing the blunt
+# way: faulthandler traceback to stderr, then hard process exit (a hung
+# spawn-based child pool cannot be recovered from in-process anyway).
+# ---------------------------------------------------------------------------
+
+_GUARDED_MARKERS = ("wallclock", "proc")
+_DEFAULT_TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "180"))
+
+
+def _needs_guard(item):
+    return any(item.get_closest_marker(m) is not None
+               for m in _GUARDED_MARKERS)
+
+
+def pytest_collection_modifyitems(config, items):
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    for item in items:
+        if _needs_guard(item) and item.get_closest_marker("timeout") is None:
+            # method thread: kills the test, not the process — worker
+            # process/thread teardown still runs via the fixture finalizers
+            item.add_marker(pytest.mark.timeout(_DEFAULT_TIMEOUT,
+                                                method="thread"))
+
+
+@pytest.fixture(autouse=True)
+def _hang_guard_fallback(request):
+    """Last-resort watchdog when pytest-timeout is unavailable locally."""
+    if (request.config.pluginmanager.hasplugin("timeout")
+            or not _needs_guard(request.node)):
+        yield
+        return
+    import faulthandler
+    import threading
+
+    def _abort():
+        sys.stderr.write(
+            f"\n[conftest] hang guard: {request.node.nodeid} exceeded "
+            f"{_DEFAULT_TIMEOUT:.0f}s (REPRO_TEST_TIMEOUT); dumping "
+            f"stacks and aborting\n")
+        faulthandler.dump_traceback(file=sys.stderr)
+        sys.stderr.flush()
+        os._exit(1)
+
+    timer = threading.Timer(_DEFAULT_TIMEOUT, _abort)
+    timer.daemon = True
+    timer.start()
+    try:
+        yield
+    finally:
+        timer.cancel()

@@ -190,6 +190,42 @@ class RoundResult:
     compute_seconds: float = 0.0
 
 
+def execute_round(task: RoundTask, *, model, cfg: RunConfig, specs,
+                  layout=None, tracer=None) -> RoundResult:
+    """The functional inner round, shared VERBATIM between every engine
+    thread and the socket worker processes: reads only the ``RoundTask``
+    snapshot plus immutable run-wide state (model, config, language
+    specs, optional packed int8 layout) — all deterministically
+    reconstructible from the ``RunConfig`` in a fresh process, which is
+    what makes the socket backend trace-identical to the in-process
+    engines."""
+    tracer = tracer if tracer is not None else NULL_TRACER
+    t0 = _time.perf_counter()
+    with tracer.span("worker_round", cat="compute", wid=task.wid,
+                     s_i=task.s_i, h=task.h_steps):
+        sampler = ShardSampler(specs, task.lang,
+                               cfg.batch_size, cfg.seq_len,
+                               seed=cfg.seed * 977 + task.wid,
+                               mixture=task.mixture)
+        result = run_inner(model, cfg.inner, task.params,
+                           task.opt, sampler, task.h_steps,
+                           step_offset=task.inner_step_offset)
+        delta = pseudo_gradient(task.params, result.params)
+    # int8 rides the server's packed layout: per-block scales, O(1)
+    # kernel launches, and a packed error-feedback buffer per worker.
+    with tracer.span("compress_roundtrip", cat="compute", wid=task.wid):
+        decoded, ef, nbytes = roundtrip_with_error_feedback(
+            delta, task.ef, cfg.outer.compression,
+            cfg.outer.topk_ratio, layout=layout)
+    if not cfg.outer.error_feedback:
+        ef = None
+    return RoundResult(
+        task_id=task.task_id, wid=task.wid, generation=task.generation,
+        round_seq=task.round_seq, delta=decoded, opt=result.opt, ef=ef,
+        nbytes=nbytes, s_i=task.s_i, h_steps=task.h_steps,
+        lang=task.lang, compute_seconds=_time.perf_counter() - t0)
+
+
 class Engine(Protocol):
     """What callers (launchers, benchmarks, examples) may rely on."""
     cfg: RunConfig
@@ -236,9 +272,19 @@ class EngineBase:
         self.telemetry = telemetry
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.runtime_record_every = int(runtime_record_every or 0)
-        self.server = Synchronizer(init_params, run_cfg.outer,
-                                   run_cfg.n_workers,
-                                   telemetry=telemetry is not None)
+        topology = getattr(run_cfg, "topology", "hub")
+        if topology != "hub":
+            # NoLoCo-style decentralized exchange: per-worker replicas,
+            # pairwise peer averaging instead of a hub server. Duck-types
+            # the Synchronizer surface the engines consume.
+            from repro.async_engine.topology import PeerMixer
+            self.server = PeerMixer(init_params, run_cfg.outer,
+                                    run_cfg.n_workers, kind=topology,
+                                    seed=run_cfg.seed)
+        else:
+            self.server = Synchronizer(init_params, run_cfg.outer,
+                                       run_cfg.n_workers,
+                                       telemetry=telemetry is not None)
         self.workers: Dict[int, Worker] = {}
         for wid in range(run_cfg.n_workers):
             pace = run_cfg.worker_paces[wid % len(run_cfg.worker_paces)]
@@ -318,7 +364,7 @@ class EngineBase:
     def _make_task(self, w: Worker) -> RoundTask:
         """Capture the worker's initialization + round snapshot (server
         thread only — reads Synchronizer state and shard accounting)."""
-        w.params = jax.tree.map(jnp.copy, self.server.worker_init())
+        w.params = jax.tree.map(jnp.copy, self.server.worker_init(w.wid))
         w.s_i = self.server.t
         w.h_steps = self._h_steps(w)
         w.cur_lang = self._pick_lang(w)
@@ -352,33 +398,11 @@ class EngineBase:
         """Run one inner round from the task snapshot. Reads no mutable
         engine state — safe to call from any thread, results of a lost
         (crashed-generation) round can be discarded without side effects."""
-        t0 = _time.perf_counter()
-        with self.tracer.span("worker_round", cat="compute", wid=task.wid,
-                              s_i=task.s_i, h=task.h_steps):
-            sampler = ShardSampler(self.specs, task.lang,
-                                   self.cfg.batch_size, self.cfg.seq_len,
-                                   seed=self.cfg.seed * 977 + task.wid,
-                                   mixture=task.mixture)
-            result = run_inner(self.model, self.cfg.inner, task.params,
-                               task.opt, sampler, task.h_steps,
-                               step_offset=task.inner_step_offset)
-            delta = pseudo_gradient(task.params, result.params)
-        # int8 rides the server's packed layout: per-block scales, O(1)
-        # kernel launches, and a packed error-feedback buffer per worker.
         layout = (self.server.layout
                   if self.cfg.outer.compression == "int8" else None)
-        with self.tracer.span("compress_roundtrip", cat="compute",
-                              wid=task.wid):
-            decoded, ef, nbytes = roundtrip_with_error_feedback(
-                delta, task.ef, self.cfg.outer.compression,
-                self.cfg.outer.topk_ratio, layout=layout)
-        if not self.cfg.outer.error_feedback:
-            ef = None
-        return RoundResult(
-            task_id=task.task_id, wid=task.wid, generation=task.generation,
-            round_seq=task.round_seq, delta=decoded, opt=result.opt, ef=ef,
-            nbytes=nbytes, s_i=task.s_i, h_steps=task.h_steps,
-            lang=task.lang, compute_seconds=_time.perf_counter() - t0)
+        return execute_round(task, model=self.model, cfg=self.cfg,
+                             specs=self.specs, layout=layout,
+                             tracer=self.tracer)
 
     # ----------------------------------------------------------------- commit
     def _commit_worker(self, w: Worker, res: RoundResult):

@@ -3,9 +3,12 @@ shared ``Engine`` API.
 
 Each worker runs in its own thread (optionally pinned to its own
 ``jax.devices()`` entry when more than one is visible), executes the same
-functional inner round as the simulator (``EngineBase._execute``), and
-pushes its compressed pseudo-gradient through a ``Transport`` (bounded
-in-process queue today; the interface leaves room for a socket backend).
+functional inner round as the simulator (``execute_round``), and
+pushes its compressed pseudo-gradient through a ``Transport``. Two
+backends: the bounded in-process queue (default) and
+``transport="socket"`` — real worker *processes* behind the socket
+rendezvous in ``repro.async_engine.proc``, same protocol, same commit
+orders (docs/runtime.md, "Process transport").
 The server loop drains arrivals and applies the packed fused update from
 ``Synchronizer.on_arrival`` while the other workers keep computing — the
 compute/update overlap the paper's wall-clock claims rest on.
@@ -58,7 +61,6 @@ torn down on elastic leave / shutdown (poison pill + transport close).
 """
 from __future__ import annotations
 
-import dataclasses
 import queue as _queue
 import threading
 import time
@@ -74,11 +76,16 @@ from repro.async_engine.engine import (
 from repro.async_engine.faults import (
     DELIVERY_COUNTERS, DeliveryTracker, FaultSpec, FaultyTransport,
 )
+from repro.async_engine.proc import WorkerExit, WorkerProcessPool
 from repro.async_engine.transport import (
     Ack, AckWaiter, Envelope, InProcTransport, KIND_ERROR, KIND_HEARTBEAT,
-    KIND_RESULT, Transport, TransportClosed, TransportTimeout, payload_crc,
+    KIND_RESULT, ReliableSender, Transport, TransportClosed,
+    TransportTimeout, payload_crc,
 )
 from repro.configs.base import RunConfig
+
+#: transport backends selectable by name (``transport="socket"``)
+TRANSPORTS = ("inproc", "socket")
 
 PyTree = Any
 
@@ -101,7 +108,7 @@ class ConcurrentRuntime(EngineBase):
     def __init__(self, run_cfg: RunConfig, *,
                  failures: Optional[List[FailureEvent]] = None,
                  elastic: Optional[List[ElasticEvent]] = None,
-                 transport: Optional[Transport] = None,
+                 transport: Optional[Any] = None,
                  mode: str = "deterministic",
                  pace_scale: float = 0.0,
                  pin_devices: bool = True,
@@ -126,12 +133,30 @@ class ConcurrentRuntime(EngineBase):
         self.result_timeout = result_timeout
         self.faults = faults
         self._capacity = queue_capacity or max(2 * len(self.workers), 4)
+        self.transport_kind = "inproc"
+        if isinstance(transport, str):
+            if transport not in TRANSPORTS:
+                raise ValueError(f"transport must be one of {TRANSPORTS} "
+                                 f"or a Transport instance: {transport!r}")
+            self.transport_kind = transport
+            transport = None
+        self._pool: Optional[WorkerProcessPool] = None
+        self._last_task: Dict[int, Tuple[int, RoundTask]] = {}
+        self._proc_counters: Dict[str, int] = {"proc_exits": 0,
+                                               "proc_restarts": 0}
+        self._channel_counters: Dict[str, Dict[str, int]] = {}
         self._own_transport = transport is None
         self._free_t0: Optional[float] = None
-        if transport is not None and faults is not None:
-            transport = self._wrap(transport, stream=0)
-        self.transport = transport or self._data_channel()
-        self._hb_channel: Transport = self._heartbeat_channel()
+        if self.transport_kind == "socket":
+            # heartbeat sink first: the pool routes child beacons into it
+            self._hb_channel: Transport = self._heartbeat_channel()
+            self.transport = self._data_channel()
+        else:
+            if transport is not None and faults is not None:
+                transport = self._wrap(transport, stream=0)
+            self.transport = transport or self._data_channel()
+            self._hb_channel = self._heartbeat_channel()
+        self._sender = self._make_sender()
         self._hb_enabled = (faults is not None and faults.liveness_enabled
                             and mode == "free")
         self._delivery = DeliveryTracker(
@@ -157,7 +182,7 @@ class ConcurrentRuntime(EngineBase):
             "overlap_samples": [], "compute_seconds_total": 0.0,
         }
         devices = jax.devices()
-        if pin_devices and len(devices) > 1:
+        if pin_devices and len(devices) > 1 and self.transport_kind != "socket":
             for w in self.workers.values():
                 w.device = devices[w.wid % len(devices)]
 
@@ -174,6 +199,16 @@ class ConcurrentRuntime(EngineBase):
                                clock=self._virtual_now)
 
     def _data_channel(self) -> Transport:
+        if self.transport_kind == "socket":
+            # the pool's SocketTransport is deliberately UNWRAPPED here:
+            # the worker processes inject faults on their side of the
+            # wire (same streams, same dice), so wrapping again would
+            # double-inject
+            self._pool = WorkerProcessPool(
+                self.cfg, capacity=self._capacity, faults=self.faults,
+                mode=self.mode, pace_scale=self.pace_scale,
+                hb_sink=self._hb_channel)
+            return self._pool.transport
         inner = InProcTransport(self._capacity)
         return self._wrap(inner, stream=0) if self.faults else inner
 
@@ -181,7 +216,15 @@ class ConcurrentRuntime(EngineBase):
         # side channel: beacons never queue behind pseudo-gradient
         # backpressure, and partitions silence them like any other frame
         inner = InProcTransport(max(64 * max(len(self.workers), 1), 256))
+        if self.transport_kind == "socket":
+            return inner                 # children wrap their own hb stream
         return self._wrap(inner, stream=1) if self.faults else inner
+
+    def _make_sender(self) -> ReliableSender:
+        return ReliableSender(
+            self.transport, spec=self.faults, tracer=self.tracer,
+            default_timeout=self._RELIABLE_ACK_TIMEOUT,
+            on_retry=lambda env, attempt: self._bump("retries"))
 
     # ------------------------------------------------------- worker threads
     def _start_worker_thread(self, wid: int):
@@ -249,39 +292,10 @@ class ConcurrentRuntime(EngineBase):
                 return                              # channel torn down
 
     def _send_reliably(self, env: Envelope, waiter: AckWaiter) -> bool:
-        """At-least-once send: retry the frame until the server's delivery
-        receipt lands. Backoff is exponential with deterministic jitter;
-        a quarantine ack stops the retries (the server will not accept
-        this worker again). Returns False when the channel is gone."""
-        spec = self.faults
-        base = spec.ack_timeout if spec else self._RELIABLE_ACK_TIMEOUT
-        boff = spec.backoff_base if spec else 2.0
-        cap = spec.max_backoff if spec else self._RELIABLE_ACK_TIMEOUT
-        attempt = 0
-        while True:
-            try:
-                with self.tracer.span("transport.send", cat="transport",
-                                      wid=env.wid, seq=env.seq,
-                                      attempt=attempt):
-                    self.transport.send(dataclasses.replace(env,
-                                                            attempt=attempt))
-            except TransportClosed:
-                return False
-            timeout = min(base * (boff ** attempt), cap)
-            if spec is not None:
-                timeout *= 1.0 + spec.retry_jitter(env.wid, env.seq, attempt)
-            with self.tracer.span("transport.ack_wait", cat="transport",
-                                  wid=env.wid, seq=env.seq,
-                                  attempt=attempt):
-                ack = waiter.wait_for(env, timeout)
-            if ack is not None:
-                return True                  # delivered (or quarantined)
-            if waiter.closed:
-                return False
-            attempt += 1
-            self.tracer.instant("transport.retry", cat="transport",
-                                wid=env.wid, seq=env.seq, attempt=attempt)
-            self._bump("retries")
+        """At-least-once send via the shared ``ReliableSender`` (the same
+        class the socket worker processes run). Returns False when the
+        channel is gone."""
+        return self._sender.send(env, waiter)
 
     def _heartbeat_loop(self, wid: int, stop: threading.Event):
         """Liveness side channel: one beacon per interval until the
@@ -314,6 +328,17 @@ class ConcurrentRuntime(EngineBase):
 
     def _submit(self, task: RoundTask):
         self._ensure_open()
+        if self._pool is not None:
+            inc = self._pool.ensure(task.wid)
+            if inc is not None:          # fresh process: fresh stream
+                self._delivery.reset_stream(task.wid)
+                self._last_beat[task.wid] = time.monotonic()
+                self._miss_counted[task.wid] = 0
+            self._pool.clock = (self._free_t0, self.pace_scale)
+            self._last_task[task.wid] = (self._pool.incarnation(task.wid),
+                                         task)
+            self._pool.submit(task.wid, task)
+            return
         th = self._threads.get(task.wid)
         if th is None or not th.is_alive():
             self._start_worker_thread(task.wid)
@@ -339,9 +364,15 @@ class ConcurrentRuntime(EngineBase):
                     raise
                 raise RuntimeError(
                     f"no arrival within {self.result_timeout}s — worker "
-                    f"thread dead, wedged, or quarantined (threads alive: "
+                    f"thread/process dead, wedged, or quarantined (threads "
+                    f"alive: "
                     f"{[w for w, t in self._threads.items() if t.is_alive()]},"
+                    f" procs alive: "
+                    f"{[w for w in self.workers if self._pool is not None and self._pool.alive(w)]},"
                     f" quarantined: {sorted(self._delivery.quarantined)})")
+            if isinstance(msg, WorkerExit):
+                self._handle_worker_exit(msg)
+                continue
             if isinstance(msg, Envelope):
                 payload = self._process_envelope(msg)
                 if payload is None:
@@ -354,6 +385,29 @@ class ConcurrentRuntime(EngineBase):
                     f"{msg.error}")
             self.stats["compute_seconds_total"] += msg.compute_seconds
             return msg
+
+    # ------------------------------------------------- process supervision
+    def _handle_worker_exit(self, ev: WorkerExit):
+        """A worker process died outside a graceful shutdown. If the
+        round the engine is waiting on was submitted to exactly that
+        incarnation, respawn the process and resubmit the SAME task
+        snapshot — a deterministic recompute of the same round (same
+        task_id), so deterministic replay sails straight through a
+        mid-run process kill. Anything else (stale incarnation, worker
+        already crashed/departed) needs no action: the generation
+        machinery has it covered."""
+        self._proc_counters["proc_exits"] += 1
+        if self._pool is None or self._shut:
+            return
+        entry = self._last_task.get(ev.wid)
+        w = self.workers.get(ev.wid)
+        if (entry is not None and w is not None and w.alive
+                and entry[0] == ev.incarnation
+                and w.pending_task_id is not None
+                and entry[1].task_id == w.pending_task_id):
+            self._proc_counters["proc_restarts"] += 1
+            self._telemetry_fault("proc_restart", wid=ev.wid)
+            self._submit(entry[1])
 
     # --------------------------------------------------- delivery protocol
     def _process_envelope(self, env: Envelope) -> Optional[Any]:
@@ -382,6 +436,11 @@ class ConcurrentRuntime(EngineBase):
         if (spec is not None and not quarantined
                 and spec.drops_ack(env.wid, env.seq, env.attempt)):
             self._bump("acks_dropped")           # lost receipt -> redelivery
+            return
+        if self._pool is not None:
+            self._pool.send_ack(env.wid,
+                                Ack(wid=env.wid, generation=env.generation,
+                                    seq=env.seq, quarantined=quarantined))
             return
         waiter = self._ack_waiters.get(env.wid)
         if waiter is not None:
@@ -532,6 +591,9 @@ class ConcurrentRuntime(EngineBase):
         super()._crash_worker(w)
 
     def _on_worker_removed(self, w: Worker):
+        if self._pool is not None:
+            self._pool.kill(w.wid)
+        self._last_task.pop(w.wid, None)
         inbox = self._inboxes.pop(w.wid, None)
         if inbox is not None:
             inbox.put(None)                             # poison pill
@@ -552,22 +614,53 @@ class ConcurrentRuntime(EngineBase):
             if not self._own_transport:
                 raise RuntimeError("transport closed; inject a fresh one")
             self._fold_fault_counters()
-            self.transport = self._data_channel()
-            self._hb_channel = self._heartbeat_channel()
+            if self.transport_kind == "socket":
+                self._hb_channel = self._heartbeat_channel()
+                self.transport = self._data_channel()   # fresh pool
+            else:
+                self.transport = self._data_channel()
+                self._hb_channel = self._heartbeat_channel()
+            self._sender = self._make_sender()
             self._shut = False
 
     def _fold_fault_counters(self):
         """Carry injected-fault counts across channel rebuilds."""
-        for tr in (self.transport, self._hb_channel):
+        for name, tr in (("data", self.transport),
+                         ("heartbeat", self._hb_channel)):
             if isinstance(tr, FaultyTransport):
+                acc = self._channel_counters.setdefault(name, {})
                 for k, v in tr.counters.items():
                     self._fault_accum[k] = self._fault_accum.get(k, 0) + v
+                    acc[k] = acc.get(k, 0) + v
+
+    def _harvest_child_counters(self):
+        """Fold the per-channel counters the worker processes reported at
+        graceful shutdown into the run totals: injected faults join
+        ``_fault_accum`` (so ``delivery_stats`` matches the in-process
+        backend), protocol retries join the delivery counters."""
+        if self._pool is None:
+            return
+        for channel, counters in self._pool.child_counters.items():
+            acc = self._channel_counters.setdefault(channel, {})
+            for k, v in counters.items():
+                acc[k] = acc.get(k, 0) + v
+                if channel == "protocol":
+                    if k in DELIVERY_COUNTERS:
+                        self._bump(k, v)
+                else:
+                    self._fault_accum[k] = self._fault_accum.get(k, 0) + v
+        self._pool.child_counters.clear()
 
     def shutdown(self):
-        """Tear down worker threads. Idempotent; ``run``/``restore`` after
-        shutdown transparently rebuild the channel + threads."""
+        """Tear down worker threads/processes. Idempotent; ``run``/
+        ``restore`` after shutdown transparently rebuild the channel +
+        workers."""
         self._shut = True
-        self.transport.close()
+        if self._pool is not None:
+            self._pool.close()          # stop -> stats harvest -> join
+            self._harvest_child_counters()
+        else:
+            self.transport.close()
         self._hb_channel.close()
         for stop in self._hb_stops.values():
             stop.set()
@@ -755,6 +848,24 @@ class ConcurrentRuntime(EngineBase):
             if isinstance(tr, FaultyTransport):
                 for k, v in tr.counters.items():
                     out[k] = out.get(k, 0) + v
+        for k, v in self._proc_counters.items():
+            if v:
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def delivery_channels(self) -> Dict[str, Dict[str, int]]:
+        """Per-channel view of the injected-fault / protocol counters.
+        In-process mode reads the live ``FaultyTransport`` wrappers;
+        socket mode reports what the worker processes tallied on their
+        side of the wire (harvested at graceful shutdown), keyed
+        "data" / "heartbeat" / "protocol"."""
+        out = {k: dict(v) for k, v in self._channel_counters.items()}
+        for name, tr in (("data", self.transport),
+                         ("heartbeat", self._hb_channel)):
+            if isinstance(tr, FaultyTransport):
+                acc = out.setdefault(name, {})
+                for k, v in tr.counters.items():
+                    acc[k] = acc.get(k, 0) + v
         return out
 
     def stats_summary(self) -> Dict[str, Any]:
@@ -779,4 +890,8 @@ class ConcurrentRuntime(EngineBase):
             "overlap_max": max(ov) if ov else 0,
             "overlap_commits": sum(1 for x in ov if x >= 1),
             "delivery": self.delivery_stats(),
+            "delivery_channels": self.delivery_channels(),
+            "transport": self.transport_kind,
+            "proc_exits": self._proc_counters["proc_exits"],
+            "proc_restarts": self._proc_counters["proc_restarts"],
         }

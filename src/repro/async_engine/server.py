@@ -212,10 +212,13 @@ class Synchronizer:
         return self._step if self.packed else int(self._state.step)
 
     # -- worker initialization ------------------------------------------------
-    def worker_init(self) -> PyTree:
+    def worker_init(self, wid: Optional[int] = None) -> PyTree:
         """Model state handed to a newly-available worker (Eq. 5 look-ahead
         for methods that participate in it — ``OuterMethod.lookahead_init``
-        — plain theta_t for the Nesterov baselines)."""
+        — plain theta_t for the Nesterov baselines). The hub server hands
+        every worker the same state; ``wid`` exists for the decentralized
+        topologies (``repro.async_engine.topology``), where each worker
+        continues from its own replica."""
         if self.cfg.lookahead_init and self.method.lookahead_init:
             if self.packed:
                 return self._lookahead_packed(self._pbuf, self._mbuf)

@@ -1,0 +1,203 @@
+"""Decentralized exchange topologies: NoLoCo-style ring / gossip mixing.
+
+The hub-and-spoke ``Synchronizer`` applies every pseudo-gradient to ONE
+shared outer state. NoLoCo (arXiv 2506.10911) removes the hub: each
+worker keeps its own model replica, applies its own outer step locally,
+and then averages parameters (and outer momentum) with ONE sampled peer
+— no all-reduce, no coordinator, communication cost O(1) per round
+regardless of the worker count. ``PeerMixer`` implements that exchange
+behind the exact ``Synchronizer`` surface the engines consume
+(``worker_init`` / ``on_arrival`` / ``state`` / ``t`` /
+``set_n_workers``), so *topology* becomes a scenario axis
+(``Scenario.topology``: "hub" | "ring" | "gossip") orthogonal to the
+engine, the transport, and the outer method grid — one golden-traced
+run semantics across the simulator, the threaded runtime, and the
+multi-process socket backend.
+
+Peer sampling is deterministic — a pure function of ``(seed, outer_step,
+wid)`` over the sorted replica set (the same splitmix64 dice as the
+fault injector) — so a gossip run is exactly replayable across engines
+and process boundaries:
+
+  ring    each arrival averages with the next live wid in sorted cyclic
+          order (a directed ring);
+  gossip  each arrival averages with a uniformly-hashed random peer.
+
+Per-replica outer update (Nesterov flavour, matching the repo's
+``nesterov`` outer method):
+
+  m_i <- mu * m_i + Delta_i
+  p_i <- p_i - eta * (Delta_i + mu * m_i)
+  (p_i, m_i), (p_j, m_j) <- pairwise mean with the sampled peer j
+
+The global ``state`` view (evals, checkpoints, golden param digests) is
+the mean over replicas, computed on demand and cached between arrivals.
+``state``-setter broadcasts (a checkpoint restore resets every replica
+to the checkpoint — real-world restore semantics). Stale-drop
+(``drop_stale_after``) skips both the local step and the mix for that
+arrival. Limitations (asserted in ``Scenario``): async methods only (no
+sync barrier), hub-only method machinery (delayed-Nesterov buffers,
+DC-ASGD compensation) does not participate — the method's outer_lr /
+momentum are reused as the per-replica step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.async_engine.faults import _unit
+from repro.async_engine.server import ArrivalRecord
+from repro.configs.base import OuterOptConfig
+from repro.core import methods as outer_methods
+from repro.core.heloco import OuterState
+
+PyTree = Any
+
+TOPOLOGIES = ("hub", "ring", "gossip")
+
+_S_PEER = 101                        # splitmix64 stream salt for peer dice
+
+
+class PeerMixer:
+    """Hub-less synchronizer: per-worker replicas + pairwise peer
+    averaging. Duck-types the ``Synchronizer`` surface the engines use."""
+
+    #: engines read these to pick the commit / block_until_ready path
+    packed = False
+    layout = None
+
+    def __init__(self, init_params: PyTree, cfg: OuterOptConfig,
+                 n_workers: int, *, kind: str = "gossip", seed: int = 0):
+        assert kind in ("ring", "gossip"), kind
+        self.cfg = cfg
+        self.kind = kind
+        self.seed = seed
+        self.method = outer_methods.resolve(cfg.method)
+        assert not self.method.sync, \
+            "decentralized topologies have no barrier; use an async method"
+        self.n_workers = n_workers
+        self.records: List[ArrivalRecord] = []
+        self._committed: Dict[Any, ArrivalRecord] = {}
+        self._init_params = init_params
+        self._p: Dict[int, PyTree] = {}          # wid -> replica params
+        self._m: Dict[int, PyTree] = {}          # wid -> replica momentum
+        self._t = 0
+        self._mean_cache: Optional[OuterState] = None
+        lr, mu = cfg.outer_lr, cfg.momentum
+
+        def _local(p, m, delta):
+            m2 = jax.tree.map(
+                lambda mm, dd: mu * mm + dd.astype(jnp.float32), m, delta)
+            p2 = jax.tree.map(
+                lambda pp, dd, mm: pp - lr * (dd.astype(jnp.float32)
+                                              + mu * mm),
+                p, delta, m2)
+            return p2, m2
+
+        self._local = jax.jit(_local)
+        self._mix = jax.jit(
+            lambda a, b: jax.tree.map(lambda x, y: (x + y) * 0.5, a, b))
+
+    # -- replica management ---------------------------------------------------
+    def _ensure_replica(self, wid: int):
+        if wid not in self._p:
+            # a replica born mid-run (elastic join) starts from the
+            # current global mean — the same semantics as the hub
+            self._p[wid] = (self._mean_params() if self._p
+                            else self._init_params)
+            self._m[wid] = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), self._p[wid])
+            self._mean_cache = None
+
+    def worker_init(self, wid: Optional[int] = None) -> PyTree:
+        if wid is None:
+            return self.state.params
+        self._ensure_replica(wid)
+        return self._p[wid]
+
+    # -- peer sampling (deterministic in (seed, t, wid)) -----------------------
+    def _pick_peer(self, wid: int) -> Optional[int]:
+        others = sorted(w for w in self._p if w != wid)
+        if not others:
+            return None
+        if self.kind == "ring":
+            nxt = [w for w in others if w > wid]
+            return nxt[0] if nxt else others[0]
+        idx = int(_unit(self.seed, _S_PEER, self._t, wid) * len(others))
+        return others[min(idx, len(others) - 1)]
+
+    # -- state view (mean over replicas) ---------------------------------------
+    def _mean_params(self) -> PyTree:
+        reps = [self._p[w] for w in sorted(self._p)]
+        n = float(len(reps))
+        return jax.tree.map(lambda *xs: sum(xs) / n, *reps)
+
+    @property
+    def state(self) -> OuterState:
+        if self._mean_cache is None:
+            if not self._p:
+                params = self._init_params
+                mom = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            else:
+                params = self._mean_params()
+                reps = [self._m[w] for w in sorted(self._m)]
+                n = float(len(reps))
+                mom = jax.tree.map(lambda *xs: sum(xs) / n, *reps)
+            self._mean_cache = OuterState(
+                params=params, momentum=mom,
+                step=jnp.asarray(self._t, jnp.int32), aux=None)
+        return self._mean_cache
+
+    @state.setter
+    def state(self, value: OuterState):
+        # restore semantics: every replica resets to the checkpoint
+        self._init_params = value.params
+        for wid in self._p:
+            self._p[wid] = value.params
+            self._m[wid] = value.momentum
+        self._t = int(value.step)
+        self._mean_cache = None
+
+    @property
+    def t(self) -> int:
+        return self._t
+
+    # -- arrival processing -----------------------------------------------------
+    def on_arrival(self, delta: PyTree, s_i: int, worker_id: int,
+                   sim_time: float = 0.0, lang: str = "",
+                   commit_key=None) -> ArrivalRecord:
+        if commit_key is not None:
+            prior = self._committed.get(commit_key)
+            if prior is not None:
+                return prior
+        self._ensure_replica(worker_id)
+        tau = self._t - s_i
+        dropped = (self.cfg.drop_stale_after is not None
+                   and tau > self.cfg.drop_stale_after)
+        if not dropped:
+            p2, m2 = self._local(self._p[worker_id], self._m[worker_id],
+                                 delta)
+            peer = self._pick_peer(worker_id)
+            if peer is not None:
+                p2 = self._mix(p2, self._p[peer])
+                m2 = self._mix(m2, self._m[peer])
+                self._p[peer], self._m[peer] = p2, m2
+            self._p[worker_id], self._m[worker_id] = p2, m2
+        self._t += 1
+        self._mean_cache = None
+        rec = ArrivalRecord(outer_step=self._t, worker_id=worker_id,
+                            staleness=tau, rho=1.0, sim_time=sim_time,
+                            lang=lang, dropped=dropped)
+        self.records.append(rec)
+        if commit_key is not None:
+            self._committed[commit_key] = rec
+        return rec
+
+    def on_sync_round(self, deltas, sim_time: float = 0.0):
+        raise RuntimeError("decentralized topologies have no sync barrier")
+
+    def set_n_workers(self, n: int):
+        self.n_workers = n

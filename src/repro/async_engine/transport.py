@@ -43,16 +43,19 @@ rejects frames whose recomputed CRC disagrees with the envelope — see
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 import zlib
 from abc import ABC, abstractmethod
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+from repro.obs.spans import NULL_TRACER
 
 
 class TransportClosed(Exception):
@@ -252,3 +255,66 @@ class AckWaiter:
     @property
     def closed(self) -> bool:
         return self._closed
+
+
+class ReliableSender:
+    """The sender half of at-least-once delivery, shared VERBATIM between
+    the threaded runtime (one per ``ConcurrentRuntime``) and the socket
+    worker processes (one per child): send the frame, wait for the
+    server's delivery receipt, resend with exponential backoff +
+    deterministic jitter until it lands. A quarantine ack stops the
+    retries like any other ack — the server will simply never accept this
+    worker again.
+
+    ``spec`` is an optional ``repro.async_engine.faults.FaultSpec``
+    supplying the protocol knobs (``ack_timeout`` / ``backoff_base`` /
+    ``max_backoff`` / ``retry_jitter``); without one the fault-free
+    defaults apply. ``on_retry`` is called once per resend (the runtime
+    bumps its ``retries`` delivery counter there).
+    """
+
+    #: ack wait on a fault-free channel before a (harmless) resend
+    DEFAULT_ACK_TIMEOUT = 5.0
+
+    def __init__(self, transport: "Transport", *, spec=None,
+                 tracer=None, default_timeout: Optional[float] = None,
+                 on_retry: Optional[Callable[["Envelope", int], None]] = None):
+        self.transport = transport
+        self.spec = spec
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.default_timeout = default_timeout or self.DEFAULT_ACK_TIMEOUT
+        self.on_retry = on_retry
+
+    def send(self, env: "Envelope", waiter: "AckWaiter") -> bool:
+        """Deliver ``env`` at least once. Returns False when the channel
+        (or the ack mailbox) is torn down before the receipt lands."""
+        spec = self.spec
+        base = spec.ack_timeout if spec else self.default_timeout
+        boff = spec.backoff_base if spec else 2.0
+        cap = spec.max_backoff if spec else self.default_timeout
+        attempt = 0
+        while True:
+            try:
+                with self.tracer.span("transport.send", cat="transport",
+                                      wid=env.wid, seq=env.seq,
+                                      attempt=attempt):
+                    self.transport.send(dataclasses.replace(env,
+                                                            attempt=attempt))
+            except TransportClosed:
+                return False
+            timeout = min(base * (boff ** attempt), cap)
+            if spec is not None:
+                timeout *= 1.0 + spec.retry_jitter(env.wid, env.seq, attempt)
+            with self.tracer.span("transport.ack_wait", cat="transport",
+                                  wid=env.wid, seq=env.seq,
+                                  attempt=attempt):
+                ack = waiter.wait_for(env, timeout)
+            if ack is not None:
+                return True                  # delivered (or quarantined)
+            if waiter.closed:
+                return False
+            attempt += 1
+            self.tracer.instant("transport.retry", cat="transport",
+                                wid=env.wid, seq=env.seq, attempt=attempt)
+            if self.on_retry is not None:
+                self.on_retry(env, attempt)

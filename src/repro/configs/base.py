@@ -219,6 +219,9 @@ class RunConfig:
     mixture_alpha: Optional[float] = None
     shard_assignment: str = "fixed"  # "fixed" | "flexible" (App. A.6)
     dylu: bool = False               # Dynamic Local Updates
+    # exchange topology: "hub" (Synchronizer) or a decentralized
+    # NoLoCo-style "ring" / "gossip" (repro.async_engine.topology)
+    topology: str = "hub"
     # fault tolerance:
     ckpt_every: int = 0              # outer steps between checkpoints (0=off)
     ckpt_dir: str = ""

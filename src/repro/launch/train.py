@@ -58,6 +58,8 @@ def scenario_from_args(args) -> Scenario:
         engine=args.engine,
         mode="free" if args.free else "deterministic",
         pace_scale=args.pace_scale,
+        transport=getattr(args, "transport", "inproc"),
+        topology=getattr(args, "topology", "hub"),
         n_workers=args.workers, worker_paces=paces,
         inner_steps=args.inner, outer_steps=args.outer,
         batch_size=args.batch, seq_len=args.seq,
@@ -129,6 +131,16 @@ def main():
                     help="dump the runtime stats_summary() as JSON at "
                          "exit (machine-readable CI artifact)")
     ap.add_argument("--engine", default="sim", choices=["sim", "wallclock"])
+    ap.add_argument("--transport", default="inproc",
+                    choices=["inproc", "socket"],
+                    help="wallclock engine backend: threaded workers over "
+                         "the in-process queue, or real worker processes "
+                         "over the socket transport")
+    ap.add_argument("--topology", default="hub",
+                    choices=["hub", "ring", "gossip"],
+                    help="exchange topology: hub-and-spoke server, or "
+                         "decentralized NoLoCo-style ring/gossip peer "
+                         "averaging (async methods only)")
     ap.add_argument("--free", action="store_true",
                     help="wallclock engine: free-running arrival order "
                          "instead of the deterministic simulator schedule")
@@ -144,6 +156,9 @@ def main():
     if args.chaos and args.engine != "wallclock":
         ap.error("--chaos needs --engine wallclock (the simulator has no "
                  "transport to inject faults into)")
+    if args.transport == "socket" and args.engine != "wallclock":
+        ap.error("--transport socket needs --engine wallclock (the "
+                 "simulator has no worker processes)")
 
     if args.list_scenarios:
         for s in registry.all_scenarios():
@@ -153,6 +168,8 @@ def main():
 
     if args.scenario:
         scn = registry.get_scenario(args.scenario)
+        if args.transport != "inproc" and scn.engine == "wallclock":
+            scn = scn.overridden(transport=args.transport)
         print(f"scenario {scn.name}: {scn.description}")
     else:
         scn = scenario_from_args(args)

@@ -10,7 +10,9 @@ assignment and Dirichlet mixtures, staleness regimes (drop / delay
 weighting), DyLU, int8 compression with error feedback, crash/rejoin,
 elastic membership, flexible shard assignment, the synchronous barrier
 baseline, the delayed-Nesterov and DC-ASGD outer-method baselines (sim +
-wall-clock), and both wall-clock commit orders.
+wall-clock), both wall-clock commit orders, decentralized ring/gossip
+topologies (docs/topologies.md), and the multi-process socket transport
+(docs/runtime.md, "Process transport").
 """
 from __future__ import annotations
 
@@ -210,6 +212,38 @@ register(Scenario(
     n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
     outer_steps=10, inner_steps=2,
     faults=FaultSpec(corrupt_p=0.25, ack_drop_p=0.1, seed=11)))
+
+# -- topology: decentralized NoLoCo-style mixing (docs/topologies.md) -------
+
+register(Scenario(
+    name="gossip_ring",
+    description="Decentralized ring topology: each arrival applies a "
+                "local Nesterov step on the worker's own replica and "
+                "averages with the next worker in the ring — no hub, "
+                "O(1) communication per round.",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=12, inner_steps=2, method="nesterov", topology="ring"))
+
+register(Scenario(
+    name="gossip_random",
+    description="Decentralized gossip topology: peer sampled by a "
+                "deterministic hash of (seed, outer_step, wid) — the "
+                "NoLoCo-style random pairwise average, exactly "
+                "replayable across engines and process boundaries.",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=12, inner_steps=2, method="nesterov", topology="gossip"))
+
+# -- transport: the multi-process socket backend ----------------------------
+
+register(Scenario(
+    name="socket_hetero",
+    description="wallclock_hetero over the multi-process socket backend: "
+                "real worker processes, socket rendezvous, length-"
+                "prefixed Envelope frames — trace-identical to the "
+                "threaded twin (and the simulator).",
+    engine="wallclock", mode="deterministic", transport="socket",
+    n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
+    outer_steps=10, inner_steps=2))
 
 register(Scenario(
     name="chaos_partition",

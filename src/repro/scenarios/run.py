@@ -5,11 +5,16 @@
     PYTHONPATH=src python -m repro.scenarios.run verify --all
     PYTHONPATH=src python -m repro.scenarios.run verify --engine-filter sim
     PYTHONPATH=src python -m repro.scenarios.run verify --all --cross
+    PYTHONPATH=src python -m repro.scenarios.run verify chaos_lossy \
+        --transport socket
 
 ``verify`` exits non-zero on any mismatch and writes a machine-readable
 diff per failing scenario under ``--diff-dir`` (uploaded as a CI
 artifact). ``--cross`` additionally replays every sim scenario on the
-deterministic wall-clock engine and demands the identical trace.
+deterministic wall-clock engine and demands the identical trace;
+``--transport socket`` reruns wallclock scenarios (and cross-engine
+replays) over the multi-process socket backend against the UNMODIFIED
+committed goldens — the backend must not change the trace.
 """
 from __future__ import annotations
 
@@ -28,7 +33,16 @@ def _select(args) -> List[Scenario]:
         scns = [registry.get_scenario(n) for n in args.names]
     if args.engine_filter:
         scns = [s for s in scns if s.engine == args.engine_filter]
+    if getattr(args, "transport_filter", None):
+        scns = [s for s in scns if s.transport == args.transport_filter]
     return scns
+
+
+def _grouped(scns: List[Scenario]) -> List[Scenario]:
+    """Group by execution substrate: engine, then transport, then mode —
+    the order the CI lanes slice the registry in."""
+    return sorted(scns, key=lambda s: (s.engine, s.transport, s.mode,
+                                       s.name))
 
 
 def main(argv=None) -> int:
@@ -37,6 +51,7 @@ def main(argv=None) -> int:
 
     p_list = sub.add_parser("list", help="registered scenarios")
     p_list.add_argument("--engine-filter", choices=["sim", "wallclock"])
+    p_list.add_argument("--transport-filter", choices=["inproc", "socket"])
 
     for name, hlp in (("record", "(re)write golden traces"),
                       ("verify", "re-run + compare against goldens")):
@@ -47,6 +62,9 @@ def main(argv=None) -> int:
         p.add_argument("--dir", default=trace.GOLDEN_DIR,
                        help="golden trace directory")
         p.add_argument("--engine-filter", choices=["sim", "wallclock"])
+        p.add_argument("--transport-filter", choices=["inproc", "socket"],
+                       help="select only scenarios registered on this "
+                            "transport")
         if name == "verify":
             p.add_argument("--cross", action="store_true",
                            help="also replay sim scenarios on the "
@@ -55,6 +73,9 @@ def main(argv=None) -> int:
                            help="run ONLY the cross-engine replays (skips "
                                 "the plain verification the scenarios-sim "
                                 "CI lane already runs)")
+            p.add_argument("--transport", choices=["socket"],
+                           help="rerun over this wallclock backend against "
+                                "the unmodified committed goldens")
             p.add_argument("--diff-dir", default="results/golden_diffs",
                            help="where failure diffs are written")
     args = ap.parse_args(argv)
@@ -63,13 +84,22 @@ def main(argv=None) -> int:
         scns = registry.all_scenarios()
         if args.engine_filter:
             scns = [s for s in scns if s.engine == args.engine_filter]
-        for s in scns:
+        if args.transport_filter:
+            scns = [s for s in scns if s.transport == args.transport_filter]
+        group = None
+        for s in _grouped(scns):
+            key = (s.engine, s.transport)
+            if key != group:
+                group = key
+                print(f"-- engine={s.engine} transport={s.transport} --")
             exact = "exact" if s.exact else "banded"
-            print(f"{s.name:24s} engine={s.engine}/{s.mode:13s} "
-                  f"[{exact}]  {s.description}")
+            topo = "" if s.topology == "hub" else f" topo={s.topology}"
+            print(f"  {s.name:24s} {s.mode:13s} [{exact}]{topo}  "
+                  f"{s.description}")
+        print(f"\n{len(scns)} scenarios")
         return 0
 
-    scns = _select(args)
+    scns = _grouped(_select(args))
     if not scns:
         print("no scenarios selected", file=sys.stderr)
         return 2
@@ -85,16 +115,27 @@ def main(argv=None) -> int:
                  and s.engine == "sim" else [])
         return ([] if args.cross_only else [False]) + cross
 
-    failed = total = 0
+    transport = args.transport
+    failed = total = skipped = 0
     for s in scns:
         for cross in checks_for(s):
+            # a transport override reruns wallclock scenarios on the
+            # other backend; sim scenarios only via their cross replay
+            tr = transport if (cross or s.engine == "wallclock") else None
+            if transport and tr is None:
+                skipped += 1
+                continue
             total += 1
-            res = trace.verify(s, args.dir, cross_engine=cross)
+            res = trace.verify(s, args.dir, cross_engine=cross,
+                               transport=tr)
             print(res.report())
             if not res.ok:
                 failed += 1
                 diff = trace.write_diff(res, args.diff_dir)
                 print(f"    diff -> {diff}")
+    if skipped:
+        print(f"({skipped} sim-only checks skipped under "
+              f"--transport {transport}; use --cross for those)")
     if not total:
         print("no applicable golden-trace checks for this selection "
               "(--cross-only applies to sim scenarios)", file=sys.stderr)

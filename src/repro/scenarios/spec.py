@@ -34,6 +34,8 @@ METHOD_TABLE: Dict[str, Dict[str, Any]] = outer_methods.method_table()
 
 ENGINES = ("sim", "wallclock")
 MODES = ("deterministic", "free")
+TRANSPORTS = ("inproc", "socket")
+TOPOLOGIES = ("hub", "ring", "gossip")
 
 
 @dataclass(frozen=True)
@@ -80,6 +82,8 @@ class Scenario:
     engine: str = "sim"              # "sim" | "wallclock"
     mode: str = "deterministic"      # wallclock commit order
     pace_scale: float = 0.0          # wallclock free-running throttle
+    transport: str = "inproc"        # wallclock backend: "inproc" | "socket"
+    topology: str = "hub"            # "hub" | "ring" | "gossip" (NoLoCo)
     # -- schedule / heterogeneity -------------------------------------------
     n_workers: int = 4
     worker_paces: Tuple[float, ...] = (1.0,)     # cycled to n_workers
@@ -122,11 +126,24 @@ class Scenario:
     def __post_init__(self):
         assert self.engine in ENGINES, self.engine
         assert self.mode in MODES, self.mode
+        assert self.transport in TRANSPORTS, self.transport
+        assert self.topology in TOPOLOGIES, self.topology
+        if self.transport == "socket":
+            # the socket backend is a wallclock runtime feature: the
+            # simulator has no processes to rendezvous with
+            assert self.engine == "wallclock", \
+                f"transport='socket' needs engine='wallclock', " \
+                f"got {self.engine!r}"
         # canonicalize benchmark-dialect aliases ("async-heloco" -> heloco);
         # raises KeyError for unknown methods
         object.__setattr__(self, "method",
                            outer_methods.canonical(self.method))
         assert self.n_workers >= 1 and self.worker_paces
+        if self.topology != "hub":
+            # decentralized mixing has no barrier to synchronize on
+            assert not outer_methods.get(self.method).sync, \
+                f"topology={self.topology!r} needs an async method, " \
+                f"got {self.method!r}"
         if self.faults is not None:
             # the simulator has no transport to inject faults into, and
             # partition windows live on the free-running virtual clock
@@ -197,6 +214,7 @@ class Scenario:
             mixture_alpha=self.mixture_alpha,
             shard_assignment=self.shard_assignment,
             dylu=self.dylu,
+            topology=self.topology,
             seed=self.seed)
 
     # ----------------------------------------------------------- materialize
@@ -209,6 +227,8 @@ class Scenario:
             engine_kw = dict(mode=self.mode, pace_scale=self.pace_scale)
             if self.faults is not None:
                 engine_kw["faults"] = self.faults
+            if self.transport != "inproc":
+                engine_kw["transport"] = self.transport
         failures = [FailureEvent(time=f.time, wid=f.wid,
                                  restart_delay=f.restart_delay)
                     for f in self.failures]
@@ -247,6 +267,12 @@ class Scenario:
             d["faults"] = self.faults.to_dict()
         if not self.telemetry_every:
             d.pop("telemetry_every")
+        # new axes pop at their defaults so every pre-existing golden's
+        # scenario dict stays byte-identical
+        if self.transport == "inproc":
+            d.pop("transport")
+        if self.topology == "hub":
+            d.pop("topology")
         return d
 
     @classmethod

@@ -268,17 +268,23 @@ def _verify_banded(fails: List[str], got: Dict, want: Dict,
 
 def verify(scn: Scenario, golden_dir: str = GOLDEN_DIR, *,
            cross_engine: bool = False,
+           transport: Optional[str] = None,
            fresh: Optional[Dict[str, Any]] = None) -> VerifyResult:
     """Re-run `scn` and compare against its committed golden trace.
 
     ``cross_engine=True`` (sim scenarios only) replays the scenario on the
     deterministic wall-clock engine instead and demands the identical
     arrival trace + fp32-close numerics versus the *sim-recorded* golden.
+    ``transport`` overrides the wallclock backend for the FRESH run only
+    (e.g. "socket" replays the committed golden over real worker
+    processes) — the golden's recorded spec is compared untouched, which
+    is exactly the point: the backend must not change the trace.
     ``fresh`` injects a pre-computed trace document (testing hook).
     """
     path = golden_path(scn.name, golden_dir)
-    res = VerifyResult(name=scn.name +
-                       (" [cross-engine wallclock]" if cross_engine else ""),
+    tags = ("[cross-engine wallclock]" if cross_engine else "",
+            f"[transport={transport}]" if transport else "")
+    res = VerifyResult(name=" ".join(x for x in (scn.name,) + tags if x),
                        ok=True)
     if not os.path.exists(path):
         res.ok = False
@@ -305,7 +311,8 @@ def verify(scn: Scenario, golden_dir: str = GOLDEN_DIR, *,
             res.failures.append("cross-engine verify only applies to sim "
                                 "scenarios")
             return res
-        replay = scn.overridden(engine="wallclock", mode="deterministic")
+        replay = scn.overridden(engine="wallclock", mode="deterministic",
+                                transport=transport or scn.transport)
         got = fresh or run_trace(replay)
         _cmp_arrivals(res.failures, got["arrivals"], want["arrivals"])
         _cmp_evals(res.failures, got["evals"], want["evals"], _close_f32)
@@ -316,7 +323,17 @@ def verify(scn: Scenario, golden_dir: str = GOLDEN_DIR, *,
         _cmp_fingerprint(res.failures, got["param_fingerprint"],
                          want["param_fingerprint"])
     else:
-        got = fresh or run_trace(scn)
+        run_scn = scn
+        if transport and transport != scn.transport:
+            if scn.engine != "wallclock":
+                res.ok = False
+                res.failures.append(
+                    "transport override on a sim scenario needs "
+                    "cross_engine=True (the socket backend is a wallclock "
+                    "runtime feature)")
+                return res
+            run_scn = scn.overridden(transport=transport)
+        got = fresh or run_trace(run_scn)
         if scn.exact:
             _verify_exact(res.failures, got, want)
         else:

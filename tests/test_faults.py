@@ -13,6 +13,7 @@ from repro.async_engine.faults import (
     DELIVERY_COUNTERS, DeliveryTracker, FaultSpec, FaultyTransport,
     PartitionSpec,
 )
+from repro.async_engine.proc import SocketTransport
 from repro.async_engine.transport import (
     Ack, AckWaiter, Envelope, InProcTransport, KIND_HEARTBEAT, KIND_RESULT,
     payload_crc,
@@ -94,11 +95,30 @@ def test_fault_spec_json_round_trip():
 
 
 # ---------------------------------------------------------------------------
-# FaultyTransport injection semantics
+# FaultyTransport injection semantics — parametrized over both wrapped
+# backends: the in-process queue and the socket backend's loopback
+# channel (real frames over a real wire, same process — the exact shape
+# the child-side chaos wrappers see in a worker process).
 # ---------------------------------------------------------------------------
 
-def test_faulty_transport_drops_only_envelopes():
-    inner = InProcTransport(capacity=16)
+@pytest.fixture(params=["inproc", "socket"])
+def make_channel(request):
+    made = []
+
+    def make(capacity=16):
+        tr = (InProcTransport(capacity=capacity)
+              if request.param == "inproc"
+              else SocketTransport(capacity=capacity))
+        made.append(tr)
+        return tr
+
+    yield make
+    for tr in made:
+        tr.close()
+
+
+def test_faulty_transport_drops_only_envelopes(make_channel):
+    inner = make_channel(16)
     tr = FaultyTransport(inner, FaultSpec(drop_p=1.0, seed=0))
     tr.send(env_for(1))
     tr.send("not-an-envelope")                    # non-frames pass through
@@ -107,8 +127,8 @@ def test_faulty_transport_drops_only_envelopes():
     assert tr.depth() == 0
 
 
-def test_faulty_transport_duplicates_and_dedup():
-    inner = InProcTransport(capacity=16)
+def test_faulty_transport_duplicates_and_dedup(make_channel):
+    inner = make_channel(16)
     tr = FaultyTransport(inner, FaultSpec(dup_p=1.0, seed=0))
     tr.send(env_for(1))
     got = [tr.recv(timeout=0.5), tr.recv(timeout=0.5)]
@@ -121,6 +141,10 @@ def test_faulty_transport_duplicates_and_dedup():
 
 
 def test_faulty_transport_adjacent_swap_reorder_and_close_flush():
+    # inproc-only: the close-flush assertion recv's AFTER close, and the
+    # socket loopback tears its connections down concurrently with the
+    # in-flight flush frame — the drained-after-close guarantee is the
+    # in-process queue's contract
     inner = InProcTransport(capacity=16)
     tr = FaultyTransport(inner, FaultSpec(reorder_p=1.0, seed=0))
     tr.send(env_for(1))                           # shelved
@@ -134,8 +158,8 @@ def test_faulty_transport_adjacent_swap_reorder_and_close_flush():
     assert inner.recv(timeout=0.5).seq == 3
 
 
-def test_faulty_transport_corrupts_copy_not_sender():
-    inner = InProcTransport(capacity=16)
+def test_faulty_transport_corrupts_copy_not_sender(make_channel):
+    inner = make_channel(16)
     tr = FaultyTransport(inner, FaultSpec(corrupt_p=1.0, seed=0))
     env = env_for(1)
     tr.send(env)
@@ -150,12 +174,12 @@ def test_faulty_transport_corrupts_copy_not_sender():
     assert tr.recv(timeout=0.5).crc == 0
 
 
-def test_partition_window_requires_clock():
+def test_partition_window_requires_clock(make_channel):
     spec = FaultSpec(partitions=(PartitionSpec(0.0, 1.0),))
     with pytest.raises(ValueError):
-        FaultyTransport(InProcTransport(4), spec)
+        FaultyTransport(make_channel(4), spec)
     t = [0.5]
-    tr = FaultyTransport(InProcTransport(4), spec, clock=lambda: t[0])
+    tr = FaultyTransport(make_channel(4), spec, clock=lambda: t[0])
     tr.send(env_for(1))
     assert tr.counters["partition_drops"] == 1
     t[0] = 2.0                                    # window over: heals

@@ -1,0 +1,211 @@
+"""Multi-process socket backend: rendezvous defenses, orphan cleanup,
+golden-trace replay across real process boundaries, mid-run process-kill
+recovery, and the CI hang guard itself.
+
+Whole module runs in CI's scenarios-proc lane (pytest.ini `proc` marker,
+default-deselected); every test here spawns or supervises real worker
+processes, so the per-test timeout guard (conftest.py) applies."""
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.proc
+
+from repro.configs import get_config, reduced
+from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
+from repro.async_engine.engine import make_engine, make_eval_fn
+from repro.async_engine.proc import (
+    RendezvousRejected, SocketClient, WorkerProcessPool,
+)
+from repro.scenarios import get_scenario, trace
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def tiny_cfg(n_workers=2):
+    cfg = reduced(get_config("tinygpt-15m"))
+    return RunConfig(
+        model=cfg, n_workers=n_workers, inner_steps=1, outer_steps=4,
+        batch_size=2, seq_len=16,
+        worker_paces=(1.0, 2.0)[:n_workers], non_iid=True,
+        inner=InnerOptConfig(lr=3e-3, warmup_steps=2, total_steps=100),
+        outer=OuterOptConfig(method="heloco"))
+
+
+# ---------------------------------------------------------------------------
+# Rendezvous
+# ---------------------------------------------------------------------------
+
+def test_rendezvous_rejects_duplicate_and_unknown_join():
+    pool = WorkerProcessPool(tiny_cfg(), capacity=4)
+    try:
+        assert pool.ensure(0) == 1 and pool.alive(0)
+        # the nonce was consumed by the real worker's join: replaying it
+        # is a duplicate join and must be rejected, not re-assigned
+        with pytest.raises(RendezvousRejected):
+            SocketClient.connect(pool.transport.address,
+                                 {"nonce": f"w0-i1-p{os.getpid()}"},
+                                 timeout=10.0)
+        with pytest.raises(RendezvousRejected):
+            SocketClient.connect(pool.transport.address,
+                                 {"nonce": "never-issued"}, timeout=10.0)
+        # the legitimate worker is unaffected by the rejected impostors
+        assert pool.alive(0)
+        assert pool.ensure(0) is None    # already live: no respawn
+    finally:
+        pool.close()
+
+
+class _StillbornProc:
+    """Duck-typed spawn-context Process that dies before connecting."""
+    exitcode = 7
+    pid = -1
+
+    def start(self):
+        pass
+
+    def is_alive(self):
+        return False
+
+    def terminate(self):
+        pass
+
+    def join(self, timeout=None):
+        pass
+
+
+class _StillbornCtx:
+    def Process(self, *args, **kw):
+        return _StillbornProc()
+
+
+def test_worker_death_before_rendezvous_fails_ensure():
+    pool = WorkerProcessPool(tiny_cfg(), capacity=4)
+    pool._ctx = _StillbornCtx()
+    try:
+        with pytest.raises(RuntimeError,
+                           match="died before the rendezvous"):
+            pool.ensure(0)
+        assert not pool._pending         # the nonce slot was reclaimed
+        assert not pool.alive(0)
+    finally:
+        pool.close()
+
+
+def test_close_leaves_no_orphan_processes():
+    pool = WorkerProcessPool(tiny_cfg(), capacity=4)
+    pool.ensure(0)
+    pool.ensure(1)
+    procs = [pool._procs[w] for w in (0, 1)]
+    assert all(p.is_alive() for p in procs)
+    family, target = pool.transport.address
+    pool.close()
+    for p in procs:
+        assert not p.is_alive(), f"orphan worker pid {p.pid}"
+    if family == "unix":
+        assert not os.path.exists(target)   # rendezvous endpoint removed
+
+
+# ---------------------------------------------------------------------------
+# Determinism across the process boundary
+# ---------------------------------------------------------------------------
+
+def test_socket_transport_replays_committed_golden():
+    # the acceptance anchor: the threaded golden, re-run over real worker
+    # processes via the verify-time transport override, must reproduce
+    # the UNMODIFIED committed trace
+    res = trace.verify(get_scenario("wallclock_hetero"), trace.GOLDEN_DIR,
+                       cross_engine=False, transport="socket")
+    assert res.ok, res.report()
+
+
+def test_process_kill_mid_run_recovers_trace_identically():
+    scn = get_scenario("wallclock_hetero").overridden(transport="socket")
+    eng = make_engine(scn)
+    killed = {"ok": False}
+
+    def killer():
+        deadline = time.monotonic() + 120.0
+        while time.monotonic() < deadline:
+            pool = getattr(eng, "_pool", None)
+            if pool is not None and len(eng.history.arrivals) >= 3:
+                proc = pool._procs.get(0)
+                if proc is not None and proc.is_alive():
+                    os.kill(proc.pid, signal.SIGKILL)
+                    killed["ok"] = True
+                    return
+            time.sleep(0.05)
+
+    t = threading.Thread(target=killer, daemon=True)
+    t.start()
+    hist = eng.run(eval_every=scn.eval_cadence,
+                   eval_fn=make_eval_fn(eng, batch=scn.eval_batch))
+    t.join(timeout=5.0)
+    assert killed["ok"], "killer never saw a live worker-0 process"
+    assert eng.stats_summary()["proc_restarts"] >= 1
+
+    with open(trace.golden_path("wallclock_hetero")) as f:
+        want = json.load(f)
+    got = [[a["outer_step"], a["worker_id"],
+            a["outer_step"] - 1 - a["staleness"], a["staleness"],
+            a["lang"], a["rho"], a["sim_time"], bool(a["dropped"])]
+           for a in hist.arrivals]
+    assert got == want["arrivals"]       # commit order exactly preserved
+    # params: fp32-level agreement with the committed fingerprint (exact
+    # locally; CI hosts may vectorize fp32 differently, see ci.yml)
+    fp = trace.param_fingerprint(eng.server.state.params)
+    assert fp.keys() == want["param_fingerprint"].keys()
+    for k, vals in want["param_fingerprint"].items():
+        np.testing.assert_allclose(fp[k], vals, rtol=1e-4, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# The hang guard guards
+# ---------------------------------------------------------------------------
+
+def test_hang_guard_fails_hung_test_within_timeout():
+    # a deliberately wedged proc test must fail within REPRO_TEST_TIMEOUT
+    # — via pytest-timeout when installed, else the conftest.py fallback
+    # watchdog — instead of stalling the lane to CI's job limit. The demo
+    # file lives under the repo root so conftest.py applies to it.
+    demo_dir = os.path.join(_REPO, "tests", ".hang_demo")
+    os.makedirs(demo_dir, exist_ok=True)
+    path = os.path.join(demo_dir, "test_hang_demo.py")
+    with open(path, "w") as f:
+        f.write(textwrap.dedent("""\
+            import time
+
+            import pytest
+
+            pytestmark = pytest.mark.proc
+
+
+            def test_deliberately_hangs():
+                time.sleep(300)
+        """))
+    env = dict(os.environ, REPRO_TEST_TIMEOUT="3", JAX_PLATFORMS="cpu")
+    t0 = time.monotonic()
+    try:
+        # -s: capture off, so the fallback watchdog's stderr survives its
+        # hard process exit (pytest's capture buffer would be discarded)
+        out = subprocess.run(
+            [sys.executable, "-m", "pytest", path, "-q", "-s",
+             "-o", "addopts=", "-p", "no:cacheprovider"],
+            cwd=_REPO, env=env, capture_output=True, text=True,
+            timeout=120)
+    finally:
+        shutil.rmtree(demo_dir, ignore_errors=True)
+    elapsed = time.monotonic() - t0
+    text = out.stdout + out.stderr
+    assert out.returncode != 0, text
+    assert elapsed < 60.0, (elapsed, text)
+    assert "hang guard" in text or "imeout" in text, text

@@ -21,6 +21,7 @@ from repro.async_engine.engine import (
 from repro.async_engine.faults import FaultSpec, PartitionSpec
 from repro.async_engine.runtime import ConcurrentRuntime
 from repro.async_engine.simulator import AsyncSimulator
+from repro.async_engine.proc import SocketTransport
 from repro.async_engine.transport import (
     InProcTransport, TransportClosed, TransportTimeout,
 )
@@ -58,11 +59,39 @@ def assert_params_close(eng_a, eng_b, rtol=1e-5, atol=1e-6):
 
 
 # ---------------------------------------------------------------------------
-# Transport semantics
+# Transport semantics — one contract, both backends: the in-process
+# bounded queue and the socket backend's loopback channel (a real wire in
+# the same process: frames, credits, reader threads — no spawned workers,
+# so these stay cheap enough for this lane).
 # ---------------------------------------------------------------------------
 
-def test_transport_backpressure_blocks_and_loses_nothing():
-    tr = InProcTransport(capacity=2)
+@pytest.fixture(params=["inproc", "socket"])
+def make_transport(request):
+    made = []
+
+    def make(capacity):
+        tr = (InProcTransport(capacity=capacity)
+              if request.param == "inproc"
+              else SocketTransport(capacity=capacity))
+        made.append(tr)
+        return tr
+
+    yield make
+    for tr in made:
+        tr.close()
+
+
+def _wait_depth(tr, n, timeout=5.0):
+    """Socket frames land in the receive queue asynchronously; spin until
+    the expected depth (no-op for the in-process queue)."""
+    deadline = time.monotonic() + timeout
+    while tr.depth() < n and time.monotonic() < deadline:
+        time.sleep(0.01)
+    return tr.depth()
+
+
+def test_transport_backpressure_blocks_and_loses_nothing(make_transport):
+    tr = make_transport(2)
     n = 25
     high_water = []
 
@@ -74,7 +103,7 @@ def test_transport_backpressure_blocks_and_loses_nothing():
     t = threading.Thread(target=producer, daemon=True)
     t.start()
     time.sleep(0.3)                      # let the producer hit the wall
-    assert tr.depth() == 2               # bounded: never above capacity
+    assert _wait_depth(tr, 2) == 2       # bounded: never above capacity
     assert t.is_alive()                  # producer parked in send()
     got = [tr.recv(timeout=5.0) for _ in range(n)]
     t.join(timeout=5.0)
@@ -82,9 +111,10 @@ def test_transport_backpressure_blocks_and_loses_nothing():
     assert max(high_water) <= 2
 
 
-def test_transport_close_wakes_blocked_sender_and_receiver():
-    tr = InProcTransport(capacity=1)
+def test_transport_close_wakes_blocked_sender_and_receiver(make_transport):
+    tr = make_transport(1)
     tr.send(0)
+    assert _wait_depth(tr, 1) == 1       # the frame is queued before close
     errs = []
 
     def blocked_send():
@@ -103,11 +133,11 @@ def test_transport_close_wakes_blocked_sender_and_receiver():
     with pytest.raises(TransportClosed):
         tr.recv(timeout=1.0)
     with pytest.raises(TransportTimeout):
-        InProcTransport(capacity=1).recv(timeout=0.05)
+        make_transport(1).recv(timeout=0.05)
 
 
-def test_transport_send_timeout_when_full_exact_deadline():
-    tr = InProcTransport(capacity=1)
+def test_transport_send_timeout_when_full_exact_deadline(make_transport):
+    tr = make_transport(1)
     tr.send(0)
     t0 = time.monotonic()
     with pytest.raises(TransportTimeout):
@@ -115,12 +145,12 @@ def test_transport_send_timeout_when_full_exact_deadline():
     waited = time.monotonic() - t0
     # Condition-based deadlines are exact, not quantized to a poll tick
     assert 0.18 <= waited < 0.6, waited
-    assert tr.depth() == 1               # the timed-out message was not queued
+    assert _wait_depth(tr, 1) == 1       # the timed-out msg was not queued
     assert tr.recv(timeout=0.5) == 0
 
 
-def test_transport_recv_timeout_when_idle_exact_deadline():
-    tr = InProcTransport(capacity=4)
+def test_transport_recv_timeout_when_idle_exact_deadline(make_transport):
+    tr = make_transport(4)
     t0 = time.monotonic()
     with pytest.raises(TransportTimeout):
         tr.recv(timeout=0.2)
@@ -130,8 +160,8 @@ def test_transport_recv_timeout_when_idle_exact_deadline():
     assert tr.recv(timeout=0.5) == "late"
 
 
-def test_transport_close_wakes_blocked_receiver():
-    tr = InProcTransport(capacity=1)
+def test_transport_close_wakes_blocked_receiver(make_transport):
+    tr = make_transport(1)
     errs = []
 
     def blocked_recv():
