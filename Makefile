@@ -9,10 +9,10 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify verify-ci test test-slow test-wallclock test-proc bench \
-	bench-full bench-runtime bench-check bench-check-arrival \
-	bench-check-runtime bench-report smoke-wallclock smoke-proc scenarios \
-	scenarios-sim scenarios-wallclock scenarios-proc record-goldens \
-	sweep-smoke chaos console-smoke
+	bench-full bench-runtime bench-scale bench-check bench-check-arrival \
+	bench-check-runtime bench-check-scale bench-report smoke-wallclock \
+	smoke-proc scenarios scenarios-sim scenarios-wallclock scenarios-proc \
+	record-goldens sweep-smoke chaos console-smoke
 
 verify:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
@@ -57,13 +57,20 @@ bench-full:
 bench-runtime:
 	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.run --runtime
 
+# batched-arrival scale benchmark (docs/scale.md): per-method launch
+# contract for a K-arrival flush, amortized bookkeeping us/arrival at
+# N in {64, 1k, 10k}, and the no-implicit-h2d transfer probe; persists
+# to results/bench/BENCH_scale.json
+bench-scale:
+	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.run --scale
+
 # regression gate: fresh bench rows vs committed benchmarks/baselines/
 # (per-metric tolerance bands; exact for launch-count/HBM contracts).
 # BENCH_SLACK widens the timing band on slow/noisy hosts (CI sets 25).
 # CI splits the families across lanes: tier1 gates the arrival path,
 # scenarios-wallclock gates the runtime benches it runs anyway.
 BENCH_SLACK ?= 4.0
-bench-check: bench bench-runtime
+bench-check: bench bench-runtime bench-scale
 	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.check_regression \
 		--timing-slack $(BENCH_SLACK)
 
@@ -74,6 +81,10 @@ bench-check-arrival: bench
 bench-check-runtime: bench-runtime
 	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.check_regression \
 		--which runtime --timing-slack $(BENCH_SLACK)
+
+bench-check-scale: bench-scale
+	JAX_PLATFORMS=cpu $(PYTHON) -m benchmarks.check_regression \
+		--which scale --timing-slack $(BENCH_SLACK)
 
 # markdown trajectory of the accumulated bench histories
 # -> results/bench/BENCH_REPORT.md

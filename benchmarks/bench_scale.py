@@ -1,0 +1,273 @@
+"""Batched-arrival scale benchmark (docs/scale.md): the O(10k)-worker
+claims behind the commit-buffer fast path.
+
+Three row families, persisted to results/bench/BENCH_scale.json and
+gated against ``benchmarks/baselines/BENCH_scale.json`` by ``make
+bench-check-scale`` with the same per-metric discipline as the arrival
+family:
+
+  - ``scale_launches_*`` (EXACT): a flush of K coalesced arrivals must
+    commit in <= 2 Pallas launches for EVERY registered outer method —
+    one optional multi-Gram statistics sweep plus one K-unrolled fused
+    sweep — and the count must hold with telemetry on (the (K, R, 4)
+    moments ride the fused sweep as an extra output). The sequential
+    path costs up to 2K launches; this contract is the TPU-relevant
+    quantity the batching buys.
+  - ``scale_arrival_*`` (timing, banded): amortized per-arrival engine
+    bookkeeping at N in {64, 1k, 10k} workers — the NumPy worker arena +
+    vectorized event queue draining same-tick batches, against a
+    faithful reimplementation of the pre-arena bookkeeping (heapq +
+    per-worker Python dataclass + the O(N) dict walks the per-commit
+    streaming-telemetry snapshot performed). The run() harness asserts
+    the N=1k amortized improvement stays >= 5x.
+  - ``scale_hot_*_h2d_traffic`` (EXACT): after warm-up, a single-arrival
+    commit and a K-arrival flush issue ZERO implicit host->device
+    transfers (the coefficient-scalar table plus the one-device_put-per-
+    flush vector discipline), proven under
+    ``jax.transfer_guard_host_to_device("disallow")``.
+
+Kernel wall-times are deliberately absent: on CPU the kernels run in
+interpret mode, where a K-unrolled sweep re-interprets K applications'
+worth of ops and the dispatch savings vanish — the same artifact
+``bench_overhead`` documents for the per-leaf vs packed comparison. The
+launch counts and transfer counts are the hardware-relevant contracts.
+"""
+from __future__ import annotations
+
+import functools
+import heapq
+import time
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_overhead import N_BLOCKS, _blocks, count_launches
+from repro.configs.base import HeLoCoConfig, OuterOptConfig
+from repro.core import packing
+from repro.core.heloco import apply_arrivals_packed
+
+H = HeLoCoConfig()
+K = 4                                # flush size for the launch contract
+SCALE_NS = (64, 1000, 10000)
+SPEEDUP_FLOOR = 5.0                  # asserted at N=1k
+
+
+# ---------------------------------------------------------------------------
+# EXACT family 1: <= 2 launches per K-arrival flush, every method
+# ---------------------------------------------------------------------------
+
+def multi_launch_rows(d: int = 1 << 13, k: int = K) -> List[Dict]:
+    from repro.core import methods as outer_methods
+
+    params = _blocks(d, 0)
+    deltas = [_blocks(d, 2 + i) for i in range(k)]
+    layout = packing.build_layout(params)
+    pbuf = packing.pack(layout, params)
+    mbuf = packing.zeros(layout)
+    abuf = packing.zeros(layout)
+    rhos = [0.9, 1.0, 0.7, 1.0][:k]
+    taus = [1.0, 0.0, 3.0, 2.0][:k]
+    rows = []
+    for m in outer_methods.all_methods():
+        def flush(p, mm, b=None, name=m.name, stats=False):
+            return apply_arrivals_packed(
+                p, mm, deltas, layout, method=name, outer_lr=0.7, mu=0.9,
+                h=H, rhos=rhos, taus=taus, abuf=b,
+                phases=list(range(k)) if b is not None else None,
+                with_stats=stats)
+        counts = {}
+        for stats in (False, True):
+            fn = jax.jit(functools.partial(flush, stats=stats))
+            if m.uses_buffer:
+                counts[stats] = count_launches(fn, pbuf, mbuf, abuf)
+            else:
+                counts[stats] = count_launches(fn, pbuf, mbuf)
+        n, nt = counts[False], counts[True]
+        rows.append({
+            "name": f"scale_launches_multi_{m.name}",
+            "us_per_call": float(n),
+            "derived": (f"pallas_calls={n} for a K={k} flush (<= 2; "
+                        f"sequential path is up to {2 * k})")})
+        rows.append({
+            "name": f"scale_launches_multi_telemetry_{m.name}",
+            "us_per_call": float(nt),
+            "derived": (f"pallas_calls={nt} == telemetry-off count "
+                        "((K,R,4) moments ride the fused sweep)")})
+        assert n <= 2 and nt == n, (m.name, n, nt)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Timing family: amortized engine bookkeeping per arrival at N workers
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _LegacyWorker:
+    """The pre-arena per-worker record: one Python object per worker."""
+    wid: int
+    pace: float
+    s_i: int = 0
+    inner_step_count: int = 0
+    in_flight: bool = False
+    alive: bool = True
+    generation: int = 0
+
+
+def _legacy_us(n: int, arrivals: int) -> float:
+    """Pre-arena bookkeeping reference: heapq event loop + dataclass
+    field churn + the per-commit O(N) dict walks the streaming-telemetry
+    snapshot (workers_alive / in_flight / min alive pace) performed."""
+    workers = {w: _LegacyWorker(w, 1.0 + (w % 7)) for w in range(n)}
+    heap: list = []
+    seq = 0
+    for w in workers.values():
+        heapq.heappush(heap, (w.pace * 2, seq, "return", w.wid, 0))
+        seq += 1
+        w.in_flight = True
+    t0 = time.perf_counter()
+    done = 0
+    while done < arrivals:
+        tm, _, _kind, wid, gen = heapq.heappop(heap)
+        w = workers[wid]
+        if not (w.alive and w.generation == gen):
+            continue
+        w.in_flight = False
+        w.s_i += 1
+        w.inner_step_count += 2
+        _snap = (sum(1 for x in workers.values() if x.alive),
+                 sum(1 for x in workers.values() if x.in_flight),
+                 min(x.pace for x in workers.values() if x.alive))
+        heapq.heappush(heap, (tm + w.pace * 2, seq, "return", wid, gen))
+        seq += 1
+        w.in_flight = True
+        done += 1
+    return (time.perf_counter() - t0) / arrivals * 1e6
+
+
+def _arena_us(n: int, arrivals: int, k: int = 16) -> float:
+    """The batched fast path: struct-of-arrays arena + vectorized queue,
+    same logical work, one snapshot per committed batch."""
+    from repro.async_engine.engine import EventQueue, WorkerArena
+
+    q = EventQueue()
+    arena = WorkerArena(n)
+    pace = arena.cols["pace"]
+    in_flight = arena.cols["in_flight"]
+    alive = arena.cols["alive"]
+    s_i = arena.cols["s_i"]
+    isc = arena.cols["inner_step_count"]
+    gen = arena.cols["generation"]
+    slots = {}
+    for w in range(n):
+        s = arena.alloc(w)
+        pace[s] = 1.0 + (w % 7)
+        in_flight[s] = True
+        slots[w] = s
+        q.push(pace[s] * 2, "return", w, 0)
+    t0 = time.perf_counter()
+    done = 0
+    while done < arrivals:
+        evs = q.pop_batch(k)
+        for tm, _kind, wid, g in evs:
+            s = slots[wid]
+            if not (alive[s] and gen[s] == g):
+                continue
+            in_flight[s] = False
+            s_i[s] += 1
+            isc[s] += 2
+        _snap = (arena.n_alive(), arena.n_in_flight(),
+                 arena.min_alive_pace())
+        for tm, _kind, wid, g in evs:
+            s = slots[wid]
+            q.push(tm + pace[s] * 2, "return", wid, g)
+            in_flight[s] = True
+        done += len(evs)
+    return (time.perf_counter() - t0) / arrivals * 1e6
+
+
+def bookkeeping_rows(reps: int = 3) -> List[Dict]:
+    rows = []
+    speedups = {}
+    for n in SCALE_NS:
+        arrivals = min(2 * n, 2048)
+        legacy = min(_legacy_us(n, arrivals) for _ in range(reps))
+        arena = min(_arena_us(n, arrivals) for _ in range(reps))
+        speedups[n] = legacy / arena
+        rows.append({
+            "name": f"scale_arrival_us_legacy_n{n}",
+            "us_per_call": legacy,
+            "derived": f"heapq + dataclass + O(N) snapshot walks, N={n}"})
+        rows.append({
+            "name": f"scale_arrival_us_batched_n{n}",
+            "us_per_call": arena,
+            "derived": (f"arena + pop_batch(16), N={n}; "
+                        f"{legacy / arena:.1f}x vs legacy")})
+    rows.append({
+        "name": "scale_arrival_speedup_n1000",
+        "us_per_call": 0.0,
+        "derived": (f"amortized us/arrival improved "
+                    f"{speedups[1000]:.1f}x at N=1k "
+                    f"(floor {SPEEDUP_FLOOR:g}x, asserted), "
+                    f"{speedups[10000]:.1f}x at N=10k")})
+    assert speedups[1000] >= SPEEDUP_FLOOR, speedups
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# EXACT family 2: zero implicit h2d transfers on warmed commit paths
+# ---------------------------------------------------------------------------
+
+def transfer_rows(d: int = 1 << 13) -> List[Dict]:
+    from repro.async_engine.server import Synchronizer
+
+    params = _blocks(d, 0)
+    deltas = [_blocks(d, 2 + i) for i in range(8)]
+    cfg = OuterOptConfig(method="heloco", delay_weighting=True)
+
+    single = Synchronizer(params, cfg, n_workers=4, telemetry=True)
+    for i in range(4):
+        single.on_arrival(deltas[i], single.t, i % 4)
+    with jax.transfer_guard_host_to_device("disallow"):
+        single.on_arrival(deltas[4], single.t, 0)
+
+    batched = Synchronizer(params, cfg, n_workers=4, telemetry=True)
+    batched.commit_batch = 4
+    for _ in range(2):
+        for i in range(4):
+            batched.buffer_arrival(deltas[i], batched.t, i % 4)
+        batched.flush()
+    with jax.transfer_guard_host_to_device("disallow"):
+        for i in range(4):
+            batched.buffer_arrival(deltas[4 + i % 4], batched.t, i % 4)
+        batched.flush()
+
+    return [
+        {"name": "scale_hot_arrival_h2d_traffic",
+         "us_per_call": 0.0,
+         "derived": ("implicit h2d transfers on a warmed single-arrival "
+                     "commit: 0 (coefficient-scalar table; proven under "
+                     "transfer_guard_host_to_device('disallow'))")},
+        {"name": "scale_hot_flush_h2d_traffic",
+         "us_per_call": 0.0,
+         "derived": ("implicit h2d transfers on a warmed K=4 flush: 0 "
+                     "(one explicit device_put per flush for all "
+                     "per-arrival scalars; moments pulled to host once)")},
+    ]
+
+
+def run() -> List[Dict]:
+    rows = multi_launch_rows()
+    rows += transfer_rows()
+    rows += bookkeeping_rows()
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,9 @@ import os
 import sys
 from typing import Dict, List, Optional
 
-from benchmarks.run import BENCH_JSON, BENCH_RUNTIME_JSON, _load_history
+from benchmarks.run import (
+    BENCH_JSON, BENCH_RUNTIME_JSON, BENCH_SCALE_JSON, _load_history,
+)
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
 BASELINE_DIR = os.path.join(_HERE, "baselines")
@@ -102,12 +104,13 @@ def main(argv=None) -> int:
                     help="refresh committed baselines from the latest "
                          "fresh entries")
     ap.add_argument("--timing-slack", type=float, default=TIMING_SLACK)
-    ap.add_argument("--which", default="arrival,runtime",
-                    help="comma-set of {arrival, runtime}")
+    ap.add_argument("--which", default="arrival,runtime,scale",
+                    help="comma-set of {arrival, runtime, scale}")
     args = ap.parse_args(argv)
 
     which = {w.strip() for w in args.which.split(",") if w.strip()}
-    paths = {"arrival": BENCH_JSON, "runtime": BENCH_RUNTIME_JSON}
+    paths = {"arrival": BENCH_JSON, "runtime": BENCH_RUNTIME_JSON,
+             "scale": BENCH_SCALE_JSON}
     report = {"ok": True, "families": {}}
     rc = 0
     for fam, fresh_path in paths.items():

@@ -24,6 +24,7 @@ BENCH_DIR = os.environ.get("REPRO_BENCH_DIR",
                            os.path.join(_ROOT, "results", "bench"))
 BENCH_JSON = os.path.join(BENCH_DIR, "BENCH_arrival.json")
 BENCH_RUNTIME_JSON = os.path.join(BENCH_DIR, "BENCH_runtime.json")
+BENCH_SCALE_JSON = os.path.join(BENCH_DIR, "BENCH_scale.json")
 # Pre-PR-3 location (repo root): read-only fallback so accumulated
 # histories carry forward without symlinks.
 _LEGACY = {BENCH_JSON: os.path.join(_ROOT, "BENCH_arrival.json"),
@@ -61,7 +62,20 @@ def main() -> None:
     ap.add_argument("--runtime", action="store_true",
                     help="wall-clock runtime benchmark (simulator vs "
                          "threaded ConcurrentRuntime) -> BENCH_runtime.json")
+    ap.add_argument("--scale", action="store_true",
+                    help="batched-arrival scale benchmark (launch "
+                         "contracts, N in {64,1k,10k} bookkeeping, "
+                         "transfer probe) -> BENCH_scale.json")
     args = ap.parse_args()
+
+    if args.scale:
+        from benchmarks import bench_scale
+        print("name,us_per_call,derived")
+        rows = bench_scale.run()
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        _persist(rows, BENCH_SCALE_JSON)
+        return
 
     if args.runtime:
         from benchmarks import bench_runtime

@@ -34,7 +34,6 @@ through the transport).
 """
 from __future__ import annotations
 
-import heapq
 import os
 import time as _time
 from dataclasses import dataclass, field
@@ -63,26 +62,283 @@ PyTree = Any
 # Shared datatypes
 # ---------------------------------------------------------------------------
 
-@dataclass
+class WorkerArena:
+    """NumPy struct-of-arrays store for per-worker engine state.
+
+    At O(10k) workers the per-worker bookkeeping dominated the event
+    loop: every ``Worker`` was a Python dataclass, so aggregate queries
+    (alive count, in-flight count, min pace) were full dict walks. Here
+    every scalar field lives in one flat array indexed by slot; the
+    ``Worker`` objects the engines pass around are thin views
+    (``__slots__`` + properties) over a slot, so the per-worker
+    attribute API is unchanged while aggregates become single vectorized
+    reductions (docs/scale.md).
+
+    Slots are recycled: elastic leave releases a slot (clearing its
+    object cells so params/optimizer trees don't outlive the worker),
+    a later join reuses it. A released view must not be read after the
+    slot is re-allocated.
+    """
+
+    SCALAR_FIELDS = (
+        ("wid", np.int64, -1),
+        ("pace", np.float64, 1.0),       # seconds per inner step (virtual)
+        ("s_i", np.int64, 0),            # outer step at dispatch
+        ("h_steps", np.int64, 0),        # local steps this round
+        ("inner_step_count", np.int64, 0),  # lifetime steps (LR schedule)
+        ("dispatch_time", np.float64, 0.0),
+        ("generation", np.int64, 0),     # bumped on crash: stale rounds drop
+        ("round_seq", np.int64, 0),      # monotonic dispatch counter
+        ("pending_task", np.int64, -1),  # engine-unique round id (-1 = none)
+    )
+    BOOL_FIELDS = (("used", True), ("alive", True), ("in_flight", False))
+    OBJECT_FIELDS = ("lang", "mixture", "params", "opt", "ef", "cur_lang",
+                     "device")
+
+    def __init__(self, capacity: int = 64):
+        cap = max(1, int(capacity))
+        self.cols: Dict[str, np.ndarray] = {}
+        for name, dt, _default in self.SCALAR_FIELDS:
+            self.cols[name] = np.zeros(cap, dt)
+        for name, _default in self.BOOL_FIELDS:
+            self.cols[name] = np.zeros(cap, bool)
+        for name in self.OBJECT_FIELDS:
+            self.cols[name] = np.empty(cap, object)
+        self._free = list(range(cap - 1, -1, -1))
+
+    def _grow(self):
+        old = len(self.cols["wid"])
+        for name, arr in self.cols.items():
+            ext = (np.empty(old, object) if arr.dtype == object
+                   else np.zeros(old, arr.dtype))
+            self.cols[name] = np.concatenate([arr, ext])
+        self._free.extend(range(2 * old - 1, old - 1, -1))
+
+    def alloc(self, wid: int) -> int:
+        if not self._free:
+            self._grow()
+        slot = self._free.pop()
+        for name, _dt, default in self.SCALAR_FIELDS:
+            self.cols[name][slot] = default
+        for name, default in self.BOOL_FIELDS:
+            self.cols[name][slot] = default
+        for name in self.OBJECT_FIELDS:
+            self.cols[name][slot] = None
+        self.cols["wid"][slot] = wid
+        return slot
+
+    def release(self, slot: int):
+        self.cols["used"][slot] = False
+        self.cols["alive"][slot] = False
+        for name in self.OBJECT_FIELDS:
+            self.cols[name][slot] = None     # drop param/opt references
+        self._free.append(slot)
+
+    # -- vectorized aggregates (O(capacity) array ops, no dict walks) -----
+    def n_alive(self) -> int:
+        return int(np.count_nonzero(self.cols["used"] & self.cols["alive"]))
+
+    def n_in_flight(self) -> int:
+        return int(np.count_nonzero(self.cols["used"]
+                                    & self.cols["in_flight"]))
+
+    def min_alive_pace(self, default: float = 1.0) -> float:
+        mask = self.cols["used"] & self.cols["alive"]
+        if not mask.any():
+            return default
+        return float(self.cols["pace"][mask].min())
+
+
+def _scalar_prop(name, cast):
+    def get(self):
+        return cast(self.arena.cols[name][self.slot])
+
+    def set(self, value):
+        self.arena.cols[name][self.slot] = value
+
+    return property(get, set)
+
+
+def _object_prop(name):
+    def get(self):
+        return self.arena.cols[name][self.slot]
+
+    def set(self, value):
+        self.arena.cols[name][self.slot] = value
+
+    return property(get, set)
+
+
 class Worker:
-    wid: int
-    pace: float                      # seconds per inner step (virtual)
-    lang: Optional[int]              # shard index (None = IID mixture)
-    mixture: Optional[Tuple[float, ...]] = None  # Dirichlet language weights
-    params: PyTree = None            # in-flight initialization (captured)
-    opt: Any = None                  # persistent AdamW state
-    ef: PyTree = None                # compression error-feedback buffer
-    s_i: int = 0                     # outer step at dispatch
-    h_steps: int = 0                 # local steps this round
-    cur_lang: Optional[int] = None   # shard chosen for the current round
-    inner_step_count: int = 0        # lifetime inner steps (for LR schedule)
-    alive: bool = True
-    dispatch_time: float = 0.0
-    generation: int = 0              # incremented on crash: stale rounds dropped
-    round_seq: int = 0               # monotonically increasing dispatch counter
-    in_flight: bool = False          # a dispatched round has not committed yet
-    pending_task_id: Optional[int] = None  # engine-unique id of that round
-    device: Any = None               # optional pinned jax device
+    """Thin view over one ``WorkerArena`` slot — the attribute surface of
+    the old per-worker dataclass, with every scalar living in the arena's
+    flat arrays. Constructing one without an arena (standalone use) gives
+    it a private single-slot arena."""
+
+    __slots__ = ("arena", "slot")
+
+    def __init__(self, wid: int, pace: float = 1.0,
+                 lang: Optional[int] = None,
+                 mixture: Optional[Tuple[float, ...]] = None,
+                 params: PyTree = None, opt: Any = None, ef: PyTree = None,
+                 device: Any = None, *,
+                 arena: Optional[WorkerArena] = None):
+        self.arena = arena if arena is not None else WorkerArena(1)
+        self.slot = self.arena.alloc(wid)
+        self.pace = pace
+        self.lang = lang
+        self.mixture = mixture
+        self.params = params
+        self.opt = opt
+        self.ef = ef
+        self.device = device
+
+    wid = property(lambda self: int(self.arena.cols["wid"][self.slot]))
+    pace = _scalar_prop("pace", float)
+    s_i = _scalar_prop("s_i", int)
+    h_steps = _scalar_prop("h_steps", int)
+    inner_step_count = _scalar_prop("inner_step_count", int)
+    dispatch_time = _scalar_prop("dispatch_time", float)
+    generation = _scalar_prop("generation", int)
+    round_seq = _scalar_prop("round_seq", int)
+    alive = _scalar_prop("alive", bool)
+    in_flight = _scalar_prop("in_flight", bool)
+    lang = _object_prop("lang")
+    mixture = _object_prop("mixture")
+    params = _object_prop("params")
+    opt = _object_prop("opt")
+    ef = _object_prop("ef")
+    cur_lang = _object_prop("cur_lang")
+    device = _object_prop("device")
+
+    @property
+    def pending_task_id(self) -> Optional[int]:
+        v = int(self.arena.cols["pending_task"][self.slot])
+        return None if v < 0 else v
+
+    @pending_task_id.setter
+    def pending_task_id(self, value: Optional[int]):
+        self.arena.cols["pending_task"][self.slot] = \
+            -1 if value is None else int(value)
+
+    def __repr__(self):
+        return (f"Worker(wid={self.wid}, pace={self.pace}, "
+                f"alive={self.alive}, in_flight={self.in_flight})")
+
+
+class EventQueue:
+    """Vectorized virtual-clock event queue.
+
+    Events are (time, seq, kind, wid, gen) rows kept in NumPy column
+    arrays sorted by (time, seq) — the exact order the old ``heapq``
+    produced (seq is unique, so later tuple fields never tie-break).
+    Pushes land in a staging list and merge lazily at the next pop, so a
+    same-tick batch of K ready arrivals is ONE sorted-array slice
+    (``pop_batch``) instead of K heap pops.
+
+    Crash/rejoin storms orphan in-flight "return" events (their worker's
+    generation has moved on); the engine reports each orphaning via
+    ``note_stale`` and the queue compacts — one boolean-mask filter —
+    as soon as stale entries outnumber live ones, so a storm can never
+    make the loop quadratically re-pop dead events (``stale_skipped``
+    counts the dead entries that survived to a pop; tests assert it
+    stays bounded)."""
+
+    KIND_RETURN = 0
+    KIND_RESTART = 1
+    _KINDS = {"return": KIND_RETURN, "restart": KIND_RESTART}
+    _NAMES = ("return", "restart")
+    _COMPACT_MIN = 64                # don't bother below this many entries
+
+    def __init__(self):
+        self._time = np.empty(0, np.float64)
+        self._seq = np.empty(0, np.int64)
+        self._kind = np.empty(0, np.int8)
+        self._wid = np.empty(0, np.int64)
+        self._gen = np.empty(0, np.int64)
+        self._head = 0               # consumed prefix of the sorted arrays
+        self._staging: List[Tuple] = []
+        self._next_seq = 0
+        self.stale = 0               # known-dead entries still queued
+        self.stale_skipped = 0       # dead entries that reached a pop
+        self.compactions = 0
+
+    def __len__(self) -> int:
+        return (len(self._time) - self._head) + len(self._staging)
+
+    def push(self, time: float, kind: str, wid: int, gen: int):
+        self._staging.append((float(time), self._next_seq,
+                              self._KINDS[kind], int(wid), int(gen)))
+        self._next_seq += 1
+
+    def clear(self):
+        self.__init__()
+
+    def note_stale(self, n: int = 1):
+        self.stale += n
+
+    def note_skip(self):
+        self.stale_skipped += 1
+        self.stale = max(0, self.stale - 1)
+
+    def _merge(self):
+        if not self._staging:
+            return
+        t, s, k, w, g = (np.asarray(c) for c in zip(*self._staging))
+        self._staging = []
+        t = np.concatenate([self._time[self._head:], t.astype(np.float64)])
+        s = np.concatenate([self._seq[self._head:], s.astype(np.int64)])
+        k = np.concatenate([self._kind[self._head:], k.astype(np.int8)])
+        w = np.concatenate([self._wid[self._head:], w.astype(np.int64)])
+        g = np.concatenate([self._gen[self._head:], g.astype(np.int64)])
+        order = np.lexsort((s, t))
+        self._time, self._seq = t[order], s[order]
+        self._kind, self._wid, self._gen = k[order], w[order], g[order]
+        self._head = 0
+
+    def pop_batch(self, max_n: int = 1) -> List[Tuple[float, str, int, int]]:
+        """Pop the head event; when it is a "return", also pop up to
+        ``max_n - 1`` further same-tick "return" events in seq order (a
+        same-tick "restart" interleaved by seq ends the batch so global
+        event order is preserved)."""
+        self._merge()
+        if self._head >= len(self._time):
+            return []
+        i = self._head
+        t0 = self._time[i]
+        if self._kind[i] != self.KIND_RETURN or max_n <= 1:
+            end = i + 1
+        else:
+            tick_end = int(np.searchsorted(self._time, t0, side="right"))
+            kinds = self._kind[i:tick_end]
+            nonret = np.nonzero(kinds != self.KIND_RETURN)[0]
+            end = i + int(nonret[0]) if len(nonret) else tick_end
+            end = min(end, i + max_n)
+        rows = [(float(self._time[j]), self._NAMES[self._kind[j]],
+                 int(self._wid[j]), int(self._gen[j]))
+                for j in range(i, end)]
+        self._head = end
+        return rows
+
+    def maybe_compact(self, keep) -> bool:
+        """Drop dead entries once they outnumber live ones. ``keep(kind,
+        wid, gen) -> bool`` decides (restart events are always kept by
+        the engine's predicate)."""
+        n = len(self)
+        if n < self._COMPACT_MIN or 2 * self.stale <= n:
+            return False
+        self._merge()
+        mask = np.fromiter(
+            (keep(self._NAMES[self._kind[j]], int(self._wid[j]),
+                  int(self._gen[j]))
+             for j in range(self._head, len(self._time))),
+            bool, count=len(self._time) - self._head)
+        for name in ("_time", "_seq", "_kind", "_wid", "_gen"):
+            setattr(self, name, getattr(self, name)[self._head:][mask])
+        self._head = 0
+        self.stale = 0
+        self.compactions += 1
+        return True
 
 
 @dataclass
@@ -101,17 +357,36 @@ class ElasticEvent:
     lang: Optional[int] = None
 
 
+#: most-recent arrivals kept in History.arrivals (same contract as
+#: TelemetryRecorder's in-memory window; the unbounded per-commit stream
+#: goes to the telemetry JSONL sink — docs/telemetry.md).
+HISTORY_WINDOW = 4096
+
+
 @dataclass
 class History:
+    """Run history. ``arrivals`` is a ring of the most recent ``window``
+    arrival records — at O(10k) workers an unbounded list dominates
+    memory — while ``total_arrivals`` counts every commit ever appended
+    (summaries and checkpoint metadata use the total, never the ring
+    length)."""
     arrivals: List[Dict] = field(default_factory=list)
     evals: List[Dict] = field(default_factory=list)
     tokens: int = 0
     comm_bytes: int = 0
     final_time: float = 0.0
+    total_arrivals: int = 0
+    window: int = HISTORY_WINDOW
+
+    def append_arrival(self, rec: Dict):
+        self.arrivals.append(rec)
+        self.total_arrivals += 1
+        if len(self.arrivals) > self.window:
+            del self.arrivals[:len(self.arrivals) - self.window]
 
     def summary(self) -> Dict:
         return {
-            "outer_steps": len(self.arrivals),
+            "outer_steps": self.total_arrivals,
             "tokens": self.tokens,
             "comm_bytes": self.comm_bytes,
             "final_time": self.final_time,
@@ -172,6 +447,8 @@ class RoundTask:
     dispatch_time: float = 0.0
     sleep_per_step: float = 0.0      # free-running pace throttle (wall sec)
     device: Any = None
+    batch_size: int = 0              # per-round mini-batch (0 = cfg default;
+    # nonzero under the hogwild ramp-up schedule, RunConfig.batch_rampup)
 
 
 @dataclass
@@ -188,6 +465,8 @@ class RoundResult:
     h_steps: int
     lang: Optional[int]
     compute_seconds: float = 0.0
+    batch_size: int = 0              # per-round mini-batch actually trained
+    # (0 = cfg default; token accounting uses this under ramp-up)
 
 
 def execute_round(task: RoundTask, *, model, cfg: RunConfig, specs,
@@ -204,7 +483,8 @@ def execute_round(task: RoundTask, *, model, cfg: RunConfig, specs,
     with tracer.span("worker_round", cat="compute", wid=task.wid,
                      s_i=task.s_i, h=task.h_steps):
         sampler = ShardSampler(specs, task.lang,
-                               cfg.batch_size, cfg.seq_len,
+                               task.batch_size or cfg.batch_size,
+                               cfg.seq_len,
                                seed=cfg.seed * 977 + task.wid,
                                mixture=task.mixture)
         result = run_inner(model, cfg.inner, task.params,
@@ -223,7 +503,8 @@ def execute_round(task: RoundTask, *, model, cfg: RunConfig, specs,
         task_id=task.task_id, wid=task.wid, generation=task.generation,
         round_seq=task.round_seq, delta=decoded, opt=result.opt, ef=ef,
         nbytes=nbytes, s_i=task.s_i, h_steps=task.h_steps,
-        lang=task.lang, compute_seconds=_time.perf_counter() - t0)
+        lang=task.lang, compute_seconds=_time.perf_counter() - t0,
+        batch_size=task.batch_size)
 
 
 class Engine(Protocol):
@@ -282,9 +563,11 @@ class EngineBase:
                                     run_cfg.n_workers, kind=topology,
                                     seed=run_cfg.seed)
         else:
-            self.server = Synchronizer(init_params, run_cfg.outer,
-                                       run_cfg.n_workers,
-                                       telemetry=telemetry is not None)
+            self.server = Synchronizer(
+                init_params, run_cfg.outer, run_cfg.n_workers,
+                telemetry=telemetry is not None,
+                commit_batch=getattr(run_cfg, "commit_batch", 1))
+        self.arena = WorkerArena(capacity=max(run_cfg.n_workers, 4))
         self.workers: Dict[int, Worker] = {}
         for wid in range(run_cfg.n_workers):
             pace = run_cfg.worker_paces[wid % len(run_cfg.worker_paces)]
@@ -295,16 +578,15 @@ class EngineBase:
                 lang = (wid % len(self.specs)) if run_cfg.non_iid else None
             self.workers[wid] = Worker(
                 wid=wid, pace=pace, lang=lang, mixture=mixture,
-                opt=init_adam(init_params))
+                opt=init_adam(init_params), arena=self.arena)
         self.failures = sorted(failures or [], key=lambda f: f.time)
         self.elastic = sorted(elastic or [], key=lambda e: e.time)
         self.lang_tokens = np.zeros(len(self.specs), np.int64)
         self.history = History()
         self.time = 0.0
-        self._heap: List[Tuple[float, int, str, int, int]] = []
-        self._seq = 0
+        self._events = EventQueue()
         self._task_counter = 0
-        self._min_pace = min(w.pace for w in self.workers.values())
+        self._min_pace = self.arena.min_alive_pace()
         self._stop = False               # cooperative kill switch (request_stop)
         self.restored_arrivals = 0       # commits accounted by a restored ckpt
 
@@ -334,8 +616,16 @@ class EngineBase:
 
     # ------------------------------------------------------------------ utils
     def _push(self, time: float, kind: str, wid: int, gen: int):
-        heapq.heappush(self._heap, (time, self._seq, kind, wid, gen))
-        self._seq += 1
+        self._events.push(time, kind, wid, gen)
+
+    def _event_is_live(self, kind: str, wid: int, gen: int) -> bool:
+        """Compaction predicate: restart events always survive; a return
+        event survives only while its (wid, generation) is still the live
+        worker's outstanding round."""
+        if kind == "restart":
+            return True
+        w = self.workers.get(wid)
+        return w is not None and w.alive and w.generation == gen
 
     def _mixture_for(self, wid: int) -> Optional[Tuple[float, ...]]:
         """Per-worker Dirichlet language mixture (deterministic in
@@ -380,7 +670,19 @@ class EngineBase:
             h_steps=w.h_steps, lang=w.cur_lang, mixture=w.mixture,
             inner_step_offset=w.inner_step_count,
             dispatch_time=self.time,
-            sleep_per_step=self._sleep_per_step(w), device=w.device)
+            sleep_per_step=self._sleep_per_step(w), device=w.device,
+            batch_size=self._round_batch())
+
+    def _round_batch(self) -> int:
+        """Per-round mini-batch under the hogwild ramp-up schedule
+        (RunConfig.batch_rampup): linear from batch_size at t=0 to the
+        target at the final outer step. 0 (= cfg.batch_size) without."""
+        target = getattr(self.cfg, "batch_rampup", None)
+        if not target:
+            return 0
+        frac = min(1.0, self.server.t / max(self.cfg.outer_steps - 1, 1))
+        return max(1, int(round(self.cfg.batch_size
+                                + frac * (target - self.cfg.batch_size))))
 
     def _dispatch(self, w: Worker):
         """Capture the round, schedule its virtual return, submit it."""
@@ -413,7 +715,8 @@ class EngineBase:
         w.inner_step_count += res.h_steps
         w.in_flight = False
         w.pending_task_id = None
-        toks = res.h_steps * self.cfg.batch_size * self.cfg.seq_len
+        toks = (res.h_steps * (res.batch_size or self.cfg.batch_size)
+                * self.cfg.seq_len)
         self.history.tokens += toks
         if res.lang is not None:
             self.lang_tokens[res.lang] += toks
@@ -427,11 +730,35 @@ class EngineBase:
                 res.delta, res.s_i, res.wid, sim_time=self.time,
                 lang=(self.specs[res.lang].lang
                       if res.lang is not None else "iid"))
-        self.history.arrivals.append(rec.__dict__)
+        self.history.append_arrival(rec.__dict__)
         if self.telemetry is not None:
             self.telemetry.record_arrival(rec, mixture=w.mixture,
                                           tokens_total=self.history.tokens)
         return rec
+
+    def _commit_batch(self, pairs: List[Tuple[Worker, RoundResult]]):
+        """Commit a coalesced batch of same-tick arrivals through the
+        server's commit buffer: one fused multi-apply instead of
+        len(pairs) sequential outer steps (docs/scale.md). Only reached
+        with ``commit_batch > 1``; a batch of one goes through _commit."""
+        recs = []
+        with self.tracer.span("server_commit_batch", cat="server",
+                              k=len(pairs)):
+            for w, res in pairs:
+                self._commit_worker(w, res)
+                out = self.server.buffer_arrival(
+                    res.delta, res.s_i, res.wid, sim_time=self.time,
+                    lang=(self.specs[res.lang].lang
+                          if res.lang is not None else "iid"))
+                if out:
+                    recs.extend(out)
+            recs.extend(self.server.flush())
+        for (w, _res), rec in zip(pairs, recs):
+            self.history.append_arrival(rec.__dict__)
+            if self.telemetry is not None:
+                self.telemetry.record_arrival(rec, mixture=w.mixture,
+                                              tokens_total=self.history.tokens)
+        return recs
 
     def _post_commit(self, eval_every, eval_fn, ckpt_every, ckpt_dir):
         t = self.server.t
@@ -445,7 +772,7 @@ class EngineBase:
             with self.tracer.span("checkpoint", cat="ckpt", step=t):
                 self.checkpoint(ckpt_dir)
         if (self.telemetry is not None and self.runtime_record_every
-                and len(self.history.arrivals)
+                and self.history.total_arrivals
                 % self.runtime_record_every == 0):
             self._record_runtime()
 
@@ -456,11 +783,9 @@ class EngineBase:
         live counters. Pure observation: no jax ops, no RNG — telemetry-on
         runs stay byte-identical to the goldens."""
         return {
-            "workers_alive": sum(1 for w in self.workers.values()
-                                 if w.alive),
+            "workers_alive": self.arena.n_alive(),
             "workers_total": len(self.workers),
-            "in_flight": sum(1 for w in self.workers.values()
-                             if w.in_flight),
+            "in_flight": self.arena.n_in_flight(),
         }
 
     def _record_runtime(self):
@@ -511,14 +836,27 @@ class EngineBase:
                    budget: Optional[Budget] = None) -> History:
         """Virtual-clock event loop. Used by the simulator AND by the
         deterministic wall-clock runtime (which overlaps compute but
-        commits in exactly this event order)."""
+        commits in exactly this event order).
+
+        With ``RunConfig.commit_batch > 1``, up to that many same-tick
+        ready arrivals pop as ONE vectorized batch and commit through the
+        server's fused multi-apply; the batch is capped so an
+        eval/checkpoint boundary always lands exactly at a batch end
+        (docs/scale.md). commit_batch=1 is the exact sequential path."""
         for w in self.workers.values():
             if w.alive and not w.in_flight:
                 self._dispatch(w)
         fail_idx = el_idx = 0
         target = self.cfg.outer_steps
-        while self.server.t < target and self._heap and not self._stop:
-            time, _, kind, wid, gen = heapq.heappop(self._heap)
+        commit_batch = max(1, int(getattr(self.cfg, "commit_batch", 1)))
+        while self.server.t < target and len(self._events) and not self._stop:
+            cap = min(commit_batch, target - self.server.t)
+            if eval_every:
+                cap = min(cap, eval_every - self.server.t % eval_every)
+            if ckpt_every:
+                cap = min(cap, ckpt_every - self.server.t % ckpt_every)
+            events = self._events.pop_batch(cap)
+            time = events[0][0]
             if budget is not None and budget.over_time(time):
                 break   # fixed clock horizon: never commit past it
             # interleave failure / elastic events that occur first
@@ -531,22 +869,31 @@ class EngineBase:
                 self._handle_elastic(self.elastic[el_idx])
                 el_idx += 1
             self.time = time
-            if kind == "restart":
+            ready: List[Worker] = []
+            for _t, kind, wid, gen in events:
+                if kind == "restart":
+                    w = self.workers.get(wid)
+                    if w is not None:
+                        w.alive = True
+                        self._dispatch(w)
+                    continue
                 w = self.workers.get(wid)
-                if w is not None:
-                    w.alive = True
-                    self._dispatch(w)
+                if w is None or not w.alive or gen != w.generation:
+                    self._events.note_skip()
+                    continue  # stale event (crashed/removed worker)
+                ready.append(w)
+            if not ready:
                 continue
-            w = self.workers.get(wid)
-            if w is None or not w.alive or gen != w.generation:
-                continue  # stale event (crashed/removed worker)
-            res = self._obtain(w)
-            self._commit(w, res)
+            if len(ready) == 1:
+                self._commit(ready[0], self._obtain(ready[0]))
+            else:
+                self._commit_batch([(w, self._obtain(w)) for w in ready])
             self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
             if budget is not None and budget.over_tokens(self.history.tokens):
                 break   # token budget reached at this commit
-            if self.server.t < target:
-                self._dispatch(w)
+            for w in ready:
+                if self.server.t < target:
+                    self._dispatch(w)
         return self._finalize(eval_fn)
 
     # ------------------------------------------------------------- sync mode
@@ -570,7 +917,7 @@ class EngineBase:
             self.time += round_time  # barrier: slowest worker gates the round
             rec = self.server.on_sync_round([r.delta for r in results],
                                             sim_time=self.time)
-            self.history.arrivals.append(rec.__dict__)
+            self.history.append_arrival(rec.__dict__)
             if self.telemetry is not None:
                 self.telemetry.record_arrival(
                     rec, tokens_total=self.history.tokens)
@@ -582,11 +929,14 @@ class EngineBase:
     # ------------------------------------------------------- fault tolerance
     def _crash_worker(self, w: Worker):
         """Shared crash bookkeeping: the in-flight round is lost."""
+        if w.in_flight and self._use_virtual_clock():
+            self._events.note_stale()    # its return event is now dead
         w.alive = False
         w.generation += 1
         w.ef = None
         w.in_flight = False
         w.pending_task_id = None
+        self._events.maybe_compact(self._event_is_live)
 
     def _handle_failure(self, ev: FailureEvent):
         w = self.workers.get(ev.wid)
@@ -601,20 +951,22 @@ class EngineBase:
             lang = (int(np.argmax(mixture)) if mixture is not None
                     else ev.lang)
             w = Worker(wid=ev.wid, pace=ev.pace, lang=lang, mixture=mixture,
-                       opt=init_adam(self.server.state.params))
+                       opt=init_adam(self.server.state.params),
+                       arena=self.arena)
             self.workers[ev.wid] = w
-            self.server.set_n_workers(
-                sum(1 for x in self.workers.values() if x.alive))
+            self.server.set_n_workers(self.arena.n_alive())
             self._dispatch(w)
         elif ev.action == "leave":
             w = self.workers.pop(ev.wid, None)
             if w is not None:
+                if w.in_flight and self._use_virtual_clock():
+                    self._events.note_stale()
                 w.generation += 1
                 self._on_worker_removed(w)
-            self.server.set_n_workers(
-                sum(1 for x in self.workers.values() if x.alive))
-        self._min_pace = min((x.pace for x in self.workers.values()
-                              if x.alive), default=1.0)
+                self.arena.release(w.slot)
+                self._events.maybe_compact(self._event_is_live)
+            self.server.set_n_workers(self.arena.n_alive())
+        self._min_pace = self.arena.min_alive_pace(default=1.0)
 
     # ---------------------------------------------------------- checkpointing
     def server_tree(self) -> Dict:
@@ -628,7 +980,7 @@ class EngineBase:
     def checkpoint(self, ckpt_dir: str) -> str:
         path = os.path.join(ckpt_dir, f"step_{self.server.t}.npz")
         meta = {"time": self.time, "tokens": int(self.history.tokens),
-                "arrivals": len(self.history.arrivals)}
+                "arrivals": self.history.total_arrivals}
         ckpt.save(path, self.server_tree(), meta)
         return path
 
@@ -646,7 +998,7 @@ class EngineBase:
         self.restored_arrivals = int(meta.get("arrivals", 0))
         self._stop = False
         # in-flight worker rounds are lost on restart (real-world semantics)
-        self._heap.clear()
+        self._events.clear()
         for w in self.workers.values():
             w.generation += 1
             w.in_flight = False

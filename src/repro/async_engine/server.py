@@ -22,20 +22,32 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, List, Optional
+from typing import Any, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import OuterOptConfig
 from repro.core import methods as outer_methods
 from repro.core import packing
 from repro.core.heloco import (
-    OuterState, apply_arrival, apply_arrival_packed, init_outer_state,
-    lookahead_init, momentum_decay_packed, momentum_decay_update,
+    OuterState, apply_arrival, apply_arrival_packed, apply_arrivals_packed,
+    init_outer_state, lookahead_init, momentum_decay_packed,
+    momentum_decay_update,
 )
 
 PyTree = Any
+
+
+class _Pending(NamedTuple):
+    """One buffered (not-yet-committed) arrival (see ``buffer_arrival``)."""
+    delta: Any
+    s_i: int
+    worker_id: int
+    sim_time: float
+    lang: str
+    commit_key: Any
 
 
 def _mbuf_moments(mbuf: jnp.ndarray):
@@ -65,7 +77,7 @@ class Synchronizer:
     def __init__(self, init_params: PyTree, cfg: OuterOptConfig,
                  n_workers: int, stacked_axes: Optional[PyTree] = None,
                  use_kernel: bool = False, packed: bool = True,
-                 telemetry: bool = False):
+                 telemetry: bool = False, commit_batch: int = 1):
         self.cfg = cfg
         self.method = outer_methods.resolve(cfg.method)
         self.n_workers = n_workers
@@ -81,7 +93,24 @@ class Synchronizer:
         # that a replayed (wid, generation, seq) can never double-step
         # outer state, whatever path it took here.
         self._committed: dict = {}
+        # -- batched-arrival commit buffer (docs/scale.md) ---------------
+        # Arrivals parked via buffer_arrival() coalesce into one fused
+        # multi-apply at flush time; flush fires on batch-full here, the
+        # engine forces it at eval/checkpoint boundaries, and methods with
+        # batchable=False degrade to the sequential path inside flush().
+        self.commit_batch = max(1, int(commit_batch))
+        self._pending: List[_Pending] = []
+        self._pending_keys: set = set()
+        self._apply_multi: dict = {}      # K -> jitted batched apply
+        # Coefficient-scalar table: each distinct host scalar (rho, tau,
+        # phase) is put on device ONCE and re-indexed by value afterwards,
+        # so a warmed-up per-arrival commit issues no host->device
+        # transfers (asserted by the bench-scale transfer probe). phase is
+        # reduced mod buffer_period first — the schedule hooks only ever
+        # read (phase + 1) % buffer_period, so the table stays finite.
+        self._coef_table: dict = {}
         buffered = self.method.uses_buffer
+        self._phase_period = self.method.buffer_period if buffered else 1
         if packed:
             self.layout = packing.build_layout(init_params, stacked_axes)
             self._pbuf = packing.pack(self.layout, init_params)
@@ -240,18 +269,34 @@ class Synchronizer:
         return rho
 
     # -- outer-step drivers ---------------------------------------------------
+    def _coef(self, value, dtype=None):
+        """Host scalar -> device scalar, materialised once per distinct
+        value (the per-method coefficient table; see __init__)."""
+        key = (value, None if dtype is None else jnp.dtype(dtype).name)
+        dev = self._coef_table.get(key)
+        if dev is None:
+            dev = (jnp.asarray(value) if dtype is None
+                   else jnp.asarray(value, dtype))
+            self._coef_table[key] = dev
+        return dev
+
+    def _phase_coef(self):
+        """Device int32 phase, reduced mod buffer_period (the only part of
+        the outer-step index the schedule hooks observe)."""
+        return self._coef(self.t % self._phase_period, jnp.int32)
+
     def _step_update(self, delta: PyTree, rho: float, tau: float):
         if self.packed:
             if self.method.uses_buffer:
                 out = self._apply_packed(
                     self._pbuf, self._mbuf, self._abuf, delta,
-                    jnp.asarray(rho), jnp.asarray(tau, jnp.float32),
-                    jnp.asarray(self._step, jnp.int32))
+                    self._coef(rho), self._coef(tau, jnp.float32),
+                    self._phase_coef())
                 self._pbuf, self._mbuf, self._abuf = out[:3]
             else:
                 out = self._apply_packed(
-                    self._pbuf, self._mbuf, delta, jnp.asarray(rho),
-                    jnp.asarray(tau, jnp.float32))
+                    self._pbuf, self._mbuf, delta, self._coef(rho),
+                    self._coef(tau, jnp.float32))
                 self._pbuf, self._mbuf = out[:2]
             if self.telemetry:
                 self._last_moments = out[-1]
@@ -261,24 +306,23 @@ class Synchronizer:
             if self.telemetry:
                 # before _apply donates the state buffers
                 self._last_moments = self._moments_ref(
-                    self._state, delta, jnp.asarray(rho),
-                    jnp.asarray(tau, jnp.float32),
-                    jnp.asarray(self.t, jnp.int32))
-            self._state = self._apply(self._state, delta, jnp.asarray(rho),
-                                      jnp.asarray(tau, jnp.float32),
-                                      jnp.asarray(self.t, jnp.int32))
+                    self._state, delta, self._coef(rho),
+                    self._coef(tau, jnp.float32), self._phase_coef())
+            self._state = self._apply(self._state, delta, self._coef(rho),
+                                      self._coef(tau, jnp.float32),
+                                      self._phase_coef())
 
     def _step_decay(self, rho: float, tau: float):
         """Dropped arrival (App. A.6): momentum-decay-only outer step —
         equivalent to the method applied to a zero pseudo-gradient, but no
         zero pytree is materialised and the O(d) correction is skipped."""
-        rho = jnp.asarray(rho)
-        tau = jnp.asarray(tau, jnp.float32)
+        rho = self._coef(rho)
+        tau = self._coef(tau, jnp.float32)
         if self.packed:
             if self.method.uses_buffer:
                 out = self._decay_packed(
                     self._pbuf, self._mbuf, self._abuf, rho, tau,
-                    jnp.asarray(self._step, jnp.int32))
+                    self._phase_coef())
                 self._pbuf, self._mbuf, self._abuf = out[:3]
             else:
                 out = self._decay_packed(self._pbuf, self._mbuf, rho, tau)
@@ -291,7 +335,70 @@ class Synchronizer:
             if self.telemetry:
                 self._last_moments = self._decay_moments_ref(self._state)
             self._state = self._decay(self._state, rho, tau,
-                                      jnp.asarray(self.t, jnp.int32))
+                                      self._phase_coef())
+
+    # -- batched commit path (docs/scale.md) ----------------------------------
+    def _make_apply_multi(self, k: int):
+        """Build the jitted K-stacked apply: one fused multi-kernel sweep
+        (<= 2 Pallas launches for every registered method) replacing K
+        sequential _step_update calls. Telemetry moments ride the same
+        sweep as a (K, 4) extra output."""
+        cfg = self.cfg
+        telemetry = self.telemetry
+        if self.method.uses_buffer:
+            def _apply(p, m, b, deltas, rho_vec, tau_vec, phase_vec):
+                out = apply_arrivals_packed(
+                    p, m, list(deltas), self.layout, method=self.method,
+                    outer_lr=cfg.outer_lr, mu=cfg.momentum, h=cfg.heloco,
+                    rhos=[rho_vec[j] for j in range(k)],
+                    taus=[tau_vec[j] for j in range(k)], abuf=b,
+                    phases=[phase_vec[j] for j in range(k)],
+                    with_stats=telemetry)
+                if telemetry:
+                    return (*out[:3], jnp.sum(out[3], axis=1))
+                return out
+
+            return jax.jit(_apply, donate_argnums=(0, 1, 2))
+
+        def _apply(p, m, deltas, rho_vec, tau_vec):
+            out = apply_arrivals_packed(
+                p, m, list(deltas), self.layout, method=self.method,
+                outer_lr=cfg.outer_lr, mu=cfg.momentum, h=cfg.heloco,
+                rhos=[rho_vec[j] for j in range(k)],
+                taus=[tau_vec[j] for j in range(k)],
+                with_stats=telemetry)
+            if telemetry:
+                return out[0], out[1], jnp.sum(out[2], axis=1)
+            return out
+
+        return jax.jit(_apply, donate_argnums=(0, 1))
+
+    def _step_update_multi(self, deltas: List[PyTree], rhos: List[float],
+                           taus: List[float]):
+        """Commit K arrivals in one fused launch. Returns the per-arrival
+        (K, 4) telemetry moments (None without telemetry)."""
+        k = len(deltas)
+        fn = self._apply_multi.get(k)
+        if fn is None:
+            fn = self._make_apply_multi(k)
+            self._apply_multi[k] = fn
+        # one host->device transfer per flush for ALL per-arrival scalars
+        rho_vec = jnp.asarray(np.asarray(rhos, np.float32))
+        tau_vec = jnp.asarray(np.asarray(taus, np.float32))
+        if self.method.uses_buffer:
+            period = self._phase_period
+            phase_vec = jnp.asarray(np.asarray(
+                [(self._step + j) % period for j in range(k)], np.int32))
+            out = fn(self._pbuf, self._mbuf, self._abuf, tuple(deltas),
+                     rho_vec, tau_vec, phase_vec)
+            self._pbuf, self._mbuf, self._abuf = out[:3]
+        else:
+            out = fn(self._pbuf, self._mbuf, tuple(deltas), rho_vec, tau_vec)
+            self._pbuf, self._mbuf = out[:2]
+        moments = out[-1] if self.telemetry else None
+        self._step += k
+        self._state_cache = None
+        return moments
 
     def _attach_stats(self, rec: ArrivalRecord) -> ArrivalRecord:
         """Fold the last step's telemetry moments into the record."""
@@ -332,6 +439,91 @@ class Synchronizer:
         if commit_key is not None:
             self._committed[commit_key] = rec
         return rec
+
+    # -- batched arrival processing (docs/scale.md) ---------------------------
+    @property
+    def pending(self) -> int:
+        """Arrivals parked in the commit buffer, awaiting flush()."""
+        return len(self._pending)
+
+    def buffer_arrival(self, delta: PyTree, s_i: int, worker_id: int,
+                       sim_time: float = 0.0, lang: str = "",
+                       commit_key=None) -> Optional[List[ArrivalRecord]]:
+        """Park one arrival in the commit buffer. Returns the flushed
+        records when this arrival filled the batch (len == commit_batch),
+        None while the buffer is still coalescing. Arrivals whose
+        commit_key is already in the ledger (or already buffered) are
+        dropped here — the idempotent-commit guarantee of on_arrival,
+        extended to buffered redelivery."""
+        if commit_key is not None:
+            if commit_key in self._committed or commit_key in self._pending_keys:
+                return None
+            self._pending_keys.add(commit_key)
+        self._pending.append(_Pending(delta, s_i, worker_id, sim_time,
+                                      lang, commit_key))
+        if len(self._pending) >= self.commit_batch:
+            return self.flush()
+        return None
+
+    def flush(self) -> List[ArrivalRecord]:
+        """Commit every buffered arrival, in buffering order, and return
+        their records. Runs of consecutive batchable non-dropped arrivals
+        commit through ONE fused multi-apply; dropped arrivals (App. A.6),
+        singletons, non-batchable methods, and the per-leaf reference path
+        all fall back to the exact sequential on_arrival — so a batch of
+        size 1 is byte-identical to the unbatched server."""
+        pending, self._pending = self._pending, []
+        self._pending_keys = set()
+        if not pending:
+            return []
+        n = len(pending)
+        batchable = self.packed and self.method.batchable
+        # Staleness at commit time is knowable up front: every commit
+        # (applied or dropped) advances t by exactly one, so arrival j
+        # sees tau_j = (t0 + j) - s_i_j whatever path it takes.
+        t0 = self.t
+        drop_after = self.cfg.drop_stale_after
+        drops = [drop_after is not None and (t0 + j) - a.s_i > drop_after
+                 for j, a in enumerate(pending)]
+        recs: List[ArrivalRecord] = []
+        i = 0
+        while i < n:
+            j = i
+            if batchable and not drops[i]:
+                while j < n and not drops[j]:
+                    j += 1
+            if j - i < 2:
+                a = pending[i]
+                recs.append(self.on_arrival(a.delta, a.s_i, a.worker_id,
+                                            a.sim_time, a.lang, a.commit_key))
+                i += 1
+                continue
+            run = pending[i:j]
+            t_run = self.t
+            taus = [t_run + idx - a.s_i for idx, a in enumerate(run)]
+            rhos = [self._rho(tau) for tau in taus]
+            moments = self._step_update_multi([a.delta for a in run],
+                                              rhos, taus)
+            if moments is not None:
+                # ONE device->host pull for the whole flush; per-record
+                # slicing below is then pure numpy (an eager device slice
+                # per record would issue a h2d index transfer each time —
+                # the bench-scale transfer probe guards this path)
+                moments = np.asarray(moments)
+            for idx, a in enumerate(run):
+                rec = ArrivalRecord(outer_step=t_run + idx + 1,
+                                    worker_id=a.worker_id,
+                                    staleness=taus[idx], rho=rhos[idx],
+                                    sim_time=a.sim_time, lang=a.lang)
+                if moments is not None:
+                    self._last_moments = moments[idx]
+                rec = self._attach_stats(rec)
+                self.records.append(rec)
+                if a.commit_key is not None:
+                    self._committed[a.commit_key] = rec
+                recs.append(rec)
+            i = j
+        return recs
 
     # -- sync round (barrier) -------------------------------------------------
     def on_sync_round(self, deltas: List[PyTree], sim_time: float = 0.0

@@ -80,6 +80,7 @@ class PeerMixer:
         self.n_workers = n_workers
         self.records: List[ArrivalRecord] = []
         self._committed: Dict[Any, ArrivalRecord] = {}
+        self._pending_buf: List[Any] = []
         self._init_params = init_params
         self._p: Dict[int, PyTree] = {}          # wid -> replica params
         self._m: Dict[int, PyTree] = {}          # wid -> replica momentum
@@ -195,6 +196,26 @@ class PeerMixer:
         if commit_key is not None:
             self._committed[commit_key] = rec
         return rec
+
+    # -- batched arrival surface (docs/scale.md) --------------------------------
+    # Peer mixing is order-dependent (each commit rewrites two replicas),
+    # so there is no fused multi-apply here: the commit-buffer API is
+    # honoured with the exact sequential semantics, keeping the engines'
+    # batched loop topology-agnostic.
+    @property
+    def pending(self) -> int:
+        return len(self._pending_buf)
+
+    def buffer_arrival(self, delta: PyTree, s_i: int, worker_id: int,
+                       sim_time: float = 0.0, lang: str = "",
+                       commit_key=None) -> Optional[List[ArrivalRecord]]:
+        self._pending_buf.append((delta, s_i, worker_id, sim_time, lang,
+                                  commit_key))
+        return None
+
+    def flush(self) -> List[ArrivalRecord]:
+        pending, self._pending_buf = self._pending_buf, []
+        return [self.on_arrival(*args) for args in pending]
 
     def on_sync_round(self, deltas, sim_time: float = 0.0):
         raise RuntimeError("decentralized topologies have no sync barrier")

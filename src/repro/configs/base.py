@@ -222,6 +222,14 @@ class RunConfig:
     # exchange topology: "hub" (Synchronizer) or a decentralized
     # NoLoCo-style "ring" / "gossip" (repro.async_engine.topology)
     topology: str = "hub"
+    # batched-arrival fast path (docs/scale.md): coalesce up to this many
+    # same-tick arrivals into one fused multi-apply commit. 1 = the exact
+    # sequential path (default; every pre-existing golden).
+    commit_batch: int = 1
+    # hogwild-style ramp-up (arXiv 2010.14763): per-round mini-batch grows
+    # linearly from batch_size to this value across outer steps (None =
+    # constant batch_size).
+    batch_rampup: Optional[int] = None
     # fault tolerance:
     ckpt_every: int = 0              # outer steps between checkpoints (0=off)
     ckpt_dir: str = ""

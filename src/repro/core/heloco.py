@@ -226,6 +226,26 @@ def apply_arrival(state: OuterState, delta: PyTree, *, method,
     return outer_update(state, g, outer_lr, mu, rho=rho)
 
 
+def apply_arrivals(state: OuterState, deltas, *, method, outer_lr: float,
+                   mu: float, h: HeLoCoConfig, rhos=None, taus=None,
+                   phases=None, stacked_axes: Optional[PyTree] = None,
+                   use_kernel: bool = False) -> OuterState:
+    """Per-leaf REFERENCE of a batched flush: K sequential
+    ``apply_arrival`` steps with per-delta rho/tau/phase. This is the
+    semantics ``apply_arrivals_packed`` must reproduce (fp32-close; the
+    property tests in tests/test_scale.py pin it for every method)."""
+    k = len(deltas)
+    rhos = [1.0] * k if rhos is None else list(rhos)
+    taus = [0.0] * k if taus is None else list(taus)
+    phases = [None] * k if phases is None else list(phases)
+    for delta, rho, tau, phase in zip(deltas, rhos, taus, phases):
+        state = apply_arrival(state, delta, method=method, outer_lr=outer_lr,
+                              mu=mu, h=h, rho=rho, tau=tau, phase=phase,
+                              stacked_axes=stacked_axes,
+                              use_kernel=use_kernel)
+    return state
+
+
 # ---------------------------------------------------------------------------
 # Packed fast path: same math, one flat buffer, O(1) kernel launches
 # ---------------------------------------------------------------------------
@@ -298,6 +318,74 @@ def apply_arrival_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
     return pk.packed_correct_outer(pbuf, mbuf, dbuf, cu_rows, cv_rows,
                                    outer_lr, mu, rho, interpret=interpret,
                                    with_stats=with_stats)
+
+
+def apply_arrivals_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,
+                          deltas, layout, *, method,
+                          outer_lr: float, mu: float, h: HeLoCoConfig,
+                          rhos, taus, abuf: jnp.ndarray | None = None,
+                          phases=None, interpret: bool | None = None,
+                          with_stats: bool = False):
+    """Process K coalesced arrivals on the packed outer state in at most
+    TWO Pallas launches total (one optional multi-Gram statistics sweep +
+    one K-unrolled fused sweep), vs up to 2K for the sequential path.
+
+    deltas: sequence of K pseudo-gradient pytrees in commit order; rhos /
+    taus: per-delta scalars (sequence of K); phases: per-delta outer-step
+    indices (buffered schedules only). Semantics are those of K sequential
+    ``apply_arrival_packed`` calls with the momentum evolving between
+    them — byte-identical modulo fp32 instruction scheduling (the K
+    applications chain through registers instead of HBM). K = 1 callers
+    should use ``apply_arrival_packed`` directly, which is bitwise
+    byte-identical to the pre-batching path.
+
+    with_stats: additionally return (K, R, 4) per-row telemetry moments,
+    slice j computed against the momentum as of application j — same
+    launch, same count.
+    """
+    from repro.core import methods as _methods
+    from repro.core import packing
+    from repro.kernels import packed as pk
+    from repro.kernels.ops import _auto_interpret
+
+    m = _methods.resolve(method)
+    interpret = _auto_interpret(interpret)
+    k = len(deltas)
+    row_block = jnp.asarray(layout.row_block)
+    dstack = jnp.stack([packing.pack(layout, d) for d in deltas])
+    phases = [None] * k if phases is None else list(phases)
+    ctxs = [_methods.ArrivalCtx(outer_lr=outer_lr, mu=mu, h=h, rho=rho,
+                                tau=jnp.asarray(tau, jnp.float32),
+                                phase=phase, layout=layout,
+                                interpret=interpret)
+            for rho, tau, phase in zip(rhos, taus, phases)]
+    cu, cv, cq = _methods.multi_packed_coeffs(m, ctxs, dstack, mbuf)
+    cu_rows = cu[:, row_block][:, :, None]
+    cv_rows = cv[:, row_block][:, :, None]
+    rho_vec = jnp.stack([jnp.asarray(r, jnp.float32) for r in rhos])
+    if m.custom_update:
+        if cq is not None:
+            raise NotImplementedError(
+                f"method {m.name!r}: a quadratic (cq) term combined with "
+                "a custom schedule is not supported on the packed path")
+        am, bm, ab, cg, cm, ca = _methods.multi_schedule_coeffs(m, ctxs)
+        if abuf is None:
+            abuf = packing.zeros(layout)
+        out = pk.packed_multi_correct_outer_acc(
+            pbuf, mbuf, abuf, dstack, cu_rows, cv_rows, outer_lr, rho_vec,
+            am, bm, ab, cg, cm, ca, interpret=interpret,
+            with_stats=with_stats)
+        if m.uses_buffer:
+            return out
+        return (out[0], out[1], out[3]) if with_stats else out[:2]
+    if cq is not None:
+        cq_rows = cq[:, row_block][:, :, None]
+        return pk.packed_multi_correct_outer_quad(
+            pbuf, mbuf, dstack, cu_rows, cv_rows, cq_rows, outer_lr, mu,
+            rho_vec, interpret=interpret, with_stats=with_stats)
+    return pk.packed_multi_correct_outer(
+        pbuf, mbuf, dstack, cu_rows, cv_rows, outer_lr, mu, rho_vec,
+        interpret=interpret, with_stats=with_stats)
 
 
 def momentum_decay_packed(pbuf: jnp.ndarray, mbuf: jnp.ndarray,

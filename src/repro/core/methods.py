@@ -113,9 +113,16 @@ class OuterMethod:
     stale_alpha: float = 0.0         # polynomial staleness exponent
     buffer_period: int = 0           # >0: gradient accumulator, momentum
     # refresh every N arrivals (delayed-Nesterov / FedBuff)
+    batchable: bool = True           # False: the server's commit buffer must
+    # flush before/after every arrival of this method (ordering constraint)
     # -- hooks --------------------------------------------------------------
     correct: Callable = None         # (m, ctx, delta, momentum) -> g pytree
     packed_coeffs: Callable = None   # (m, ctx, dbuf, mbuf) -> (cu, cv, cq)
+    packed_multi_coeffs: Callable = None  # (m, ctxs, dstack, mbuf) ->
+    # per-delta ((K,B) cu, (K,B) cv, (K,B) cq | None) for a flush of K
+    # coalesced arrivals; None -> the generic per-delta loop (exact for
+    # hooks that never read the momentum buffer — every momentum-DEPENDENT
+    # hook must supply its own, as heloco does via the Gram recursion)
     decay_scale: Callable = None     # (m, ctx) -> scalar s (G = s*m, delta=0)
     outer_coeffs: Callable = None    # (m, ctx) -> (am, bm, ab, cg, cm[, ca]);
     # None -> the standard Nesterov schedule (byte-identical legacy path)
@@ -278,6 +285,38 @@ def scheduled_decay_update(m: OuterMethod, ctx: ArrivalCtx, state):
     return scheduled_outer_update(m, ctx, state, g)
 
 
+def multi_packed_coeffs(m: OuterMethod, ctxs, dstack, mbuf):
+    """Per-delta coefficient rows for a flush of K coalesced arrivals.
+
+    ctxs: one :class:`ArrivalCtx` per delta, in commit order; dstack:
+    (K, R, 128). Returns ``(cu, cv, cq)`` with cu/cv (K, B) and cq either
+    ``None`` or (K, B) — the coefficients each application j would have
+    seen on the sequential path (i.e. against the momentum as of THAT
+    application). The default evaluates ``packed_coeffs`` per delta
+    against the flush-time momentum buffer, which is exact precisely when
+    the hook never reads ``mbuf``; momentum-dependent hooks override
+    (heloco's override reconstructs the evolving-momentum statistics from
+    one Gram sweep, keeping the whole flush at <= 2 launches)."""
+    if m.packed_multi_coeffs is not None:
+        return m.packed_multi_coeffs(m, ctxs, dstack, mbuf)
+    outs = [m.packed_coeffs(m, ctx, dstack[j], mbuf)
+            for j, ctx in enumerate(ctxs)]
+    cu = jnp.stack([o[0] for o in outs])
+    cv = jnp.stack([o[1] for o in outs])
+    if outs[0][2] is None:
+        return cu, cv, None
+    return cu, cv, jnp.stack([o[2] for o in outs])
+
+
+def multi_schedule_coeffs(m: OuterMethod, ctxs):
+    """Stack :func:`schedule_coeffs` over a flush: six (K,) vectors
+    ``(am, bm, ab, cg, cm, ca)`` — each delta's boundary state toggles its
+    own slot of the multi acc kernel's scalar table."""
+    rows = [schedule_coeffs(m, ctx) for ctx in ctxs]
+    return tuple(jnp.stack([jnp.asarray(r[i], jnp.float32) for r in rows])
+                 for i in range(6))
+
+
 def scheduled_decay_packed(m: OuterMethod, ctx: ArrivalCtx, pbuf, mbuf,
                            abuf=None):
     """Packed dropped-arrival step for ``custom_update`` methods. Pure
@@ -331,6 +370,37 @@ def _heloco_packed_coeffs(m, ctx, dbuf, mbuf):
                             ranges=ctx.layout.block_row_ranges)
     cu, cv = pk.branch_scalars(stats, ctx.h)
     return cu, cv, None
+
+
+def _heloco_multi_coeffs(m, ctxs, dstack, mbuf):
+    """Evolving-momentum branch statistics for K coalesced deltas from ONE
+    Gram sweep. The momentum after j applications stays inside
+    span[m0, d_1..d_j], so tracking its basis coordinates ``alpha`` (B,
+    K+1) per block turns every (dot, uu, vv) the sequential path would
+    measure into an O(B K^2) contraction of the per-block Gram matrix —
+    no further O(d) work. fp32-close (not bitwise) to the sequential
+    statistics for K > 1; K = 1 flushes take the single-arrival path."""
+    from repro.kernels import packed as pk
+    layout = ctxs[0].layout
+    k = dstack.shape[0]
+    gram = pk.packed_multi_gram(mbuf, dstack, layout.block_row_ranges,
+                                interpret=ctxs[0].interpret)   # (B, K+1, K+1)
+    alpha = jnp.zeros((layout.n_blocks, k + 1), jnp.float32)
+    alpha = alpha.at[:, 0].set(1.0)                 # m_cur = 1 * m0
+    cus, cvs = [], []
+    for j, ctx in enumerate(ctxs):
+        e = j + 1                                   # basis slot of d_j
+        dot = jnp.sum(alpha * gram[:, e, :], axis=1)
+        uu = gram[:, e, e]
+        vv = jnp.sum(alpha * jnp.einsum("btu,bu->bt", gram, alpha), axis=1)
+        cu, cv = pk.branch_scalars(jnp.stack([dot, uu, vv], axis=1), ctx.h)
+        cus.append(cu)
+        cvs.append(cv)
+        # m' = mu*m + (1-mu)*rho*(cu*d_j + cv*m), in basis coordinates
+        rho = jnp.asarray(ctx.rho, jnp.float32)
+        alpha = alpha * (ctx.mu + (1.0 - ctx.mu) * rho * cv)[:, None]
+        alpha = alpha.at[:, e].add((1.0 - ctx.mu) * rho * cu)
+    return jnp.stack(cus), jnp.stack(cvs), None
 
 
 # -- MLA (momentum look-ahead; Ajanthan et al. 2025) -------------------------
@@ -453,7 +523,8 @@ register(OuterMethod(
                 "Alg. 1-2).",
     outer_lr=0.7, momentum=0.9, weight_factor="base", lookahead_init=True,
     aliases=("async-heloco",),
-    correct=_heloco_correct, packed_coeffs=_heloco_packed_coeffs))
+    correct=_heloco_correct, packed_coeffs=_heloco_packed_coeffs,
+    packed_multi_coeffs=_heloco_multi_coeffs))
 
 register(OuterMethod(
     name="mla",

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.configs.base import HeLoCoConfig
@@ -408,6 +409,293 @@ def packed_correct_outer_acc(p2d: jnp.ndarray, m2d: jnp.ndarray,
         out_shape=out_shape,
         interpret=interpret,
     )(p2d, m2d, b2d, d2d, cu_rows, cv_rows, hp)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-arrival sweeps (K coalesced deltas, ONE launch).
+#
+# The server's commit buffer coalesces up to K pending arrivals and flushes
+# them through these kernels: a (K, R, 128) delta stack plus per-delta
+# (K, R, 1) coefficient rows and a (K, n_hp) scalar table. The kernel
+# unrolls the K applications in registers — p and m round-trip through
+# fp32 registers instead of fp32 HBM between applications, which is the
+# identity, so the result is op-order-IDENTICAL to K sequential launches
+# of the single-arrival kernels whenever the per-delta coefficients match
+# what the sequential path would have computed. HBM traffic drops from
+# K*(3R+2W) to (K+2)R+2W of d floats; launches from K (or 2K) to 1.
+#
+# Telemetry moments ride the same sweep as a (K, R, 4) extra output,
+# each slice computed against the momentum as of THAT application — the
+# same values K sequential with_stats launches would emit.
+# ---------------------------------------------------------------------------
+
+
+def _multi_hp(k: int, *cols) -> jnp.ndarray:
+    """Per-delta scalar table: each col is a scalar or (K,) -> (K, #cols)."""
+    cols = [jnp.broadcast_to(jnp.asarray(c, jnp.float32), (k,)) for c in cols]
+    return jnp.stack(cols, axis=1)
+
+
+def _multi_correct_outer_kernel(k: int, with_stats: bool):
+    def kern(p_ref, m_ref, d_ref, cu_ref, cv_ref, hp_ref, p_out, m_out,
+             *s_out):
+        p = p_ref[...].astype(jnp.float32)
+        m = m_ref[...].astype(jnp.float32)
+        for j in range(k):
+            eta = hp_ref[j, 0]
+            mu = hp_ref[j, 1]
+            rho = hp_ref[j, 2]
+            d = d_ref[j].astype(jnp.float32)
+            corr = cu_ref[j] * d + cv_ref[j] * m
+            if with_stats:
+                s_out[0][j] = _row_moments(d, m, corr)
+            g = corr * rho
+            m_new = mu * m + (1.0 - mu) * g
+            p = p - eta * (g + mu * m_new)
+            m = m_new
+        p_out[...] = p.astype(p_out.dtype)
+        m_out[...] = m
+    return kern
+
+
+def packed_multi_correct_outer(p2d: jnp.ndarray, m2d: jnp.ndarray,
+                               d3d: jnp.ndarray, cu_rows: jnp.ndarray,
+                               cv_rows: jnp.ndarray, eta, mu, rho,
+                               interpret: bool = True,
+                               rows: int | None = None,
+                               with_stats: bool = False):
+    """K fused correct+outer applications in ONE launch.
+
+    d3d: (K, R, 128) delta stack; cu_rows/cv_rows: (K, R, 1) per-delta
+    coefficient rows; eta/mu/rho: scalar or (K,) per-delta. Returns
+    (p', m') after all K applications (+ (K, R, 4) per-row telemetry
+    moments when ``with_stats``, one slice per delta, same launch).
+    """
+    k, r = d3d.shape[0], p2d.shape[0]
+    rows, grid = _grid(r, interpret, rows)
+    hp = _multi_hp(k, eta, mu, rho)
+    out_specs = [
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+        jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+    ]
+    if with_stats:
+        out_specs.append(pl.BlockSpec((k, rows, N_MOMENTS),
+                                      lambda i: (0, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((k, r, N_MOMENTS),
+                                              jnp.float32))
+    return pl.pallas_call(
+        _multi_correct_outer_kernel(k, with_stats),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((k, rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, rows, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, rows, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, 3), lambda i: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(p2d, m2d, d3d, cu_rows, cv_rows, hp)
+
+
+def _multi_correct_outer_quad_kernel(k: int, with_stats: bool):
+    def kern(p_ref, m_ref, d_ref, cu_ref, cv_ref, cq_ref, hp_ref, p_out,
+             m_out, *s_out):
+        p = p_ref[...].astype(jnp.float32)
+        m = m_ref[...].astype(jnp.float32)
+        for j in range(k):
+            eta = hp_ref[j, 0]
+            mu = hp_ref[j, 1]
+            rho = hp_ref[j, 2]
+            d = d_ref[j].astype(jnp.float32)
+            corr = cu_ref[j] * d + cv_ref[j] * m + cq_ref[j] * d * d * m
+            if with_stats:
+                s_out[0][j] = _row_moments(d, m, corr)
+            g = corr * rho
+            m_new = mu * m + (1.0 - mu) * g
+            p = p - eta * (g + mu * m_new)
+            m = m_new
+        p_out[...] = p.astype(p_out.dtype)
+        m_out[...] = m
+    return kern
+
+
+def packed_multi_correct_outer_quad(p2d: jnp.ndarray, m2d: jnp.ndarray,
+                                    d3d: jnp.ndarray, cu_rows: jnp.ndarray,
+                                    cv_rows: jnp.ndarray,
+                                    cq_rows: jnp.ndarray, eta, mu, rho,
+                                    interpret: bool = True,
+                                    rows: int | None = None,
+                                    with_stats: bool = False):
+    """K quadratic-compensated applications in one launch (multi variant
+    of :func:`packed_correct_outer_quad`); cq_rows: (K, R, 1)."""
+    k, r = d3d.shape[0], p2d.shape[0]
+    rows, grid = _grid(r, interpret, rows)
+    hp = _multi_hp(k, eta, mu, rho)
+    out_specs = [
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+        jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+    ]
+    if with_stats:
+        out_specs.append(pl.BlockSpec((k, rows, N_MOMENTS),
+                                      lambda i: (0, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((k, r, N_MOMENTS),
+                                              jnp.float32))
+    return pl.pallas_call(
+        _multi_correct_outer_quad_kernel(k, with_stats),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((k, rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, rows, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, rows, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, rows, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, 3), lambda i: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(p2d, m2d, d3d, cu_rows, cv_rows, cq_rows, hp)
+
+
+def _multi_correct_outer_acc_kernel(k: int, with_stats: bool):
+    def kern(p_ref, m_ref, b_ref, d_ref, cu_ref, cv_ref, hp_ref, p_out,
+             m_out, b_out, *s_out):
+        p = p_ref[...].astype(jnp.float32)
+        m = m_ref[...].astype(jnp.float32)
+        b = b_ref[...].astype(jnp.float32)
+        for j in range(k):
+            eta = hp_ref[j, 0]
+            rho = hp_ref[j, 1]
+            am = hp_ref[j, 2]
+            bm = hp_ref[j, 3]
+            ab = hp_ref[j, 4]
+            cg = hp_ref[j, 5]
+            cm = hp_ref[j, 6]
+            ca = hp_ref[j, 7]
+            d = d_ref[j].astype(jnp.float32)
+            corr = cu_ref[j] * d + cv_ref[j] * m
+            if with_stats:
+                s_out[0][j] = _row_moments(d, m, corr)
+            g = corr * rho
+            acc = b + g
+            m_new = am * m + bm * acc
+            p = p - eta * (cg * g + ca * acc + cm * m_new)
+            m = m_new
+            b = ab * acc
+        p_out[...] = p.astype(p_out.dtype)
+        m_out[...] = m
+        b_out[...] = b
+    return kern
+
+
+def packed_multi_correct_outer_acc(p2d: jnp.ndarray, m2d: jnp.ndarray,
+                                   b2d: jnp.ndarray, d3d: jnp.ndarray,
+                                   cu_rows: jnp.ndarray,
+                                   cv_rows: jnp.ndarray,
+                                   eta, rho, am, bm, ab, cg, cm, ca=0.0,
+                                   interpret: bool = True,
+                                   rows: int | None = None,
+                                   with_stats: bool = False):
+    """K accumulator-schedule applications in one launch (multi variant of
+    :func:`packed_correct_outer_acc`); every schedule scalar may be a
+    per-delta (K,) vector — boundary arrivals inside the batch toggle
+    their own slot. Returns (p', m', b')."""
+    k, r = d3d.shape[0], p2d.shape[0]
+    rows, grid = _grid(r, interpret, rows)
+    hp = _multi_hp(k, eta, rho, am, bm, ab, cg, cm, ca)
+    out_specs = [
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+        jax.ShapeDtypeStruct(m2d.shape, jnp.float32),
+        jax.ShapeDtypeStruct(b2d.shape, jnp.float32),
+    ]
+    if with_stats:
+        out_specs.append(pl.BlockSpec((k, rows, N_MOMENTS),
+                                      lambda i: (0, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((k, r, N_MOMENTS),
+                                              jnp.float32))
+    return pl.pallas_call(
+        _multi_correct_outer_acc_kernel(k, with_stats),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((k, rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, rows, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, rows, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, 8), lambda i: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(p2d, m2d, b2d, d3d, cu_rows, cv_rows, hp)
+
+
+def _multi_gram_kernel(k: int):
+    t = k + 1
+    def kern(m_ref, d_ref, out_ref):
+        vecs = [m_ref[...].astype(jnp.float32)]
+        vecs += [d_ref[j].astype(jnp.float32) for j in range(k)]
+        cols = []
+        for a in range(t):
+            for b in range(a, t):
+                cols.append(jnp.sum(vecs[a] * vecs[b], axis=1))
+        out_ref[...] = jnp.stack(cols, axis=1)
+    return kern
+
+
+def packed_multi_gram(m2d: jnp.ndarray, d3d: jnp.ndarray, ranges,
+                      interpret: bool = True,
+                      rows: int | None = None) -> jnp.ndarray:
+    """Per-block Gram matrix of the batch basis [m0, d_1..d_K].
+
+    One sweep reading (m, d-stack) emits per-row pairwise products of the
+    K+1 basis vectors; the static ``ranges`` slices (see
+    ``BlockLayout.block_row_ranges``) reduce them to per-block sums.
+    Returns (B, K+1, K+1) symmetric Gram matrices. Every inner product a
+    sequential flush would measure — between any delta and the EVOLVING
+    momentum — is a linear functional of this Gram (the momentum after j
+    applications stays inside span[m0, d_1..d_j]), so one launch replaces
+    the K stats sweeps of the sequential path.
+    """
+    k, r = d3d.shape[0], m2d.shape[0]
+    t = k + 1
+    p_cols = t * (t + 1) // 2
+    rows, grid = _grid(r, interpret, rows)
+    parts = pl.pallas_call(
+        _multi_gram_kernel(k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((k, rows, LANES), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((rows, p_cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, p_cols), jnp.float32),
+        interpret=interpret,
+    )(m2d, d3d)
+    blocks = jnp.stack([parts[s:e].sum(axis=0) for s, e in ranges])
+    idx = np.zeros((t, t), np.int32)
+    c = 0
+    for a in range(t):
+        for b in range(a, t):
+            idx[a, b] = idx[b, a] = c
+            c += 1
+    return blocks[:, idx]
 
 
 # ---------------------------------------------------------------------------

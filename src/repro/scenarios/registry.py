@@ -245,6 +245,30 @@ register(Scenario(
     n_workers=4, worker_paces=(1.0, 2.0, 6.0, 15.0),
     outer_steps=10, inner_steps=2))
 
+# -- scale: batched-arrival fast path (docs/scale.md) -----------------------
+# Small-N golden cells for the O(10k)-worker machinery: the bench grid
+# (benchmarks/bench_scale.py) exercises N in {64, 1k, 10k}; these keep the
+# coalesced-commit semantics pinned under CI-sized budgets.
+
+register(Scenario(
+    name="hogwild_rampup",
+    description="Hogwild-style batch ramp-up (arXiv 2010.14763): per-round "
+                "mini-batch grows linearly 2->8 across the run while the "
+                "server coalesces up to 4 same-tick arrivals per fused "
+                "commit (commit_batch=4).",
+    n_workers=8, worker_paces=(1.0, 1.0, 2.0, 6.0),
+    outer_steps=12, inner_steps=2,
+    commit_batch=4, batch_rampup=8))
+
+register(Scenario(
+    name="trace_paced",
+    description="Worker speeds and churn replayed from a committed trace "
+                "file (results/traces/straggler_n8.json): pace schedule, "
+                "one crash/rejoin and one elastic join, committed through "
+                "the batched fast path (commit_batch=4).",
+    n_workers=8, outer_steps=12, inner_steps=2,
+    commit_batch=4, pace_trace="straggler_n8.json"))
+
 register(Scenario(
     name="chaos_partition",
     description="Free-running runtime with a network partition: worker 3 "

@@ -37,6 +37,28 @@ MODES = ("deterministic", "free")
 TRANSPORTS = ("inproc", "socket")
 TOPOLOGIES = ("hub", "ring", "gossip")
 
+#: committed straggler/churn trace files live here (docs/scale.md)
+TRACE_DIR = "results/traces"
+
+_TRACE_CACHE: Dict[str, Dict[str, Any]] = {}
+
+
+def load_pace_trace(name: str) -> Dict[str, Any]:
+    """Load a committed worker-speed/churn trace file. ``name`` resolves
+    relative to ``TRACE_DIR`` unless it is a path that exists as given.
+    Format (JSON): {"paces": [sec/step, ...] cycled to n_workers,
+    "failures": [[time, wid, restart_delay], ...],
+    "elastic": [[time, action, wid, pace, lang], ...]}."""
+    import json
+    import os
+    path = name if os.path.exists(name) else os.path.join(TRACE_DIR, name)
+    cached = _TRACE_CACHE.get(path)
+    if cached is None:
+        with open(path) as f:
+            cached = json.load(f)
+        _TRACE_CACHE[path] = cached
+    return cached
+
 
 @dataclass(frozen=True)
 class FailureSpec:
@@ -91,6 +113,16 @@ class Scenario:
     outer_steps: int = 12
     batch_size: int = 2
     seq_len: int = 16
+    # batched-arrival fast path (docs/scale.md): coalesce up to this many
+    # same-tick arrivals into one fused multi-apply commit (1 = exact
+    # sequential semantics; every pre-existing golden).
+    commit_batch: int = 1
+    # hogwild-style ramp-up (arXiv 2010.14763): per-round mini-batch grows
+    # linearly from batch_size to this value over the run (None = constant).
+    batch_rampup: Optional[int] = None
+    # committed straggler/churn trace file (docs/scale.md): worker paces
+    # plus failure/elastic schedules replayed from results/traces/<file>.
+    pace_trace: str = ""
     non_iid: bool = True
     mixture_alpha: Optional[float] = None        # Dirichlet language mixture
     shard_assignment: str = "fixed"              # "fixed" | "flexible"
@@ -162,7 +194,10 @@ class Scenario:
 
     @property
     def paces(self) -> Tuple[float, ...]:
-        return tuple(self.worker_paces[i % len(self.worker_paces)]
+        base = self.worker_paces
+        if self.pace_trace:
+            base = tuple(load_pace_trace(self.pace_trace)["paces"]) or base
+        return tuple(base[i % len(base)]
                      for i in range(self.n_workers))
 
     @property
@@ -215,6 +250,8 @@ class Scenario:
             shard_assignment=self.shard_assignment,
             dylu=self.dylu,
             topology=self.topology,
+            commit_batch=self.commit_batch,
+            batch_rampup=self.batch_rampup,
             seed=self.seed)
 
     # ----------------------------------------------------------- materialize
@@ -235,6 +272,16 @@ class Scenario:
         elastic = [ElasticEvent(time=e.time, action=e.action, wid=e.wid,
                                 pace=e.pace, lang=e.lang)
                    for e in self.elastic]
+        if self.pace_trace:
+            # straggler/churn schedules replayed from the committed trace
+            tr = load_pace_trace(self.pace_trace)
+            failures += [FailureEvent(time=float(t), wid=int(w),
+                                      restart_delay=float(d))
+                         for t, w, d in tr.get("failures", [])]
+            elastic += [ElasticEvent(time=float(t), action=str(a),
+                                     wid=int(w), pace=float(p),
+                                     lang=(None if l is None else int(l)))
+                        for t, a, w, p, l in tr.get("elastic", [])]
         return Materialized(run_cfg=self.run_config(), engine=self.engine,
                             engine_kw=engine_kw, failures=failures,
                             elastic=elastic)
@@ -273,6 +320,12 @@ class Scenario:
             d.pop("transport")
         if self.topology == "hub":
             d.pop("topology")
+        if self.commit_batch == 1:
+            d.pop("commit_batch")
+        if self.batch_rampup is None:
+            d.pop("batch_rampup")
+        if not self.pace_trace:
+            d.pop("pace_trace")
         return d
 
     @classmethod

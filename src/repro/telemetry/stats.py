@@ -75,6 +75,33 @@ def reference_moments(delta: PyTree, momentum: PyTree,
     return jnp.sum(jnp.stack(parts), axis=0)
 
 
+def reference_moments_multi(state, deltas, *, method, outer_lr, mu, h,
+                            rhos, taus, phases=None,
+                            stacked_axes=None) -> jnp.ndarray:
+    """Per-leaf reference for the BATCHED kernel moments: (K, 4) fp32,
+    slice j measured against the momentum as of application j (the
+    momentum evolves between slices exactly as ``apply_arrivals`` evolves
+    it). The multi-kernel with_stats output is property-tested against
+    this for every registered method (tests/test_scale.py)."""
+    from repro.core import heloco as _heloco
+    from repro.core import methods as _methods
+    m = _methods.resolve(method)
+    k = len(deltas)
+    phases = [None] * k if phases is None else list(phases)
+    rows = []
+    for delta, rho, tau, phase in zip(deltas, rhos, taus, phases):
+        ctx = _methods.ArrivalCtx(outer_lr=outer_lr, mu=mu, h=h, rho=rho,
+                                  tau=jnp.asarray(tau, jnp.float32),
+                                  phase=phase, stacked_axes=stacked_axes)
+        corrected = m.correct(m, ctx, delta, state.momentum)
+        rows.append(reference_moments(delta, state.momentum, corrected))
+        state = _heloco.apply_arrival(state, delta, method=m,
+                                      outer_lr=outer_lr, mu=mu, h=h,
+                                      rho=rho, tau=tau, phase=phase,
+                                      stacked_axes=stacked_axes)
+    return jnp.stack(rows)
+
+
 def momentum_only_moments(momentum_sq) -> jnp.ndarray:
     """Moments of a suppressed (dropped) arrival: Delta = 0, so only the
     momentum norm is defined."""

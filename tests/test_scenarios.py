@@ -12,7 +12,7 @@ from repro.configs.base import RunConfig
 from repro.data.synthetic import ShardSampler, make_language_specs, \
     mixture_weights
 from repro.scenarios import registry, trace
-from repro.scenarios.spec import METHOD_TABLE, Scenario
+from repro.scenarios.spec import METHOD_TABLE, Scenario, load_pace_trace
 
 TINY = Scenario(name="tiny_roundtrip", n_workers=3,
                 worker_paces=(1.0, 2.0, 6.0), outer_steps=3, inner_steps=1,
@@ -45,8 +45,10 @@ def test_every_scenario_materializes():
         assert m.engine in ("sim", "wallclock")
         if m.engine == "sim":
             assert m.engine_kw == {}
-        assert len(m.failures) == len(s.failures)
-        assert len(m.elastic) == len(s.elastic)
+        # trace-paced scenarios append the trace file's churn events
+        tr = load_pace_trace(s.pace_trace) if s.pace_trace else {}
+        assert len(m.failures) == len(s.failures) + len(tr.get("failures", []))
+        assert len(m.elastic) == len(s.elastic) + len(tr.get("elastic", []))
         # description + paces cycle to n_workers
         assert s.description
         assert len(m.run_cfg.worker_paces) == s.n_workers
