@@ -12,7 +12,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 	bench-full bench-runtime bench-scale bench-check bench-check-arrival \
 	bench-check-runtime bench-check-scale bench-report smoke-wallclock \
 	smoke-proc scenarios scenarios-sim scenarios-wallclock scenarios-proc \
-	record-goldens sweep-smoke chaos console-smoke
+	record-goldens sweep-smoke chaos console-smoke obs-smoke
 
 verify:
 	JAX_PLATFORMS=cpu $(PYTHON) -m pytest -x -q
@@ -123,12 +123,15 @@ scenarios-proc:
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify --all \
 		--transport-filter socket
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify \
+		socket_hetero --obs
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify \
 		wallclock_hetero chaos_lossy chaos_corrupt --transport socket
 	JAX_PLATFORMS=cpu $(PYTHON) -m repro.scenarios.run verify \
 		paper_hetero_severe drop_stale int8_dylu gossip_ring \
 		--cross-only --transport socket
 	$(MAKE) test-proc
 	$(MAKE) smoke-proc
+	$(MAKE) obs-smoke
 
 # unreliable-delivery gate (docs/faults.md): the chaos golden traces —
 # chaos_lossy / chaos_corrupt must reproduce wallclock_hetero's exact
@@ -174,6 +177,40 @@ console-smoke:
 	$(PYTHON) -m repro.obs console results/obs/console_smoke.jsonl --once
 	$(PYTHON) -m repro.obs trace --validate \
 		results/obs/console_smoke.trace.json
+
+# cross-process observability smoke (docs/observability.md,
+# "Cross-process collection"): a free-running socket-transport chaos
+# train streams v4 telemetry live to disk — child transport records
+# riding the obs control channel, commit-buffer flush events from the
+# coalescing server — while child spans merge into ONE Chrome trace;
+# then the merged trace is gated with --validate, the operator console
+# renders a headless snapshot, and the web dashboard's --snapshot
+# aggregation is asserted to carry the arrival-rate, staleness,
+# transport, and flush panels non-empty. Runs in the scenarios-proc CI
+# lane (the observability twin of smoke-proc).
+obs-smoke:
+	JAX_PLATFORMS=cpu $(PYTHON) -m repro.launch.train --arch tinygpt-15m \
+		--smoke --engine wallclock --free --pace-scale 0.02 --chaos \
+		--transport socket --commit-batch 4 \
+		--paces 1,1,2,6 --workers 4 --outer 8 --inner 1 \
+		--batch 2 --seq 16 --eval-every 4 \
+		--telemetry results/obs/obs_smoke.jsonl --telemetry-every 1 \
+		--trace results/obs/obs_smoke.trace.json \
+		--stats-json results/obs/obs_smoke.stats.json
+	$(PYTHON) -m repro.obs trace --validate results/obs/obs_smoke.trace.json
+	$(PYTHON) -m repro.obs console results/obs/obs_smoke.jsonl --once
+	$(PYTHON) -m repro.obs web results/obs/obs_smoke.jsonl --snapshot \
+		> results/obs/obs_smoke.snapshot.json
+	$(PYTHON) -c "import json; p = json.load(open( \
+		'results/obs/obs_smoke.snapshot.json')); \
+		missing = [k for k in ('arrivals', 'staleness', 'transport', \
+		'flush') if not p[k]]; \
+		assert not missing, 'empty obs panels: %s' % missing; \
+		assert p['arrivals']['rate_per_sec'] > 0, 'zero arrival rate'; \
+		assert len(p['transport']['workers']) >= 2, p['transport']; \
+		print('obs-smoke: snapshot OK --', p['arrivals']['commits'], \
+		'commits,', len(p['transport']['workers']), 'worker procs,', \
+		p['flush']['flushes'], 'flushes')"
 
 # tiny end-to-end wallclock-engine training run (CI smoke)
 smoke-wallclock:

@@ -736,11 +736,14 @@ class EngineBase:
                                           tokens_total=self.history.tokens)
         return rec
 
-    def _commit_batch(self, pairs: List[Tuple[Worker, RoundResult]]):
+    def _commit_batch(self, pairs: List[Tuple[Worker, RoundResult]],
+                      reason: str = "batch-full"):
         """Commit a coalesced batch of same-tick arrivals through the
         server's commit buffer: one fused multi-apply instead of
         len(pairs) sequential outer steps (docs/scale.md). Only reached
-        with ``commit_batch > 1``; a batch of one goes through _commit."""
+        with ``commit_batch > 1``; a batch of one goes through _commit.
+        ``reason`` labels the trailing flush (why the batch was capped:
+        batch-full / eval / ckpt / close) for the flush telemetry."""
         recs = []
         with self.tracer.span("server_commit_batch", cat="server",
                               k=len(pairs)):
@@ -752,13 +755,27 @@ class EngineBase:
                           if res.lang is not None else "iid"))
                 if out:
                     recs.extend(out)
-            recs.extend(self.server.flush())
+            recs.extend(self.server.flush(reason))
         for (w, _res), rec in zip(pairs, recs):
             self.history.append_arrival(rec.__dict__)
             if self.telemetry is not None:
                 self.telemetry.record_arrival(rec, mixture=w.mixture,
                                               tokens_total=self.history.tokens)
+        self._drain_flush_log()
         return recs
+
+    def _drain_flush_log(self):
+        """Turn the server's pending flush events into "flush" telemetry
+        records (observation only; the log is tiny — one dict per flush
+        since the last drain)."""
+        log = getattr(self.server, "flush_log", None)
+        if not log:
+            return
+        if self.telemetry is not None:
+            for ev in log:
+                self.telemetry.record_flush(outer_step=self.server.t,
+                                            sim_time=self.time, **ev)
+        log.clear()
 
     def _post_commit(self, eval_every, eval_fn, ckpt_every, ckpt_dir):
         t = self.server.t
@@ -850,11 +867,18 @@ class EngineBase:
         target = self.cfg.outer_steps
         commit_batch = max(1, int(getattr(self.cfg, "commit_batch", 1)))
         while self.server.t < target and len(self._events) and not self._stop:
-            cap = min(commit_batch, target - self.server.t)
+            # labelled cap: the tightest boundary names the flush reason
+            # (min picks the FIRST minimal entry, so a coinciding
+            # eval/ckpt boundary still reads "batch-full")
+            limits = [(commit_batch, "batch-full"),
+                      (target - self.server.t, "close")]
             if eval_every:
-                cap = min(cap, eval_every - self.server.t % eval_every)
+                limits.append((eval_every - self.server.t % eval_every,
+                               "eval"))
             if ckpt_every:
-                cap = min(cap, ckpt_every - self.server.t % ckpt_every)
+                limits.append((ckpt_every - self.server.t % ckpt_every,
+                               "ckpt"))
+            cap, flush_reason = min(limits, key=lambda kv: kv[0])
             events = self._events.pop_batch(cap)
             time = events[0][0]
             if budget is not None and budget.over_time(time):
@@ -887,7 +911,8 @@ class EngineBase:
             if len(ready) == 1:
                 self._commit(ready[0], self._obtain(ready[0]))
             else:
-                self._commit_batch([(w, self._obtain(w)) for w in ready])
+                self._commit_batch([(w, self._obtain(w)) for w in ready],
+                                   reason=flush_reason)
             self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
             if budget is not None and budget.over_tokens(self.history.tokens):
                 break   # token budget reached at this commit

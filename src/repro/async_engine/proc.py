@@ -24,7 +24,10 @@ followed by a pickled tuple ``(tag, ...)``:
                     ("msg", Envelope)             credited data frame
                     ("hb", Envelope)              uncredited heartbeat
                     ("ctrl", "stats", {...})      per-channel fault tally
-  parent -> child   ("assign", {wid, credit, cfg, faults, mode, ...})
+                    ("ctrl", "obs", {...})        low-rate span batch +
+                                                  wire/compute counters
+  parent -> child   ("assign", {wid, credit, cfg, faults, mode,
+                               t_parent, obs, ...})
                     ("reject", reason)            no rendezvous slot
                     ("task", RoundTask, clock)    dispatched round
                     ("ack", Ack)                  delivery receipt
@@ -120,11 +123,20 @@ class WorkerExit:
 # Frame I/O
 # ---------------------------------------------------------------------------
 
-def _send_frame(sock: socket.socket, lock: threading.Lock, obj: Any) -> None:
-    data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+def _send_frame(sock: socket.socket, lock: threading.Lock, obj: Any,
+                stats: Optional[Dict[str, Any]] = None) -> None:
+    if stats is None:
+        data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    else:
+        t0 = time.perf_counter()
+        data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        stats["ser_s"] += time.perf_counter() - t0
     hdr = _HDR.pack(len(data), zlib.crc32(data) & 0xFFFFFFFF)
     with lock:
         sock.sendall(hdr + data)
+        if stats is not None:
+            stats["frames_sent"] += 1
+            stats["bytes_sent"] += len(hdr) + len(data)
 
 
 def _read_exact(sock: socket.socket, n: int) -> bytes:
@@ -139,14 +151,34 @@ def _read_exact(sock: socket.socket, n: int) -> bytes:
     return b"".join(chunks)
 
 
-def _recv_frame(sock: socket.socket) -> Any:
+def _recv_frame(sock: socket.socket,
+                stats: Optional[Dict[str, Any]] = None) -> Any:
     length, crc = _HDR.unpack(_read_exact(sock, _HDR.size))
     if length > _MAX_FRAME:
         raise WireError(f"frame length {length} exceeds cap")
     data = _read_exact(sock, length)
     if zlib.crc32(data) & 0xFFFFFFFF != crc:
+        if stats is not None:
+            stats["crc_rejects"] += 1
         raise WireError("frame CRC mismatch on the wire")
-    return pickle.loads(data)
+    if stats is None:
+        return pickle.loads(data)
+    t0 = time.perf_counter()
+    obj = pickle.loads(data)
+    stats["deser_s"] += time.perf_counter() - t0
+    stats["frames_recv"] += 1
+    stats["bytes_recv"] += _HDR.size + length
+    return obj
+
+
+def _new_wire_stats() -> Dict[str, Any]:
+    """Per-connection wire counters (the transport-metrics vocabulary of
+    ``repro.telemetry.schema.TransportMetrics``, minus the compute
+    fields). Updated under the send lock / by the single reader thread,
+    so plain dict math is race-free."""
+    return {"frames_sent": 0, "frames_recv": 0, "bytes_sent": 0,
+            "bytes_recv": 0, "ser_s": 0.0, "deser_s": 0.0,
+            "crc_rejects": 0, "credit_wait_s": 0.0}
 
 
 # ---------------------------------------------------------------------------
@@ -435,6 +467,12 @@ class SocketClient:
         self._credits = 0
         self.closed = False
         self.assign: Dict[str, Any] = {}
+        #: cumulative wire counters (frames/bytes/ser/deser/crc/credit)
+        self.wire: Dict[str, Any] = _new_wire_stats()
+        #: child->parent perf_counter offset estimated at rendezvous
+        #: (parent_time ~= child_time + clock_offset); 0.0 when the
+        #: assign reply carried no parent timestamp (standalone mode)
+        self.clock_offset = 0.0
         self.on_ack: Optional[Callable[[Any], None]] = None
         self.on_task: Optional[Callable[[Any, Any], None]] = None
         self.on_stop: Optional[Callable[[], None]] = None
@@ -453,8 +491,16 @@ class SocketClient:
             sock = socket.create_connection(tuple(target), timeout=timeout)
         client = cls(sock)
         try:
-            _send_frame(sock, client._send_lock, ("join", dict(join_info)))
-            frame = _recv_frame(sock)
+            # the join->assign round trip doubles as the clock-offset
+            # probe: the parent stamps its perf_counter into the assign
+            # payload, and the midpoint of [t0, t1] estimates when that
+            # stamp was taken on the child's clock (docs/observability.md,
+            # "Cross-process collection")
+            t0 = time.perf_counter()
+            _send_frame(sock, client._send_lock, ("join", dict(join_info)),
+                        client.wire)
+            frame = _recv_frame(sock, client.wire)
+            t1 = time.perf_counter()
         except (EOFError, OSError, WireError) as e:
             sock.close()
             raise RendezvousRejected(f"rendezvous failed: {e!r}") from e
@@ -467,6 +513,9 @@ class SocketClient:
         sock.settimeout(None)
         client.assign = frame[1]
         client._credits = int(client.assign.get("credit", 8))
+        t_parent = client.assign.get("t_parent")
+        if t_parent is not None:
+            client.clock_offset = float(t_parent) - (t0 + t1) / 2.0
         return client
 
     def start(self):
@@ -478,7 +527,7 @@ class SocketClient:
     def _read_loop(self):
         try:
             while True:
-                frame = _recv_frame(self._sock)
+                frame = _recv_frame(self._sock, self.wire)
                 tag = frame[0]
                 if tag == "credit":
                     with self._cond:
@@ -508,12 +557,17 @@ class SocketClient:
         if isinstance(msg, Envelope):
             msg = _host_envelope(msg)
         deadline = None if timeout is None else time.monotonic() + timeout
+        t_wait = time.perf_counter()
         with self._cond:
             while True:
                 if self.closed:
                     raise TransportClosed("send on closed transport")
                 if self._credits > 0:
                     self._credits -= 1
+                    # stall time spent parked on the credit window (the
+                    # flow-control backpressure the panels surface)
+                    self.wire["credit_wait_s"] += (time.perf_counter()
+                                                   - t_wait)
                     break
                 if deadline is None:
                     self._cond.wait()
@@ -525,7 +579,8 @@ class SocketClient:
                             f"exhausted)")
                     self._cond.wait(rest)
         try:
-            _send_frame(self._sock, self._send_lock, ("msg", msg))
+            _send_frame(self._sock, self._send_lock, ("msg", msg),
+                        self.wire)
         except (OSError, ValueError) as e:
             raise TransportClosed(f"send failed: {e!r}") from e
 
@@ -534,12 +589,13 @@ class SocketClient:
         if self.closed:
             raise TransportClosed("heartbeat on closed transport")
         try:
-            _send_frame(self._sock, self._send_lock, ("hb", env))
+            _send_frame(self._sock, self._send_lock, ("hb", env), self.wire)
         except (OSError, ValueError) as e:
             raise TransportClosed(f"heartbeat failed: {e!r}") from e
 
     def send_ctrl(self, tag: str, obj: Any) -> None:
-        _send_frame(self._sock, self._send_lock, ("ctrl", tag, obj))
+        _send_frame(self._sock, self._send_lock, ("ctrl", tag, obj),
+                    self.wire)
 
     def close(self):
         with self._cond:
@@ -594,11 +650,23 @@ class WorkerProcessPool:
     def __init__(self, run_cfg, *, capacity: int = 8, faults=None,
                  mode: str = "deterministic", pace_scale: float = 0.0,
                  hb_sink: Optional[Transport] = None,
-                 family: Optional[str] = None):
+                 family: Optional[str] = None,
+                 obs: bool = False, obs_every: int = 4):
         self.run_cfg = run_cfg
         self.faults = faults
         self.mode = mode
         self.pace_scale = pace_scale
+        #: cross-process observability: when set, children run their own
+        #: SpanTracer + wire counters and ship ("ctrl","obs",...) frames
+        #: every ``obs_every`` rounds and at graceful stop
+        self.obs = bool(obs)
+        self.obs_every = max(1, int(obs_every))
+        #: parent hook receiving each child obs payload (runtime-owned)
+        self.on_obs: Optional[Callable[[Dict], None]] = None
+        #: wid -> number of obs reports received (any incarnation)
+        self.obs_reports: Dict[int, int] = {}
+        #: wids whose graceful final obs report arrived
+        self.obs_final: set = set()
         self.transport = SocketTransport(capacity=capacity, family=family,
                                          hb_sink=hb_sink)
         self.transport.on_join = self._on_join
@@ -630,9 +698,13 @@ class WorkerProcessPool:
             wid, inc = ent
             conn.wid, conn.incarnation = wid, inc
             self._conns[wid] = conn
+        # t_parent lets the child estimate its clock offset against the
+        # parent's perf_counter (midpoint of the join->assign round trip)
         return {"wid": wid, "credit": self.transport.capacity,
                 "cfg": self.run_cfg, "faults": self.faults,
-                "mode": self.mode, "pace_scale": self.pace_scale}
+                "mode": self.mode, "pace_scale": self.pace_scale,
+                "t_parent": time.perf_counter(),
+                "obs": self.obs, "obs_every": self.obs_every}
 
     def _on_ready(self, conn: _Conn):
         ev = self._ready.get((conn.wid, conn.incarnation))
@@ -650,6 +722,17 @@ class WorkerProcessPool:
         self.transport.push_local(WorkerExit(conn.wid, conn.incarnation))
 
     def _on_control(self, conn: _Conn, tag: str, obj: Any):
+        if tag == "obs" and isinstance(obj, dict):
+            wid = obj.get("wid", conn.wid)
+            with self._lock:
+                if wid is not None:
+                    self.obs_reports[wid] = self.obs_reports.get(wid, 0) + 1
+                    if obj.get("final"):
+                        self.obs_final.add(wid)
+            hook = self.on_obs
+            if hook is not None:
+                hook(obj)
+            return
         if tag != "stats" or not isinstance(obj, dict):
             return
         with self._lock:
@@ -843,6 +926,37 @@ def _worker_main(address: Tuple[str, Any], nonce: str) -> None:
     client.on_disconnect = on_disconnect
     client.start()
 
+    # cross-process observability (docs/observability.md): when the
+    # assign payload enables it, this child runs its own SpanTracer and
+    # ships incremental span batches + cumulative wire counters to the
+    # parent as low-rate ("ctrl", "obs", ...) frames every obs_every
+    # rounds and once more (final=True) at graceful stop. Times stay in
+    # this process's clock; the parent re-bases them via epoch_offset =
+    # child_epoch + clock_offset (estimated at rendezvous).
+    obs_on = bool(assign.get("obs"))
+    obs_every = max(1, int(assign.get("obs_every", 4)))
+    tracer = None
+    compute = {"rounds": 0, "compute_s": 0.0}
+    if obs_on:
+        from repro.obs.spans import SpanTracer
+        tracer = SpanTracer()
+
+    def _ship_obs(final: bool = False) -> None:
+        if not obs_on:
+            return
+        payload = {
+            "wid": wid, "pid": os.getpid(), "final": bool(final),
+            "offset": client.clock_offset,
+            "metrics": {**client.wire, "retries": retries["n"],
+                        **compute},
+            "epoch_offset": tracer._epoch + client.clock_offset,
+            "spans": tracer.export_new(),
+        }
+        try:
+            client.send_ctrl("obs", payload)
+        except (OSError, TransportClosed):
+            pass
+
     data_tx: Transport = _ChildChannel(client, "data")
     hb_tx: Transport = _ChildChannel(client, "hb")
     if faults is not None:
@@ -850,7 +964,7 @@ def _worker_main(address: Tuple[str, Any], nonce: str) -> None:
         hb_tx = FaultyTransport(hb_tx, faults, stream=1, clock=vnow)
     retries = {"n": 0}
     sender = ReliableSender(
-        data_tx, spec=faults,
+        data_tx, spec=faults, tracer=tracer,
         on_retry=lambda env, att: retries.__setitem__("n",
                                                       retries["n"] + 1))
 
@@ -882,10 +996,13 @@ def _worker_main(address: Tuple[str, Any], nonce: str) -> None:
         t0 = time.monotonic()
         try:
             out: Any = execute_round(task, model=model, cfg=cfg,
-                                     specs=specs, layout=layout)
+                                     specs=specs, layout=layout,
+                                     tracer=tracer)
         except Exception as e:                           # noqa: BLE001
             out = RoundError(task.wid, task.generation, task.round_seq,
                              repr(e))
+        compute["rounds"] += 1
+        compute["compute_s"] += time.monotonic() - t0
         if task.sleep_per_step > 0 and not isinstance(out, RoundError):
             rest = (task.h_steps * task.sleep_per_step
                     - (time.monotonic() - t0))
@@ -901,7 +1018,10 @@ def _worker_main(address: Tuple[str, Any], nonce: str) -> None:
                            crc=payload_crc(out))
         if not sender.send(env, waiter):
             break                                # channel torn down
+        if compute["rounds"] % obs_every == 0:
+            _ship_obs()
     hb_stop.set()
+    _ship_obs(final=True)
     stats: Dict[str, Dict[str, int]] = {
         "protocol": {"retries": retries["n"]}}
     if isinstance(data_tx, FaultyTransport):

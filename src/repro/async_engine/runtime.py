@@ -147,6 +147,12 @@ class ConcurrentRuntime(EngineBase):
         self._channel_counters: Dict[str, Dict[str, int]] = {}
         self._own_transport = transport is None
         self._free_t0: Optional[float] = None
+        # cross-process observability: child obs frames arrive on pool
+        # reader threads, so merging into the tracer/telemetry is
+        # lock-guarded; _child_wire keeps the latest CUMULATIVE counter
+        # snapshot per (wid, pid) incarnation
+        self._obs_lock = threading.Lock()
+        self._child_wire: Dict[Tuple[int, int], Dict[str, Any]] = {}
         if self.transport_kind == "socket":
             # heartbeat sink first: the pool routes child beacons into it
             self._hb_channel: Transport = self._heartbeat_channel()
@@ -207,7 +213,9 @@ class ConcurrentRuntime(EngineBase):
             self._pool = WorkerProcessPool(
                 self.cfg, capacity=self._capacity, faults=self.faults,
                 mode=self.mode, pace_scale=self.pace_scale,
-                hb_sink=self._hb_channel)
+                hb_sink=self._hb_channel,
+                obs=(self.tracer.enabled or self.telemetry is not None))
+            self._pool.on_obs = self._on_obs
             return self._pool.transport
         inner = InProcTransport(self._capacity)
         return self._wrap(inner, stream=0) if self.faults else inner
@@ -585,6 +593,18 @@ class ConcurrentRuntime(EngineBase):
         self.stats["arrivals"] += 1
         return rec
 
+    def _commit_batch(self, pairs, reason: str = "batch-full"):
+        with self._comp_lock:
+            overlap = self._computing
+        t0 = time.monotonic()
+        recs = super()._commit_batch(pairs, reason=reason)
+        jax.block_until_ready(self.server._pbuf if self.server.packed
+                              else jax.tree.leaves(self.server.state.params))
+        self.stats["server_busy_seconds"] += time.monotonic() - t0
+        self.stats["overlap_samples"].append(overlap)
+        self.stats["arrivals"] += len(pairs)
+        return recs
+
     def _crash_worker(self, w: Worker):
         if w.pending_task_id is not None:               # drop a parked result
             self._results.pop(w.pending_task_id, None)
@@ -650,6 +670,84 @@ class ConcurrentRuntime(EngineBase):
                 else:
                     self._fault_accum[k] = self._fault_accum.get(k, 0) + v
         self._pool.child_counters.clear()
+
+    # ------------------------------------------- cross-process observability
+    def _on_obs(self, payload: Dict) -> None:
+        """One child ("ctrl", "obs", ...) frame: merge the span batch into
+        the parent tracer as a per-pid process row and emit a cumulative
+        "transport" telemetry record. Runs on a pool reader thread —
+        everything shared is taken under ``_obs_lock``. Observation only:
+        never touches the engine/jax state."""
+        try:
+            wid = int(payload["wid"])
+            pid = int(payload["pid"])
+        except (KeyError, TypeError, ValueError):
+            return                       # malformed frame: drop, never raise
+        metrics = payload.get("metrics") or {}
+        final = bool(payload.get("final"))
+        offset = float(payload.get("offset", 0.0))
+        with self._obs_lock:
+            self._child_wire[(wid, pid)] = dict(metrics, final=final,
+                                                clock_offset_s=offset)
+            if self.tracer.enabled and payload.get("spans") is not None:
+                spans = payload["spans"]
+                self.tracer.ingest_remote(
+                    pid=pid,
+                    epoch_offset=float(payload.get("epoch_offset", 0.0)),
+                    events=spans.get("events", []),
+                    names=spans.get("names", {}),
+                    process_name=f"heloco-worker-{wid} (pid {pid})")
+            if self.telemetry is not None:
+                self.telemetry.record_transport(
+                    wid=wid, pid=pid,
+                    frames_sent=int(metrics.get("frames_sent", 0)),
+                    frames_recv=int(metrics.get("frames_recv", 0)),
+                    bytes_sent=int(metrics.get("bytes_sent", 0)),
+                    bytes_recv=int(metrics.get("bytes_recv", 0)),
+                    ser_s=float(metrics.get("ser_s", 0.0)),
+                    deser_s=float(metrics.get("deser_s", 0.0)),
+                    crc_rejects=int(metrics.get("crc_rejects", 0)),
+                    retries=int(metrics.get("retries", 0)),
+                    credit_wait_s=float(metrics.get("credit_wait_s", 0.0)),
+                    rounds=int(metrics.get("rounds", 0)),
+                    compute_s=float(metrics.get("compute_s", 0.0)),
+                    clock_offset_s=offset, final=final)
+
+    def child_obs_report(self) -> Dict[str, Any]:
+        """What the worker processes reported in: per-wid obs frame
+        counts, which wids closed with a final report, and the summed
+        latest-cumulative wire counters across all (wid, pid)
+        incarnations. Empty when not on the socket transport."""
+        if self._pool is None:
+            return {"reports": {}, "final": [], "wire": {}}
+        with self._obs_lock:
+            wire: Dict[str, float] = {}
+            for snap in self._child_wire.values():
+                for k, v in snap.items():
+                    if isinstance(v, (int, float)) and not isinstance(v, bool):
+                        wire[k] = wire.get(k, 0) + v
+        return {"reports": dict(self._pool.obs_reports),
+                "final": sorted(self._pool.obs_final),
+                "wire": wire}
+
+    def assert_child_reports(self) -> None:
+        """Loud check that every worker process the run dispatched to
+        actually shipped observability frames back (satellite of the
+        --trace/--stats-json/--telemetry launcher contract): a silent
+        child means the collection path is broken, not that the run was
+        quiet. Only meaningful on the socket transport with obs on."""
+        if self._pool is None or not self._pool.obs:
+            return
+        dispatched = set(self._pool.obs_reports)
+        silent = sorted(w for w in self._last_task
+                        if w not in dispatched)
+        if silent:
+            raise RuntimeError(
+                f"cross-process observability enabled but worker(s) "
+                f"{silent} never reported in over the obs control "
+                f"channel (reports: {dict(self._pool.obs_reports)}) — "
+                f"child-side collection is broken or the processes died "
+                f"before their first report")
 
     def shutdown(self):
         """Tear down worker threads/processes. Idempotent; ``run``/
@@ -808,14 +906,43 @@ class ConcurrentRuntime(EngineBase):
             self.time = vnow()
             if budget is not None and budget.over_time(self.time):
                 break                   # arrived past the horizon: drop it
-            self._commit(w, msg)
+            # with commit_batch > 1, drain whatever else already landed
+            # (non-blocking) and coalesce into one fused flush — same
+            # labelled cap discipline as the deterministic loop, so a
+            # batch never overshoots an eval/ckpt/close boundary. With
+            # commit_batch == 1 the cap is 1 and this is exactly the old
+            # single-commit path.
+            limits = [(self.server.commit_batch, "batch-full"),
+                      (target - self.server.t, "close")]
+            if eval_every:
+                limits.append(
+                    (eval_every - self.server.t % eval_every, "eval"))
+            if ckpt_every:
+                limits.append(
+                    (ckpt_every - self.server.t % ckpt_every, "ckpt"))
+            cap, flush_reason = min(limits, key=lambda kv: kv[0])
+            batch: List[Tuple[Worker, RoundResult]] = [(w, msg)]
+            while len(batch) < cap:
+                try:
+                    extra = self._recv_result(timeout=0.001)
+                except TransportTimeout:
+                    break               # queue drained: commit what we have
+                if (not self._is_current(extra)
+                        or not self.workers[extra.wid].alive):
+                    continue
+                batch.append((self.workers[extra.wid], extra))
+            if len(batch) == 1:
+                self._commit(w, msg)
+            else:
+                self._commit_batch(batch, reason=flush_reason)
             self._post_commit(eval_every, eval_fn, ckpt_every, ckpt_dir)
             if budget is not None and budget.over_tokens(self.history.tokens):
                 break
             if self.server.t < target:
                 process_events(vnow())
-                if w.alive:
-                    self._dispatch(w)
+                for bw, _ in batch:
+                    if bw.alive:
+                        self._dispatch(bw)
         self.time = vnow()
         return self._finalize(eval_fn)
 
@@ -894,4 +1021,7 @@ class ConcurrentRuntime(EngineBase):
             "transport": self.transport_kind,
             "proc_exits": self._proc_counters["proc_exits"],
             "proc_restarts": self._proc_counters["proc_restarts"],
+            # cross-process collection (socket + obs only; else empty)
+            "child_obs": self.child_obs_report(),
+            "flush": dict(getattr(self.server, "flush_totals", {})),
         }

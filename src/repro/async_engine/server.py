@@ -101,6 +101,13 @@ class Synchronizer:
         self.commit_batch = max(1, int(commit_batch))
         self._pending: List[_Pending] = []
         self._pending_keys: set = set()
+        # flush observability (docs/observability.md): one event dict per
+        # flush() — buffered depth, why it fired, how many commits went
+        # fused vs sequential. The engine drains this into "flush"
+        # telemetry records; cumulative totals feed stats_summary.
+        self.flush_log: List[dict] = []
+        self.flush_totals: dict = {"flushes": 0, "fused": 0,
+                                   "sequential": 0, "depth_max": 0}
         self._apply_multi: dict = {}      # K -> jitted batched apply
         # Coefficient-scalar table: each distinct host scalar (rho, tau,
         # phase) is put on device ONCE and re-indexed by value afterwards,
@@ -462,21 +469,24 @@ class Synchronizer:
         self._pending.append(_Pending(delta, s_i, worker_id, sim_time,
                                       lang, commit_key))
         if len(self._pending) >= self.commit_batch:
-            return self.flush()
+            return self.flush("batch-full")
         return None
 
-    def flush(self) -> List[ArrivalRecord]:
+    def flush(self, reason: str = "batch-full") -> List[ArrivalRecord]:
         """Commit every buffered arrival, in buffering order, and return
         their records. Runs of consecutive batchable non-dropped arrivals
         commit through ONE fused multi-apply; dropped arrivals (App. A.6),
         singletons, non-batchable methods, and the per-leaf reference path
         all fall back to the exact sequential on_arrival — so a batch of
-        size 1 is byte-identical to the unbatched server."""
+        size 1 is byte-identical to the unbatched server. ``reason``
+        records why the buffer emptied (batch-full | eval | ckpt | close)
+        in the flush event log — observation only."""
         pending, self._pending = self._pending, []
         self._pending_keys = set()
         if not pending:
             return []
         n = len(pending)
+        n_fused = 0
         batchable = self.packed and self.method.batchable
         # Staleness at commit time is knowable up front: every commit
         # (applied or dropped) advances t by exactly one, so arrival j
@@ -522,7 +532,16 @@ class Synchronizer:
                 if a.commit_key is not None:
                     self._committed[a.commit_key] = rec
                 recs.append(rec)
+            n_fused += len(run)
             i = j
+        ev = {"depth": n, "reason": str(reason), "fused": n_fused,
+              "sequential": n - n_fused}
+        self.flush_log.append(ev)
+        self.flush_totals["flushes"] += 1
+        self.flush_totals["fused"] += n_fused
+        self.flush_totals["sequential"] += n - n_fused
+        self.flush_totals["depth_max"] = max(self.flush_totals["depth_max"],
+                                             n)
         return recs
 
     # -- sync round (barrier) -------------------------------------------------

@@ -69,6 +69,7 @@ def scenario_from_args(args) -> Scenario:
         compression=args.compression,
         drop_stale_after=args.drop_stale_after,
         inner_lr=args.inner_lr, seed=args.seed,
+        commit_batch=getattr(args, "commit_batch", 1),
         faults=(_chaos_faults(args.seed)
                 if getattr(args, "chaos", False) else None))
 
@@ -141,6 +142,11 @@ def main():
                     help="exchange topology: hub-and-spoke server, or "
                          "decentralized NoLoCo-style ring/gossip peer "
                          "averaging (async methods only)")
+    ap.add_argument("--commit-batch", type=int, default=1,
+                    help="server commit-buffer size (docs/scale.md): >1 "
+                         "coalesces up to K arrivals into one fused "
+                         "flush; flush depth/reason telemetry lands in "
+                         "the stream's 'flush' records")
     ap.add_argument("--free", action="store_true",
                     help="wallclock engine: free-running arrival order "
                          "instead of the deterministic simulator schedule")
@@ -170,6 +176,8 @@ def main():
         scn = registry.get_scenario(args.scenario)
         if args.transport != "inproc" and scn.engine == "wallclock":
             scn = scn.overridden(transport=args.transport)
+        if args.commit_batch > 1:
+            scn = scn.overridden(commit_batch=args.commit_batch)
         print(f"scenario {scn.name}: {scn.description}")
     else:
         scn = scenario_from_args(args)
@@ -209,6 +217,14 @@ def main():
     print(f"done: arrivals={len(hist.arrivals)} tokens={hist.tokens} "
           f"mean_staleness={sum(taus) / len(taus):.2f} "
           f"comm={hist.comm_bytes / 1e6:.1f}MB")
+    # cross-process collection contract: on the socket transport with any
+    # observability output requested, a worker process that never shipped
+    # an obs frame means the collection path is broken — fail loudly
+    # instead of writing a parent-only trace/stats/stream (satellite of
+    # docs/observability.md, "Cross-process collection")
+    if ((args.trace or args.stats_json or args.telemetry)
+            and hasattr(eng, "assert_child_reports")):
+        eng.assert_child_reports()
     if hasattr(eng, "stats_summary"):
         s = eng.stats_summary()
         print(f"runtime[{s['mode']}]: {s['arrivals_per_sec']:.2f} arrivals/s "

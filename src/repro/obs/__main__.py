@@ -3,6 +3,9 @@
 Subcommands:
 
   console <stream.jsonl> [--once|--interval S]   live operator console
+  web <stream.jsonl> [--port N|--snapshot]       web dashboard (stdlib
+                                                 http.server + SSE) or
+                                                 headless panels JSON
   trace --validate <trace.json>                  trace-event JSON check
   record <scenario> --out <stream.jsonl>         run a scenario with a
                                                  live telemetry sink
@@ -10,8 +13,8 @@ Subcommands:
                                                  committed golden
                                                  streams)
 
-``console`` and ``trace`` are pure-Python (no jax import); ``record``
-lazily pulls in the engine stack.
+``console``, ``web``, and ``trace`` are pure-Python (no jax import);
+``record`` lazily pulls in the engine stack.
 """
 from __future__ import annotations
 
@@ -75,6 +78,14 @@ def _record_main(argv: List[str]) -> int:
                          "(default 1; 0 = off)")
     ap.add_argument("--trace", default=None,
                     help="also export a Chrome trace to this path")
+    ap.add_argument("--transport", default=None,
+                    help="override the scenario's wallclock backend "
+                         "(e.g. socket: exercises the cross-process "
+                         "collection path, so the stream gains "
+                         "'transport' records)")
+    ap.add_argument("--commit-batch", type=int, default=None,
+                    help="override the scenario's commit-buffer size "
+                         "(>1 makes the stream carry 'flush' records)")
     args = ap.parse_args(argv)
 
     # heavy imports only on this path
@@ -85,6 +96,13 @@ def _record_main(argv: List[str]) -> int:
     from repro.telemetry import TelemetryRecorder
 
     scn = get_scenario(args.scenario)
+    over = {}
+    if args.transport is not None:
+        over["transport"] = args.transport
+    if args.commit_batch is not None:
+        over["commit_batch"] = args.commit_batch
+    if over:
+        scn = scn.overridden(**over)
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
@@ -94,6 +112,10 @@ def _record_main(argv: List[str]) -> int:
                       runtime_record_every=args.runtime_every)
     eng.run(eval_every=scn.eval_cadence,
             eval_fn=make_eval_fn(eng, batch=scn.eval_batch))
+    # socket transport: fail loudly if any child never reported in over
+    # the obs control channel (the collection path must not rot quietly)
+    if hasattr(eng, "assert_child_reports"):
+        eng.assert_child_reports()
     rec.close()
     print(f"wrote {args.out} ({len(rec)} records in final window)")
     if tracer is not None:
@@ -111,6 +133,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if cmd == "console":
         from repro.obs.console import main as console_main
         return console_main(rest)
+    if cmd == "web":
+        from repro.obs.web import main as web_main
+        return web_main(rest)
     if cmd == "trace":
         return _trace_main(rest)
     if cmd == "record":

@@ -14,7 +14,16 @@ the paper's Section-5 quantities as they evolve:
     the fault records);
   - the runtime health panel (occupancy, compute parallelism, queue
     depth — the ``runtime`` record kind) and the chaos/delivery counters
-    of docs/faults.md.
+    of docs/faults.md;
+  - per-worker-process transport counters (frames/bytes each way,
+    serialize/deserialize time, credit-wait stall, per-round compute —
+    the ``transport`` record kind shipped over the socket control
+    channel) and commit-buffer flush stats (depth, reason,
+    fused-vs-sequential — the ``flush`` record kind).
+
+Aggregation lives in ``repro.obs.metrics.MetricsAggregator`` — the web
+dashboard (``repro.obs.web``) and headless snapshots read the exact same
+rollup; this module only renders it as ANSI text.
 
 Rendering is plain ANSI (sparklines are unicode blocks, colors optional
 and off for non-TTYs), so it works over ssh and in CI logs. ``--once``
@@ -33,11 +42,10 @@ import argparse
 import os
 import sys
 import time
-from collections import Counter, deque
-from typing import Dict, List, Optional
+from typing import List, Optional
 
+from repro.obs.metrics import MetricsAggregator
 from repro.obs.tail import TailReader, read_complete_lines
-from repro.telemetry import schema
 
 SPARK_BLOCKS = "▁▂▃▄▅▆▇█"
 
@@ -60,91 +68,13 @@ def hbar(n: float, n_max: float, width: int = 28) -> str:
     return "█" * max(full, 1 if n > 0 else 0)
 
 
-class ConsoleState:
-    """Streaming aggregator: feed lines (or records), read panels."""
+class ConsoleState(MetricsAggregator):
+    """Streaming aggregator: feed lines (or records), read panels.
 
-    def __init__(self, window: int = 256, strict: bool = False):
-        self.decoder = schema.StreamDecoder(strict=strict)
-        self.window = window
-        self.meta: Optional[schema.RunMeta] = None
-        # arrivals
-        self.n_arrivals = 0
-        self.n_dropped = 0
-        self.tokens_total = 0
-        self.outer_step = 0
-        self.last_wall = 0.0
-        self.staleness: Counter = Counter()
-        self.cos = deque(maxlen=window)
-        self.corr = deque(maxlen=window)
-        self.recent_wall = deque(maxlen=window)   # commit stamps, for rate
-        # per-worker view
-        self.workers: Dict[int, Dict] = {}
-        # evals / faults / runtime
-        self.last_eval: Optional[schema.EvalMetrics] = None
-        self.fault_counts: Counter = Counter()
-        self.delivery: Dict[str, float] = {}
-        self.last_runtime: Optional[schema.RuntimeMetrics] = None
-
-    # ------------------------------------------------------------ ingestion
-    def add_line(self, line: str) -> None:
-        rec = self.decoder.decode(line)
-        if rec is not None:
-            self.add(rec)
-
-    def _worker(self, wid: int) -> Dict:
-        return self.workers.setdefault(
-            wid, {"arrivals": 0, "last_step": None, "last_wall": None,
-                  "state": "alive"})
-
-    def add(self, rec: schema.Record) -> None:
-        if isinstance(rec, schema.RunMeta):
-            self.meta = rec
-        elif isinstance(rec, schema.ArrivalMetrics):
-            self.n_arrivals += 1
-            self.n_dropped += bool(rec.dropped)
-            self.tokens_total = max(self.tokens_total, rec.tokens_total)
-            self.outer_step = max(self.outer_step, rec.outer_step)
-            self.last_wall = max(self.last_wall, rec.wall_time)
-            self.staleness[rec.staleness] += 1
-            if rec.cos_align is not None and not rec.dropped:
-                self.cos.append(rec.cos_align)
-                self.corr.append(rec.corrected_frac or 0.0)
-            self.recent_wall.append(rec.wall_time)
-            w = self._worker(rec.worker_id)
-            w["arrivals"] += 1
-            w["last_step"] = rec.outer_step
-            w["last_wall"] = rec.wall_time
-            if w["state"] == "dead":          # an arrival proves liveness
-                w["state"] = "alive"
-        elif isinstance(rec, schema.EvalMetrics):
-            self.last_eval = rec
-            self.last_wall = max(self.last_wall, rec.wall_time)
-        elif isinstance(rec, schema.FaultMetrics):
-            self.fault_counts[rec.event] += 1
-            self.last_wall = max(self.last_wall, rec.wall_time)
-            if rec.event == "liveness_dead" and rec.wid >= 0:
-                self._worker(rec.wid)["state"] = "dead"
-            elif rec.event == "liveness_revive" and rec.wid >= 0:
-                self._worker(rec.wid)["state"] = "alive"
-            elif rec.event == "quarantine" and rec.wid >= 0:
-                self._worker(rec.wid)["state"] = "quarantined"
-            elif rec.event == "summary" and rec.detail:
-                for k, v in rec.detail.items():
-                    self.delivery[k] = max(self.delivery.get(k, 0.0), v)
-        elif isinstance(rec, schema.RuntimeMetrics):
-            self.last_runtime = rec
-            self.last_wall = max(self.last_wall, rec.wall_time)
-            for k, v in rec.delivery.items():
-                self.delivery[k] = max(self.delivery.get(k, 0.0), v)
-
-    # -------------------------------------------------------------- derived
-    def arrival_rate(self) -> float:
-        """Commits/sec over the recent window (stream wall-time stamps,
-        so replaying a recorded stream shows the recorded rate)."""
-        w = list(self.recent_wall)
-        if len(w) < 2 or w[-1] <= w[0]:
-            return 0.0
-        return (len(w) - 1) / (w[-1] - w[0])
+    All aggregation lives in ``repro.obs.metrics.MetricsAggregator`` —
+    the console, the web dashboard, and the headless JSON snapshot all
+    read the same numbers; this subclass only keeps the historical
+    console-facing name."""
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +202,44 @@ def render(state: ConsoleState, width: int = 78, color: bool = False
             live = " ".join(f"{k}={v}" for k, v
                             in sorted(rt.liveness.items()))
             L.append(f"{c.dim}liveness: {live}{c.off}")
+
+    # --------------------------------------------- cross-process transport
+    if state.transport:
+        L.append(_rule("transport (per worker process)", width, c))
+        for (wid, pid), t in sorted(state.transport.items()):
+            mark = "" if t.final else f" {c.yellow}(live){c.off}"
+            L.append(f"  w{wid:<3d} pid {pid:<7d} "
+                     f"tx {t.frames_sent}f/{t.bytes_sent:,}B "
+                     f"rx {t.frames_recv}f/{t.bytes_recv:,}B | "
+                     f"ser {t.ser_s * 1e3:.1f}ms "
+                     f"deser {t.deser_s * 1e3:.1f}ms | "
+                     f"stall {t.credit_wait_s * 1e3:.1f}ms | "
+                     f"rounds {t.rounds} "
+                     f"compute {t.compute_s:.2f}s{mark}")
+            if t.crc_rejects or t.retries:
+                L.append(f"       {c.yellow}crc_rejects={t.crc_rejects} "
+                         f"retries={t.retries}{c.off}")
+        tot = state.transport_totals()
+        L.append(f"{c.dim}total: tx {int(tot.get('frames_sent', 0))}f/"
+                 f"{int(tot.get('bytes_sent', 0)):,}B "
+                 f"rx {int(tot.get('frames_recv', 0))}f/"
+                 f"{int(tot.get('bytes_recv', 0)):,}B "
+                 f"compute {tot.get('compute_s', 0.0):.2f}s{c.off}")
+
+    # ------------------------------------------------- commit-buffer flush
+    if state.n_flushes:
+        L.append(_rule("commit-buffer flushes", width, c))
+        depths = list(state.flush_depths)
+        reasons = " ".join(f"{k}={v}" for k, v
+                           in sorted(state.flush_reasons.items()))
+        L.append(f"flushes {state.n_flushes} | depth mean "
+                 f"{sum(depths) / len(depths):.1f} max "
+                 f"{state.flush_depth_max} | fused {state.flush_fused} "
+                 f"sequential {state.flush_sequential}")
+        L.append(f"{c.dim}reasons: {reasons}{c.off}")
+        cw = min(width - 30, 48)
+        if len(depths) >= 2:
+            L.append(f"depth      {sparkline(depths, cw)}")
 
     # ---------------------------------------------------- chaos / delivery
     hot = {k: v for k, v in sorted(state.delivery.items()) if v}

@@ -117,6 +117,11 @@ class SpanTracer:
         # thread ident -> name, captured at record time (worker threads
         # are usually joined before export)
         self._names: Dict[int, str] = {}
+        # high-water mark for export_new (cross-process shipping)
+        self._exported = 0
+        # pid -> {"name", "epoch_offset", "events", "names"} merged rows
+        # from child processes (ingest_remote)
+        self._foreign: Dict[int, Dict[str, Any]] = {}
 
     # ------------------------------------------------------------ recording
     def span(self, name: str, cat: str = "engine", **args) -> _Span:
@@ -133,7 +138,45 @@ class SpanTracer:
                              ident, args or None))
 
     def __len__(self) -> int:
-        return len(self._events)
+        return len(self._events) + sum(len(f["events"])
+                                       for f in self._foreign.values())
+
+    # --------------------------------------------- cross-process shipping
+    def export_new(self) -> Dict[str, Any]:
+        """Child side: the events recorded since the last export, as a
+        picklable payload (list-of-lists + the thread-name map). Times
+        stay in the child's clock — the parent re-bases them at ingest
+        via the rendezvous ``epoch_offset`` (docs/observability.md,
+        "Cross-process collection"). Incremental: each call ships only
+        the new tail, so low-rate periodic frames stay small."""
+        n = len(self._events)
+        evs = [list(e) for e in self._events[self._exported:n]]
+        self._exported = n
+        return {"events": evs, "names": dict(self._names)}
+
+    def ingest_remote(self, *, pid: int, epoch_offset: float,
+                      events: List[list], names: Dict[int, str],
+                      process_name: Optional[str] = None) -> None:
+        """Parent side: merge a child's exported span batch as a
+        distinct process row. ``epoch_offset`` maps a child-relative
+        start time into the parent's ``perf_counter`` clock
+        (``child_epoch + clock_offset``, both estimated at rendezvous);
+        ``to_chrome`` then renders every process against the one parent
+        epoch so the Perfetto timeline lines up."""
+        entry = self._foreign.setdefault(
+            int(pid), {"name": process_name or f"heloco-proc-{pid}",
+                       "epoch_offset": float(epoch_offset),
+                       "events": [], "names": {}})
+        if process_name:
+            entry["name"] = process_name
+        entry["epoch_offset"] = float(epoch_offset)
+        entry["events"].extend(tuple(e) for e in events)
+        entry["names"].update({int(k): str(v) for k, v in names.items()})
+
+    @property
+    def pids(self) -> List[int]:
+        """Process rows the merged trace will contain (0 = this one)."""
+        return [0] + sorted(self._foreign)
 
     # -------------------------------------------------------------- export
     def to_chrome(self) -> Dict[str, Any]:
@@ -167,6 +210,32 @@ class SpanTracer:
                          "tid": tid,
                          "args": {"name": names.get(ident,
                                                     f"thread-{tid}")}})
+        # child-process rows: timestamps re-based into the parent epoch
+        # via each child's rendezvous-estimated epoch_offset; clamped at
+        # 0 so clock-estimate jitter can't render a negative ts
+        for pid in sorted(self._foreign):
+            entry = self._foreign[pid]
+            base = entry["epoch_offset"] - self._epoch
+            ctids: Dict[int, int] = {}
+            meta.append({"name": "process_name", "ph": "M", "pid": pid,
+                         "args": {"name": entry["name"]}})
+            for name, cat, ph, start, dur, ident, args in entry["events"]:
+                tid = ctids.setdefault(ident, len(ctids))
+                ev = {"name": name, "cat": cat or "engine", "ph": ph,
+                      "ts": round(max(0.0, start + base) * 1e6, 3),
+                      "pid": pid, "tid": tid}
+                if ph == "X":
+                    ev["dur"] = round(dur * 1e6, 3)
+                if ph == "i":
+                    ev["s"] = "t"
+                if args:
+                    ev["args"] = args
+                events.append(ev)
+            for ident, tid in sorted(ctids.items(), key=lambda kv: kv[1]):
+                meta.append({"name": "thread_name", "ph": "M", "pid": pid,
+                             "tid": tid,
+                             "args": {"name": entry["names"].get(
+                                 ident, f"thread-{tid}")}})
         return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
 
     def write(self, path: str) -> str:

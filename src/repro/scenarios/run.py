@@ -15,6 +15,10 @@ deterministic wall-clock engine and demands the identical trace;
 ``--transport socket`` reruns wallclock scenarios (and cross-engine
 replays) over the multi-process socket backend against the UNMODIFIED
 committed goldens — the backend must not change the trace.
+``--obs`` reruns with the full observability stack on (live-sink
+telemetry + span tracing + cross-process collection on socket) against
+the same goldens — observation must not change the trace either
+(docs/observability.md, byte-identity contract).
 """
 from __future__ import annotations
 
@@ -76,6 +80,12 @@ def main(argv=None) -> int:
             p.add_argument("--transport", choices=["socket"],
                            help="rerun over this wallclock backend against "
                                 "the unmodified committed goldens")
+            p.add_argument("--obs", action="store_true",
+                           help="rerun with the FULL observability stack "
+                                "on (live-sink telemetry + span tracing; "
+                                "cross-process collection on the socket "
+                                "transport) — observation must not "
+                                "perturb the golden trace")
             p.add_argument("--diff-dir", default="results/golden_diffs",
                            help="where failure diffs are written")
     args = ap.parse_args(argv)
@@ -127,7 +137,7 @@ def main(argv=None) -> int:
                 continue
             total += 1
             res = trace.verify(s, args.dir, cross_engine=cross,
-                               transport=tr)
+                               transport=tr, obs=args.obs)
             print(res.report())
             if not res.ok:
                 failed += 1

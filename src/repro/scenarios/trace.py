@@ -87,17 +87,27 @@ def param_fingerprint(params) -> Dict[str, List[float]]:
 # Running a scenario into a trace document
 # ---------------------------------------------------------------------------
 
-def run_trace(scn: Scenario, telemetry=None) -> Dict[str, Any]:
+def run_trace(scn: Scenario, telemetry=None,
+              tracer=None) -> Dict[str, Any]:
     """Execute the scenario and collect its full replayable trace.
 
     telemetry: optional ``repro.telemetry.TelemetryRecorder`` — the
     telemetry-on arrival path is contract-bound to be byte-identical, so
     a trace recorded with telemetry must verify against the committed
-    golden (asserted in tests/test_telemetry.py)."""
+    golden (asserted in tests/test_telemetry.py).
+    tracer: optional ``repro.obs.spans.SpanTracer`` — same contract for
+    span profiling; on the socket transport this also turns on the
+    cross-process collection path (child obs frames), which must not
+    perturb the trace either."""
     from repro.async_engine.engine import make_engine, make_eval_fn
-    eng = make_engine(scn, telemetry=telemetry)
+    eng = make_engine(scn, telemetry=telemetry, tracer=tracer)
     hist = eng.run(eval_every=scn.eval_cadence,
                    eval_fn=make_eval_fn(eng, batch=scn.eval_batch))
+    if ((telemetry is not None or tracer is not None)
+            and hasattr(eng, "assert_child_reports")):
+        # observability was requested over real worker processes: a child
+        # that never shipped an obs frame means silent collection rot
+        eng.assert_child_reports()
     arrivals = [[a["outer_step"], a["worker_id"],
                  a["outer_step"] - 1 - a["staleness"], a["staleness"],
                  a["lang"], a["rho"], a["sim_time"], bool(a["dropped"])]
@@ -269,7 +279,8 @@ def _verify_banded(fails: List[str], got: Dict, want: Dict,
 def verify(scn: Scenario, golden_dir: str = GOLDEN_DIR, *,
            cross_engine: bool = False,
            transport: Optional[str] = None,
-           fresh: Optional[Dict[str, Any]] = None) -> VerifyResult:
+           fresh: Optional[Dict[str, Any]] = None,
+           obs: bool = False) -> VerifyResult:
     """Re-run `scn` and compare against its committed golden trace.
 
     ``cross_engine=True`` (sim scenarios only) replays the scenario on the
@@ -280,12 +291,37 @@ def verify(scn: Scenario, golden_dir: str = GOLDEN_DIR, *,
     processes) — the golden's recorded spec is compared untouched, which
     is exactly the point: the backend must not change the trace.
     ``fresh`` injects a pre-computed trace document (testing hook).
+    ``obs=True`` runs the fresh replay with the FULL observability stack
+    on — live-sink telemetry, runtime records, span tracing (and, over
+    the socket transport, cross-process collection) — and demands the
+    same golden plus a well-formed Chrome trace: observation must never
+    perturb the run (docs/observability.md byte-identity contract).
     """
     path = golden_path(scn.name, golden_dir)
     tags = ("[cross-engine wallclock]" if cross_engine else "",
-            f"[transport={transport}]" if transport else "")
+            f"[transport={transport}]" if transport else "",
+            "[obs]" if obs else "")
     res = VerifyResult(name=" ".join(x for x in (scn.name,) + tags if x),
                        ok=True)
+
+    def _run(run_scn: Scenario) -> Dict[str, Any]:
+        if not obs:
+            return run_trace(run_scn)
+        import tempfile
+        from repro.obs.spans import SpanTracer, validate_chrome_trace
+        from repro.telemetry import TelemetryRecorder
+        tr = SpanTracer()
+        with tempfile.TemporaryDirectory() as td:
+            rec = TelemetryRecorder(sink=os.path.join(td, "live.jsonl"))
+            try:
+                got = run_trace(run_scn, telemetry=rec, tracer=tr)
+            finally:
+                rec.close()
+        for p in validate_chrome_trace(tr.to_chrome())[:4]:
+            res.failures.append(f"obs trace invalid: {p}")
+        if len(tr) == 0:
+            res.failures.append("obs stack produced no trace spans")
+        return got
     if not os.path.exists(path):
         res.ok = False
         res.failures.append(f"missing golden trace {path} "
@@ -313,7 +349,7 @@ def verify(scn: Scenario, golden_dir: str = GOLDEN_DIR, *,
             return res
         replay = scn.overridden(engine="wallclock", mode="deterministic",
                                 transport=transport or scn.transport)
-        got = fresh or run_trace(replay)
+        got = fresh or _run(replay)
         _cmp_arrivals(res.failures, got["arrivals"], want["arrivals"])
         _cmp_evals(res.failures, got["evals"], want["evals"], _close_f32)
         for key in ("tokens", "comm_bytes"):
@@ -333,7 +369,7 @@ def verify(scn: Scenario, golden_dir: str = GOLDEN_DIR, *,
                     "runtime feature)")
                 return res
             run_scn = scn.overridden(transport=transport)
-        got = fresh or run_trace(run_scn)
+        got = fresh or _run(run_scn)
         if scn.exact:
             _verify_exact(res.failures, got, want)
         else:

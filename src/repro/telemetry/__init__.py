@@ -21,8 +21,9 @@ from repro.telemetry.recorder import (          # noqa: F401
     DEFAULT_WINDOW, TelemetryRecorder, iter_jsonl,
 )
 from repro.telemetry.schema import (            # noqa: F401
-    SCHEMA_VERSION, ArrivalMetrics, EvalMetrics, FaultMetrics, RunMeta,
-    RuntimeMetrics, StreamDecoder, from_json_line, to_json_line,
+    SCHEMA_VERSION, ArrivalMetrics, EvalMetrics, FaultMetrics, FlushMetrics,
+    RunMeta, RuntimeMetrics, StreamDecoder, TransportMetrics, from_json_line,
+    to_json_line,
 )
 from repro.telemetry.stats import (             # noqa: F401
     MOMENT_FIELDS, N_MOMENTS, UpdateStats, momentum_only_moments,

@@ -38,10 +38,39 @@ import time
 from collections import deque
 from typing import Dict, Iterator, List, Optional, Union
 
+try:                                  # POSIX advisory locks; absent on
+    import fcntl                      # exotic platforms -> no enforcement
+except ImportError:                   # pragma: no cover
+    fcntl = None  # type: ignore[assignment]
+
 from repro.telemetry import schema
 
 #: ring size once a live sink holds the full stream (memory contract above)
 DEFAULT_WINDOW = 4096
+
+
+def _open_exclusive_sink(path: str):
+    """Open a live sink with single-writer enforcement.
+
+    Two processes appending interleaved flushes to one JSONL sink can
+    tear each other's lines in ways no tail-side reader can repair, so
+    the writer side refuses: the sink fd holds an exclusive advisory
+    lock (``flock``) for the recorder's lifetime, and a second recorder
+    — same process or another one — fails loudly instead of silently
+    corrupting the stream. The lock is taken BEFORE truncation so a
+    rejected opener never clobbers the live writer's bytes."""
+    fd = os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
+    if fcntl is not None:
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            os.close(fd)
+            raise RuntimeError(
+                f"telemetry sink {path!r} already has a live writer "
+                f"(single-writer contract: one TelemetryRecorder per "
+                f"sink — point the second writer at its own file)")
+    os.ftruncate(fd, 0)
+    return os.fdopen(fd, "w")
 
 
 class TelemetryRecorder:
@@ -60,7 +89,7 @@ class TelemetryRecorder:
         self._meta_written = False
         if sink is not None:
             os.makedirs(os.path.dirname(sink) or ".", exist_ok=True)
-            self._sink = open(sink, "w")
+            self._sink = _open_exclusive_sink(sink)
             self._write_meta_line()
 
     # ------------------------------------------------------------- emission
@@ -139,6 +168,21 @@ class TelemetryRecorder:
             outer_step=int(outer_step), sim_time=float(sim_time),
             wall_time=self.wall(), **kw))
 
+    def record_transport(self, *, wid: int, pid: int, **kw) -> None:
+        """One child-worker wire/compute counter report (socket
+        transport control channel; see ``schema.TransportMetrics``)."""
+        self._emit(schema.TransportMetrics(
+            wid=int(wid), pid=int(pid), wall_time=self.wall(), **kw))
+
+    def record_flush(self, *, outer_step: int, sim_time: float,
+                     depth: int, reason: str, fused: int = 0,
+                     sequential: int = 0) -> None:
+        """One commit-buffer flush event (``schema.FlushMetrics``)."""
+        self._emit(schema.FlushMetrics(
+            outer_step=int(outer_step), sim_time=float(sim_time),
+            wall_time=self.wall(), depth=int(depth), reason=str(reason),
+            fused=int(fused), sequential=int(sequential)))
+
     # -------------------------------------------------------------- queries
     def arrivals(self) -> List[schema.ArrivalMetrics]:
         return [r for r in self.records
@@ -153,6 +197,14 @@ class TelemetryRecorder:
     def runtime_records(self) -> List[schema.RuntimeMetrics]:
         return [r for r in self.records
                 if isinstance(r, schema.RuntimeMetrics)]
+
+    def transport_records(self) -> List[schema.TransportMetrics]:
+        return [r for r in self.records
+                if isinstance(r, schema.TransportMetrics)]
+
+    def flush_records(self) -> List[schema.FlushMetrics]:
+        return [r for r in self.records
+                if isinstance(r, schema.FlushMetrics)]
 
     def __len__(self) -> int:
         return len(self.records)

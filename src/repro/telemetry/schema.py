@@ -1,7 +1,7 @@
 """Typed schema of the telemetry stream.
 
 A stream is a JSONL file: one ``{"kind": ..., ...}`` object per line.
-Five record kinds:
+Seven record kinds:
 
   meta      one per stream (first line): what produced it;
   arrival   one per committed outer step: scheduling facts (worker,
@@ -14,7 +14,18 @@ Five record kinds:
   runtime   one periodic runtime-health snapshot (engine-driven cadence):
             occupancy, parallelism, queue depth, worker liveness, and the
             delivery/fault counters — the live operator console's
-            (``python -m repro.obs console``) health panel.
+            (``python -m repro.obs console``) health panel;
+  transport one per child-worker observability report under the socket
+            transport (low-rate ``("ctrl","obs",...)`` frames, see
+            docs/observability.md): per-worker wire counters (frames and
+            bytes each way, serialize/deserialize time, CRC rejects,
+            retries, credit-wait stall) + per-round compute wall time,
+            pid-stamped so the panels can tell incarnations apart;
+  flush     one per server commit-buffer flush (PR 9's ``Synchronizer``):
+            buffered depth at flush, the reason the buffer flushed
+            (batch-full / eval / ckpt / close), and how many commits went
+            through the fused multi-arrival kernel vs the sequential
+            fallback.
 
 Records are frozen dataclasses; ``to_json_line``/``from_json_line``
 round-trip them. Unknown keys in a line are rejected loudly (schema
@@ -34,7 +45,10 @@ from typing import Dict, List, Optional, Tuple, Union
 
 # v2: added the "fault" record kind (delivery-robustness events)
 # v3: added the "runtime" record kind (periodic runtime-health snapshots)
-SCHEMA_VERSION = 3
+# v4: added the "transport" record kind (child-worker wire/compute
+#     counters shipped over the socket control channel) and the "flush"
+#     record kind (commit-buffer depth/reason/fusion metrics)
+SCHEMA_VERSION = 4
 
 
 @dataclass(frozen=True)
@@ -126,12 +140,60 @@ class RuntimeMetrics:
     delivery: Dict[str, float] = field(default_factory=dict)
 
 
+@dataclass(frozen=True)
+class TransportMetrics:
+    """One child-worker observability report (socket transport only).
+
+    Children ship these as low-rate ``("ctrl","obs",...)`` frames over
+    the same length-prefixed socket the data plane uses; the parent
+    stamps its own wall clock and re-emits them into the stream. Time
+    fields are cumulative seconds since the worker connected; counters
+    are cumulative over the same window, so panels difference
+    consecutive records per (wid, pid) for rates. ``final`` marks the
+    graceful end-of-run report (the launcher's child-report-in check
+    keys on it)."""
+    wid: int
+    pid: int
+    wall_time: float
+    frames_sent: int = 0
+    frames_recv: int = 0
+    bytes_sent: int = 0
+    bytes_recv: int = 0
+    ser_s: float = 0.0                # pickle serialize wall time
+    deser_s: float = 0.0              # unpickle wall time
+    crc_rejects: int = 0
+    retries: int = 0
+    credit_wait_s: float = 0.0        # stalled waiting for send credit
+    rounds: int = 0
+    compute_s: float = 0.0            # execute_round wall time
+    clock_offset_s: float = 0.0       # child->parent clock offset estimate
+    final: bool = False
+
+
+@dataclass(frozen=True)
+class FlushMetrics:
+    """One server commit-buffer flush (docs/scale.md). ``reason``
+    vocabulary: batch-full | eval | ckpt | close. ``fused`` counts
+    commits applied through the K-stacked multi-arrival kernels,
+    ``sequential`` the per-arrival fallback (drops, non-batchable
+    methods, singleton runs)."""
+    outer_step: int
+    sim_time: float
+    wall_time: float
+    depth: int
+    reason: str
+    fused: int = 0
+    sequential: int = 0
+
+
 Record = Union[RunMeta, ArrivalMetrics, EvalMetrics, FaultMetrics,
-               RuntimeMetrics]
+               RuntimeMetrics, TransportMetrics, FlushMetrics]
 
 KINDS: Dict[str, type] = {"meta": RunMeta, "arrival": ArrivalMetrics,
                           "eval": EvalMetrics, "fault": FaultMetrics,
-                          "runtime": RuntimeMetrics}
+                          "runtime": RuntimeMetrics,
+                          "transport": TransportMetrics,
+                          "flush": FlushMetrics}
 _KIND_OF = {cls: kind for kind, cls in KINDS.items()}
 
 

@@ -295,16 +295,27 @@ def test_console_once_renders_committed_chaos_partition_stream():
     assert lines, f"missing committed stream {GOLDEN_STREAM}"
     state, out = _console_over(lines)
     assert state.meta is not None and state.meta.scenario == "chaos_partition"
-    # every panel the chaos scenario exercises is present
+    # every panel the chaos scenario exercises is present — including the
+    # cross-process transport + commit-buffer panels the socket-recorded
+    # reference stream carries
     for needle in ("HeLoCo operator console", "chaos_partition",
                    "staleness histogram", "cos(D,m)", "per-language loss",
-                   "workers", "runtime health", "delivery / chaos"):
+                   "workers", "runtime health", "delivery / chaos",
+                   "transport (per worker process)",
+                   "commit-buffer flushes"):
         assert needle in out, f"panel {needle!r} missing:\n{out}"
     # the partitioned worker (wid 3, black-holed from t=2.0) shows dead
     assert state.workers[3]["state"] == "dead"
     assert "dead" in out
     # delivery counters from the runtime records made it to the panel
-    assert "partition_drops" in out
+    # (child-side injection: liveness recovery + dedup, not parent drops)
+    assert "liveness_deaths" in out and "redelivered_deduped" in out
+    # transport records from every worker process — including the
+    # partitioned one: obs frames ride the raw control channel, not the
+    # fault-injected data path
+    assert len(state.transport) >= 2
+    assert any(wid == 3 for wid, _pid in state.transport)
+    assert state.n_flushes >= 1 and "batch-full" in out
     # a clean committed stream renders no drift footer
     assert "schema drift" not in out
     assert state.decoder.stream_version == schema.SCHEMA_VERSION
@@ -342,6 +353,226 @@ def test_sparkline_shape():
     s = sparkline([0, 1, 2, 3], width=4)
     assert len(s) == 4 and s[0] == "▁" and s[-1] == "█"
     assert sparkline([5.0] * 3) == "▁▁▁"        # constant series: no crash
+
+
+# ---------------------------------------------------------------------------
+# Schema v4 forward compatibility: a v3-era reader over a v4 stream
+# ---------------------------------------------------------------------------
+
+def test_v3_reader_skips_but_counts_v4_transport_and_flush_records(
+        monkeypatch):
+    """A PR-7-era (schema v3) StreamDecoder over today's committed v4
+    reference stream — which carries `transport` and `flush` records —
+    must skip-but-COUNT the new kinds, keep decoding every kind it
+    knows, and surface the version gap in the drift report instead of
+    silently thinning the stream."""
+    monkeypatch.setattr(schema, "SCHEMA_VERSION", 3)
+    monkeypatch.setattr(schema, "KINDS", {
+        k: v for k, v in schema.KINDS.items()
+        if k not in ("transport", "flush")})
+    lines = read_complete_lines(GOLDEN_STREAM)
+    dec = StreamDecoder()
+    decoded = [dec.decode(ln) for ln in lines]
+    assert dec.stream_version == 4 and dec.newer_stream
+    assert dec.unknown_kinds["transport"] >= 2     # >= 2 worker procs
+    assert dec.unknown_kinds["flush"] >= 1
+    kinds = {type(r).__name__ for r in decoded if r is not None}
+    assert {"RunMeta", "ArrivalMetrics", "EvalMetrics"} <= kinds
+    report = "\n".join(dec.drift_report())
+    assert "v4 > reader v3" in report
+    assert "transport" in report and "flush" in report
+    # even a STRICT v3 reader tolerates-and-counts the declared-newer
+    # stream (the loud path is reserved for same-version drift)
+    strict = StreamDecoder(strict=True)
+    for ln in lines:
+        strict.decode(ln)
+    assert strict.unknown_kinds["transport"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# Aggregation layer + web dashboard
+# ---------------------------------------------------------------------------
+
+def test_web_snapshot_contains_acceptance_panels():
+    """Acceptance: `python -m repro.obs web --snapshot` over the
+    committed reference stream aggregates non-empty arrival-rate,
+    staleness, transport, and flush panels."""
+    from repro.obs.web import snapshot_panels
+    p = snapshot_panels(GOLDEN_STREAM)
+    assert p["meta"]["scenario"] == "chaos_partition"
+    assert p["meta"]["schema_version"] == schema.SCHEMA_VERSION
+    assert p["arrivals"]["commits"] > 0
+    assert p["arrivals"]["rate_per_sec"] > 0
+    assert p["staleness"]
+    assert (sum(p["staleness"].values())
+            == p["arrivals"]["commits"])
+    # cross-process transport panel: per-(wid/pid) rows + summed totals
+    assert len(p["transport"]["workers"]) >= 2
+    assert p["transport"]["totals"]["frames_sent"] > 0
+    assert p["transport"]["totals"]["compute_s"] > 0
+    # commit-buffer flush panel
+    assert p["flush"]["flushes"] >= 1
+    assert "batch-full" in p["flush"]["reasons"]
+    assert p["flush"]["fused"] + p["flush"]["sequential"] >= 2
+    # a clean committed stream aggregates drift-free
+    assert p["drift"] == []
+
+
+def test_web_snapshot_cli(capsys):
+    from repro.obs.__main__ import main as obs_main
+    assert obs_main(["web", GOLDEN_STREAM, "--snapshot"]) == 0
+    p = json.loads(capsys.readouterr().out)
+    for panel in ("arrivals", "staleness", "transport", "flush"):
+        assert p[panel], f"panel {panel!r} empty in --snapshot output"
+
+
+def test_console_and_web_share_one_aggregation_code_path():
+    """The satellite contract: console, web, and snapshot all read ONE
+    rollup (repro.obs.metrics.MetricsAggregator) — same stream in,
+    identical panels out."""
+    from repro.obs.web import snapshot_panels
+    state = ConsoleState()
+    for ln in read_complete_lines(GOLDEN_STREAM):
+        state.add_line(ln)
+    assert state.panels() == snapshot_panels(GOLDEN_STREAM)
+
+
+def test_web_server_routes_live(tmp_path):
+    """The dashboard server end-to-end on an ephemeral port: / serves
+    the self-contained page, /snapshot.json tracks a growing stream
+    through the tail hub, /events pushes SSE frames, unknown paths 404."""
+    import urllib.error
+    import urllib.request
+
+    from repro.obs import web
+
+    lines = read_complete_lines(GOLDEN_STREAM)
+    stream = tmp_path / "live.jsonl"
+    stream.write_text("\n".join(lines[:3]) + "\n")
+    hub = web._Hub(str(stream), poll=0.02)
+    hub.start()
+    handler = type("H", (web._Handler,),
+                   {"hub": hub, "sse_interval": 0.05})
+    httpd = web.ThreadingHTTPServer(("127.0.0.1", 0), handler)
+    httpd.daemon_threads = True
+    t = threading.Thread(target=httpd.serve_forever,
+                         kwargs={"poll_interval": 0.05}, daemon=True)
+    t.start()
+    base = f"http://127.0.0.1:{httpd.server_address[1]}"
+    try:
+        page = urllib.request.urlopen(base + "/", timeout=10).read()
+        assert b"HeLoCo dashboard" in page and b"EventSource" in page
+        # grow the stream; the hub tails the rest into the aggregate
+        with open(stream, "a") as f:
+            f.write("\n".join(lines[3:]) + "\n")
+        snap = {}
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            snap = json.loads(urllib.request.urlopen(
+                base + "/snapshot.json", timeout=10).read())
+            if snap.get("transport") and snap.get("flush"):
+                break
+            time.sleep(0.05)
+        assert snap["arrivals"]["commits"] > 0
+        assert snap["transport"] and snap["flush"]
+        # one SSE data frame arrives (skipping keepalive comments)
+        resp = urllib.request.urlopen(base + "/events", timeout=10)
+        payload = None
+        for _ in range(100):
+            ln = resp.readline()
+            if ln.startswith(b"data: "):
+                payload = json.loads(ln[6:])
+                break
+        resp.close()
+        assert payload is not None and payload["arrivals"]["commits"] > 0
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(base + "/nope", timeout=10)
+        assert exc.value.code == 404
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        hub.stop()
+
+
+# ---------------------------------------------------------------------------
+# Commit-buffer flush telemetry (schema v4 "flush" records)
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(commit_batch=2, outer_steps=6):
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.configs.base import InnerOptConfig, OuterOptConfig, RunConfig
+    cfg = reduced(get_config("tinygpt-15m"))
+    return dataclasses.replace(RunConfig(
+        model=cfg, n_workers=2, inner_steps=1, outer_steps=outer_steps,
+        batch_size=2, seq_len=16, worker_paces=(1.0, 2.0), non_iid=True,
+        inner=InnerOptConfig(lr=3e-3, warmup_steps=2, total_steps=100),
+        outer=OuterOptConfig(method="heloco")),
+        commit_batch=commit_batch)
+
+
+def test_flush_records_emitted_from_commit_buffer():
+    """PR 9's batching is no longer a black box: every multi-arrival
+    flush of the server commit buffer lands in the stream as one "flush"
+    record carrying depth, reason, and the fused-vs-sequential split."""
+    from repro.async_engine.engine import make_engine
+    rec = TelemetryRecorder()
+    eng = make_engine(_tiny_cfg(commit_batch=2, outer_steps=6),
+                      telemetry=rec)
+    eng.run(eval_every=3)
+    fl = rec.flush_records()
+    assert fl, "commit_batch=2 run produced no flush records"
+    assert all(f.depth >= 2 for f in fl)          # singles skip the buffer
+    assert {f.reason for f in fl} <= {"batch-full", "eval", "ckpt", "close"}
+    assert "batch-full" in {f.reason for f in fl}
+    # fused + sequential always account for the whole buffered depth
+    assert all(f.fused + f.sequential == f.depth for f in fl)
+    # ... and the server's cumulative totals agree (the stats_summary /
+    # console "commit-buffer flushes" panel reads these)
+    assert eng.server.flush_totals["flushes"] == len(fl)
+    assert eng.server.flush_totals["depth_max"] == max(f.depth for f in fl)
+
+
+@pytest.mark.wallclock
+def test_free_mode_coalesces_commits_without_losing_arrivals():
+    """The free-running loop's opportunistic batch drain (commit_batch>1)
+    must conserve arrivals exactly: every commit is recorded once,
+    batched or not, and the run still reaches the outer-step target."""
+    from repro.async_engine.engine import make_engine, make_eval_fn
+    from repro.scenarios import get_scenario
+    scn = get_scenario("wallclock_free").overridden(commit_batch=3)
+    rec = TelemetryRecorder()
+    eng = make_engine(scn, telemetry=rec)
+    hist = eng.run(eval_every=scn.eval_cadence,
+                   eval_fn=make_eval_fn(eng, batch=scn.eval_batch))
+    assert len(hist.arrivals) == scn.outer_steps
+    assert eng.stats["arrivals"] == len(hist.arrivals)
+    assert len(rec.arrivals()) == len(hist.arrivals)
+    for f in rec.flush_records():                 # coalescing opportunistic
+        assert 2 <= f.depth <= 3
+        assert f.reason in {"batch-full", "eval", "ckpt", "close"}
+
+
+# ---------------------------------------------------------------------------
+# Single-writer sink enforcement (TailReader multi-writer satellite)
+# ---------------------------------------------------------------------------
+
+def test_second_recorder_on_same_sink_rejected_loudly(tmp_path):
+    """Interleaved flushes from two writers can tear JSONL lines in ways
+    no tail reader can repair — the recorder enforces one live writer
+    per sink via an exclusive flock held for its lifetime."""
+    sink = str(tmp_path / "s.jsonl")
+    rec = TelemetryRecorder(sink=sink)
+    rec.record_arrival(_fake_arrival(0))
+    with pytest.raises(RuntimeError, match="live writer"):
+        TelemetryRecorder(sink=sink)
+    # the rejected opener never clobbered the live writer's bytes
+    assert read_complete_lines(sink)
+    rec.close()
+    # close releases the lock: the sink is reusable afterwards
+    rec2 = TelemetryRecorder(sink=sink)
+    rec2.close()
 
 
 # ---------------------------------------------------------------------------

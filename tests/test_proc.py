@@ -209,3 +209,115 @@ def test_hang_guard_fails_hung_test_within_timeout():
     assert out.returncode != 0, text
     assert elapsed < 60.0, (elapsed, text)
     assert "hang guard" in text or "imeout" in text, text
+
+
+# ---------------------------------------------------------------------------
+# Cross-process observability (docs/observability.md)
+# ---------------------------------------------------------------------------
+
+def test_socket_golden_with_full_obs_stack(tmp_path):
+    """The acceptance anchor for cross-process collection: a
+    deterministic socket run of socket_hetero with the FULL
+    observability stack on — child spans, transport metrics, a live v4
+    stream, and the merged Chrome trace — replays its committed golden
+    byte-identically, and the merged trace validates with span rows
+    from >= 2 distinct worker pids plus transport send/ack spans."""
+    from repro.obs.spans import SpanTracer, validate_chrome_trace
+    from repro.obs.tail import read_complete_lines
+    from repro.telemetry import StreamDecoder, TelemetryRecorder, schema
+
+    scn = get_scenario("socket_hetero")
+    sink = str(tmp_path / "live.jsonl")
+    rec = TelemetryRecorder(sink=sink)
+    tr = SpanTracer()
+    eng = make_engine(scn, telemetry=rec, tracer=tr,
+                      runtime_record_every=2)
+    hist = eng.run(eval_every=scn.eval_cadence,
+                   eval_fn=make_eval_fn(eng, batch=scn.eval_batch))
+    eng.assert_child_reports()           # every child process reported in
+    rec.close()
+
+    # (1) observation never perturbs the run: byte-identity vs golden
+    arrivals = [[a["outer_step"], a["worker_id"],
+                 a["outer_step"] - 1 - a["staleness"], a["staleness"],
+                 a["lang"], a["rho"], a["sim_time"], bool(a["dropped"])]
+                for a in hist.arrivals]
+    doc = {
+        "schema": trace.SCHEMA_VERSION,
+        "scenario": scn.to_dict(),
+        "engine": scn.engine, "mode": scn.mode, "exact": scn.exact,
+        "arrivals": arrivals, "evals": hist.evals,
+        "tokens": int(hist.tokens), "comm_bytes": int(hist.comm_bytes),
+        "final_time": float(hist.final_time),
+        "param_digest": trace.param_digest(eng.server.state.params),
+        "param_fingerprint": trace.param_fingerprint(
+            eng.server.state.params),
+    }
+    res = trace.verify(scn, fresh=doc)
+    assert res.ok, res.report()
+
+    # (2) the merged Chrome trace: well-formed, with per-process rows
+    # from >= 2 distinct worker pids and the wire spans
+    chrome = tr.to_chrome()
+    assert validate_chrome_trace(chrome) == []
+    spans = [e for e in chrome["traceEvents"] if e.get("ph") == "X"]
+    worker_pids = {e["pid"] for e in spans} - {0}
+    assert len(worker_pids) >= 2, sorted(worker_pids)
+    child_names = {e["name"] for e in spans if e["pid"] != 0}
+    assert {"worker_round", "transport.send",
+            "transport.ack_wait"} <= child_names
+    # clock-offset correction: re-based child rows never go negative
+    assert all(e["ts"] >= 0 for e in spans)
+    # the parent's own rows (server commits) share the same timeline
+    assert any(e["name"] == "server_commit" for e in spans
+               if e["pid"] == 0)
+
+    # (3) the v4 stream carries a cumulative transport record per child
+    # pid, with a final report from each
+    dec = StreamDecoder(strict=True)
+    recs = [dec.decode(ln) for ln in read_complete_lines(sink)]
+    tps = [r for r in recs if isinstance(r, schema.TransportMetrics)]
+    assert {t.pid for t in tps} >= worker_pids
+    final_wids = {t.wid for t in tps if t.final}
+    assert final_wids == set(range(scn.n_workers))
+    assert all(t.frames_sent > 0 for t in tps if t.final)
+    assert not dec.drift_report()
+
+    # (4) stats_summary surfaces the collection counters
+    s = eng.stats_summary()
+    assert s["child_obs"]["reports"] and s["child_obs"]["final"]
+    assert s["child_obs"]["wire"]["frames_sent"] > 0
+
+    # (5) a silent child is LOUD, not a quiet parent-only artifact
+    eng._pool.obs_reports.clear()
+    with pytest.raises(RuntimeError, match="never reported"):
+        eng.assert_child_reports()
+
+
+def test_two_processes_writing_same_sink_rejected(tmp_path):
+    """TailReader multi-writer satellite: the single-writer sink
+    contract holds across REAL process boundaries — a second process
+    opening the same live sink fails loudly while the first holds it."""
+    sink = str(tmp_path / "s.jsonl")
+    from repro.telemetry import TelemetryRecorder
+    rec = TelemetryRecorder(sink=sink)
+    try:
+        probe = textwrap.dedent("""\
+            import sys
+            from repro.telemetry import TelemetryRecorder
+            try:
+                TelemetryRecorder(sink=sys.argv[1])
+            except RuntimeError as e:
+                print("REJECTED:", e)
+                raise SystemExit(0)
+            raise SystemExit(1)          # silently acquired: contract broken
+        """)
+        env = dict(os.environ, JAX_PLATFORMS="cpu",
+                   PYTHONPATH=os.path.join(_REPO, "src"))
+        out = subprocess.run(
+            [sys.executable, "-c", probe, sink],
+            env=env, capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, (out.stdout, out.stderr)
+        assert "REJECTED" in out.stdout and "live writer" in out.stdout
+    finally:
+        rec.close()
